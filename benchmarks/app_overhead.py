@@ -1,0 +1,21 @@
+"""Paper Figure 5: pure application time — ULFM's heartbeat drag."""
+from __future__ import annotations
+
+from repro.sim import APPS, simulate_run
+
+RANKS = [16, 64, 256, 1024]
+
+
+def run(report=print):
+    for app_key, app in APPS.items():
+        for n in RANKS:
+            base = simulate_run(app, n, "reinit", "process").app_time_s
+            for s in ["cr", "reinit", "ulfm"]:
+                t = simulate_run(app, n, s, "process").app_time_s
+                report(f"fig5_{app_key}_{s}_n{n},{t * 1e6:.0f},"
+                       f"app_s={t:.3f};overhead_pct="
+                       f"{100 * (t - base) / base:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Table 2 + measured checkpoint costs at this machine's scale.
+
+Times the REAL substrate: sharded file checkpoints (write+read, sync and
+async) vs the in-memory buddy copy, on a ~64 MB train state — the ratio is
+the paper's motivation for memory checkpointing."""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import FileCheckpointer, checkpoint_kind_for
+
+
+def _state(mb: float = 64.0):
+    n = int(mb * 1e6 / 4 / 4)
+    key = jax.random.PRNGKey(0)
+    return {f"p{i}": jax.random.normal(jax.random.fold_in(key, i), (n,))
+            for i in range(4)}
+
+
+def run(report=print):
+    state = _state()
+    jax.block_until_ready(state)
+
+    with tempfile.TemporaryDirectory() as d:
+        ck = FileCheckpointer(d, keep=2, n_shards=2)
+        t0 = time.monotonic()
+        ck.save(1, state)
+        t_file_sync = time.monotonic() - t0
+        t0 = time.monotonic()
+        ck.save(2, state, async_=True)
+        t_file_async_submit = time.monotonic() - t0
+        ck.wait()
+        t0 = time.monotonic()
+        _, loaded = ck.load_latest()
+        t_file_read = time.monotonic() - t0
+
+    t0 = time.monotonic()
+    mem_copy = jax.tree.map(lambda a: a + 0, state)
+    jax.block_until_ready(mem_copy)
+    t_mem = time.monotonic() - t0
+
+    report(f"table2_file_write_sync,{t_file_sync * 1e6:.0f},64MB")
+    report(f"table2_file_write_async_submit,"
+           f"{t_file_async_submit * 1e6:.0f},64MB")
+    report(f"table2_file_read,{t_file_read * 1e6:.0f},64MB")
+    report(f"table2_memory_copy,{t_mem * 1e6:.0f},64MB")
+    report(f"table2_mem_speedup_vs_file,0,"
+           f"x={t_file_sync / max(t_mem, 1e-9):.1f}")
+    for failure in ["process", "node"]:
+        for strat in ["cr", "ulfm", "reinit"]:
+            report(f"table2_kind_{failure}_{strat},0,"
+                   f"{checkpoint_kind_for(failure, strat)}")
+
+
+if __name__ == "__main__":
+    run()

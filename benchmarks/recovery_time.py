@@ -1,0 +1,50 @@
+"""Paper Figures 6 & 7: MPI recovery time vs rank count.
+
+Simulated at 16–1024 ranks (calibrated protocol simulation, sim/), with
+the real-process runtime's measured numbers (runtime_bench.py) grounding
+the small-scale end.
+"""
+from __future__ import annotations
+
+from repro.sim import recovery_time
+
+RANKS = [16, 32, 64, 128, 256, 512, 1024]
+
+
+def rows(failure_kind: str):
+    strategies = ["cr", "reinit"] if failure_kind == "node" \
+        else ["cr", "reinit", "ulfm"]
+    out = []
+    for n in RANKS:
+        row = {"ranks": n}
+        for s in strategies:
+            r = recovery_time(s, n, failure_kind)
+            row[s] = r["mpi_recovery_s"]
+            row[f"{s}_detect"] = r["detect_s"]
+        out.append(row)
+    return out
+
+
+def run(report=print):
+    for kind in ["process", "node"]:
+        fig = "fig6" if kind == "process" else "fig7"
+        for row in rows(kind):
+            n = row["ranks"]
+            for s in ("cr", "reinit", "ulfm"):
+                if s in row:
+                    report(f"{fig}_{kind}_{s}_n{n},"
+                           f"{row[s] * 1e6:.0f},"
+                           f"recovery_s={row[s]:.3f}")
+    # headline ratios
+    p = rows("process")
+    report(f"fig6_ratio_cr_over_reinit_1024,0,"
+           f"ratio={p[-1]['cr'] / p[-1]['reinit']:.2f}")
+    report(f"fig6_ratio_ulfm_over_reinit_1024,0,"
+           f"ratio={p[-1]['ulfm'] / p[-1]['reinit']:.2f}")
+    nn = rows("node")
+    report(f"fig7_ratio_cr_over_reinit_1024,0,"
+           f"ratio={nn[-1]['cr'] / nn[-1]['reinit']:.2f}")
+
+
+if __name__ == "__main__":
+    run()

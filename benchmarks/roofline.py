@@ -1,0 +1,140 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) cell.
+
+Reads the dry-run artifacts (launch/dryrun.py JSON) and derives:
+
+  compute_term    analytic_FLOPs / (chips · peak)         [s]
+  memory_term     analytic_HBM_bytes / (chips · hbm_bw)   [s]
+  collective_term HLO collective bytes (per-device SPMD
+                  program, while-trip corrected) / link_bw [s]
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+The SPMD HLO is a per-device program, so its collective byte sum divided
+by the per-link bandwidth IS the collective_bytes/(chips·link_bw) of the
+assignment formula (global bytes = per-device × chips).
+
+Step time bounds: overlap (= max term) and serial (= sum). The reported
+roofline fraction is MODEL_FLOPS/(chips·peak·t_overlap) — how close the
+useful model math runs to the hardware's peak if everything overlaps.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_LINK_BW = 50e9           # bytes/s / link
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops: float
+    useful_ratio: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_overlap(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def t_serial(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def roofline_fraction(self) -> float:
+        return self.model_flops / (self.chips * PEAK_FLOPS *
+                                   max(self.t_overlap, 1e-12))
+
+
+def load_artifact(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_of(art: dict) -> Roofline | None:
+    if "skipped" in art:
+        return None
+    chips = art.get("chips", 256)
+    fl = art["analytic"]["flops_total"]
+    hb = art["analytic"]["hbm_bytes_total"]
+    coll = art["collective_bytes"].get("total", 0)
+    mf = art["analytic"]["model_flops"]
+    return Roofline(
+        arch=art["arch"], shape=art["shape"], mesh=art["mesh"],
+        chips=chips,
+        compute_s=fl / (chips * PEAK_FLOPS),
+        memory_s=hb / (chips * HBM_BW),
+        collective_s=coll / ICI_LINK_BW,
+        model_flops=mf, hlo_flops=fl,
+        useful_ratio=mf / max(fl, 1.0),
+    )
+
+
+def all_rooflines(art_dir: str = ART_DIR, mesh: str | None = None):
+    out = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        art = load_artifact(path)
+        if mesh and art.get("mesh") != mesh:
+            continue
+        r = roofline_of(art)
+        if r:
+            out.append(r)
+    return out
+
+
+def table(rows, fmt: str = "md") -> str:
+    hdr = ["arch", "shape", "mesh", "compute_s", "memory_s",
+           "collective_s", "dominant", "t_overlap_s", "MODEL/HLO",
+           "roofline_frac"]
+    lines = []
+    if fmt == "md":
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append(",".join(hdr))
+    for r in rows:
+        vals = [r.arch, r.shape, r.mesh, f"{r.compute_s:.4f}",
+                f"{r.memory_s:.4f}", f"{r.collective_s:.4f}", r.dominant,
+                f"{r.t_overlap:.4f}", f"{r.useful_ratio:.2f}",
+                f"{r.roofline_fraction:.3f}"]
+        if fmt == "md":
+            lines.append("| " + " | ".join(vals) + " |")
+        else:
+            lines.append(",".join(vals))
+    return "\n".join(lines)
+
+
+def main():
+    rows = all_rooflines()
+    print(table(rows, fmt="md"))
+    # summary: hillclimb candidates
+    trains = [r for r in rows if r.shape == "train_4k" and r.mesh == "pod"]
+    if trains:
+        worst = min(trains, key=lambda r: r.roofline_fraction)
+        collb = max(rows, key=lambda r: r.collective_s /
+                    max(r.t_overlap, 1e-12))
+        print(f"\nworst roofline fraction: {worst.arch}×{worst.shape} "
+              f"({worst.roofline_fraction:.3f})")
+        print(f"most collective-bound:  {collb.arch}×{collb.shape} "
+              f"({collb.collective_s:.4f}s of {collb.t_overlap:.4f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Benchmark aggregator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Slow real-process suites
+(runtime_bench) run last; pass --fast to skip them.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import (app_overhead, checkpoint_bench, recovery_time,
+                            step_bench, total_time, trainer_bench)
+    suites = [
+        ("fig6/fig7 recovery", recovery_time.run),
+        ("fig4 total time", total_time.run),
+        ("fig5 app overhead", app_overhead.run),
+        ("table2 checkpointing", checkpoint_bench.run),
+        ("step microbench", step_bench.run),
+        ("trainer recovery", trainer_bench.run),
+    ]
+    if not fast:
+        from benchmarks import runtime_bench
+        suites.append(("real-process runtime", runtime_bench.run))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, fn in suites:
+        try:
+            fn(report=print)
+        except Exception:                     # noqa: BLE001
+            failures += 1
+            print(f"{label.replace(' ', '_')}_FAILED,0,error")
+            traceback.print_exc()
+
+    # roofline summary (requires dry-run artifacts; skip silently if absent)
+    try:
+        from benchmarks.roofline import all_rooflines
+        rows = all_rooflines()
+        for r in rows:
+            print(f"roofline_{r.arch}_{r.shape}_{r.mesh},"
+                  f"{r.t_overlap * 1e6:.0f},"
+                  f"dom={r.dominant};frac={r.roofline_fraction:.3f}")
+    except Exception:                         # noqa: BLE001
+        print("roofline_artifacts_missing,0,run launch/dryrun first")
+
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

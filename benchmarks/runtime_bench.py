@@ -1,0 +1,53 @@
+"""§5.3/§5.4 ground truth: recovery measured on the real-process runtime.
+
+Deploys the actual root/daemon/worker tree on this host, SIGKILLs a rank
+(or a node), and reports the measured recovery phases. This grounds the
+simulator's constants: Reinit++ process recovery lands near the paper's
+≈0.5 s because process spawn + rejoin THERE is what it is HERE too.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _one(mode: str, kind: str, tmp: str) -> dict:
+    env = dict(os.environ, PYTHONPATH=SRC)
+    report = os.path.join(tmp, f"{mode}_{kind}.json")
+    ckpt = os.path.join(tmp, f"ck_{mode}_{kind}")
+    os.makedirs(ckpt, exist_ok=True)
+    cmd = [sys.executable, "-m", "repro.runtime.root",
+           "--nodes", "2", "--ranks-per-node", "2", "--spares", "1",
+           "--steps", "6", "--dim", "256", "--ckpt-dir", ckpt,
+           "--mode", mode, "--fail-step", "3", "--fail-rank", "1",
+           "--fail-kind", kind, "--report", report]
+    subprocess.run(cmd, env=env, capture_output=True, timeout=120,
+                   check=True)
+    with open(report) as f:
+        return json.load(f)
+
+
+def run(report=print):
+    with tempfile.TemporaryDirectory() as tmp:
+        results = {}
+        for mode in ["reinit", "cr"]:
+            for kind in ["process", "node"]:
+                rep = _one(mode, kind, tmp)
+                ev = rep["events"][-1]
+                t = ev["mpi_recovery_s"]
+                results[(mode, kind)] = t
+                report(f"runtime_{mode}_{kind},{t * 1e6:.0f},"
+                       f"recovery_s={t:.3f}")
+        for kind in ["process", "node"]:
+            r = results[("cr", kind)] / results[("reinit", kind)]
+            report(f"runtime_ratio_cr_over_reinit_{kind},0,x={r:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""CPU wall-time microbenchmarks of the jitted step functions (regression
+guard — real perf numbers come from the dry-run roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models.model import Model
+from repro.train import AdamWConfig, TokenPipeline
+from repro.train.optimizer import adamw_init, adamw_update
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)                      # compile + warm
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters
+
+
+def run(report=print):
+    cfg = reduced(get_config("paper-demo"))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = TokenPipeline(cfg.vocab_size, 4, 64, seed=0)
+    batch = data.batch(0)
+    opt_cfg = AdamWConfig()
+    opt = adamw_init(params)
+
+    @jax.jit
+    def train_step(p, o, b):
+        (loss, _), g = jax.value_and_grad(model.loss_fn, has_aux=True)(p, b)
+        return adamw_update(p, g, o, opt_cfg)[0], loss
+
+    t = _time(train_step, params, opt, batch)
+    report(f"step_train_paper_demo,{t * 1e6:.0f},B4xS64")
+
+    logits, state = jax.jit(
+        lambda p, b: model.prefill(p, b, max_len=96))(
+            params, {"tokens": batch["tokens"]})
+    dec = jax.jit(model.decode_step)
+    tok = jnp.zeros((4, 1), jnp.int32)
+    t = _time(lambda: dec(params, tok, state, jnp.int32(64)))
+    report(f"step_decode_paper_demo,{t * 1e6:.0f},B4_cache96")
+
+
+if __name__ == "__main__":
+    run()

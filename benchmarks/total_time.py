@@ -1,0 +1,24 @@
+"""Paper Figure 4: total execution time breakdown on a process failure.
+
+CR uses file checkpointing, Reinit++/ULFM use buddy memory checkpointing
+(Table 2 column for process failures)."""
+from __future__ import annotations
+
+from repro.sim import APPS, simulate_run
+
+RANKS = [16, 64, 256, 1024]
+
+
+def run(report=print):
+    for app_key, app in APPS.items():
+        for n in RANKS:
+            for s in ["cr", "reinit", "ulfm"]:
+                r = simulate_run(app, n, s, "process")
+                report(
+                    f"fig4_{app_key}_{s}_n{n},{r.total_s * 1e6:.0f},"
+                    f"total={r.total_s:.2f};write={r.ckpt_write_s:.2f};"
+                    f"mpi={r.mpi_recovery_s:.2f};app={r.app_time_s:.2f}")
+
+
+if __name__ == "__main__":
+    run()

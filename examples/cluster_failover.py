@@ -1,0 +1,53 @@
+"""Real-process cluster failover — the paper's runtime, live.
+
+Deploys a root → 2 daemons (+1 spare) → 4 workers tree of actual POSIX
+processes on this machine, SIGKILLs a node mid-run, and prints the
+measured recovery timeline (Algorithm 1 + 2 + buddy/file checkpoint
+restore + rejoin barrier with rollback consensus).
+
+    PYTHONPATH=src python examples/cluster_failover.py
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def run(mode: str, kind: str, tmp: str) -> dict:
+    report = os.path.join(tmp, f"{mode}_{kind}.json")
+    ckpt = os.path.join(tmp, f"ck_{mode}_{kind}")
+    os.makedirs(ckpt, exist_ok=True)
+    cmd = [sys.executable, "-m", "repro.runtime.root",
+           "--nodes", "2", "--ranks-per-node", "2", "--spares", "1",
+           "--steps", "8", "--dim", "1024", "--ckpt-dir", ckpt,
+           "--mode", mode, "--fail-step", "4", "--fail-rank", "1",
+           "--fail-kind", kind, "--report", report]
+    env = dict(os.environ, PYTHONPATH=SRC)
+    subprocess.run(cmd, env=env, check=True, capture_output=True,
+                   timeout=120)
+    with open(report) as f:
+        return json.load(f)
+
+
+def main():
+    with tempfile.TemporaryDirectory() as tmp:
+        for mode in ["reinit", "cr"]:
+            for kind in ["process", "node"]:
+                rep = run(mode, kind, tmp)
+                ev = rep["events"][-1]
+                print(f"{mode:7s} {kind:8s} failure: "
+                      f"mpi_recovery={ev['mpi_recovery_s']:.2f}s "
+                      f"resume_step={ev.get('resume_step')} "
+                      f"total={rep['total_s']:.2f}s")
+        print("\nReinit++ recovers in place (survivors roll back via "
+              "SIGREINIT,\nfailed ranks re-spawn — on the spare node for "
+              "node failures);\nCR tears the whole tree down and "
+              "re-deploys from file checkpoints.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: train a small LM with Reinit++ fault tolerance.
+
+Trains the paper-demo transformer for 30 steps, SIGKILL-emulates a random
+rank failure mid-run (fault injection, paper §4), watches Reinit++ recover
+from the buddy memory checkpoint, and verifies the final parameters are
+bit-identical to an uninterrupted run.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import tempfile
+
+import jax
+
+from repro.checkpoint.manifest import tree_digest
+from repro.configs import get_config, reduced
+from repro.core import FailureType, FaultInjector
+from repro.models.model import Model
+from repro.train import AdamWConfig, TokenPipeline, TrainConfig, Trainer
+
+
+def main():
+    cfg = reduced(get_config("paper-demo"))
+    model = Model(cfg)
+    data = TokenPipeline(cfg.vocab_size, global_batch=4, seq_len=64, seed=0)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=30)
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        print("=== reference run (no failures) ===")
+        ref = Trainer(model, data, opt,
+                      TrainConfig(total_steps=30, ckpt_dir=d1,
+                                  strategy="reinit", log_every=10))
+        ref_out = ref.run()
+
+        print("\n=== fault-injected run (Reinit++ recovery) ===")
+        inj = FaultInjector(n_ranks=8, n_steps=30,
+                            kind=FailureType.PROCESS, seed=42)
+        tr = Trainer(model, data, opt,
+                     TrainConfig(total_steps=30, ckpt_dir=d2,
+                                 strategy="reinit", log_every=10),
+                     injector=inj)
+        out = tr.run()
+
+        rep = out["reports"][0]
+        print(f"\nfailure injected @step {inj.fail_step} (rank "
+              f"{inj.fail_rank}); recovered in {rep.total_s * 1e3:.1f} ms "
+              f"(detect {rep.detect_s * 1e3:.1f} + mpi "
+              f"{rep.mpi_recovery_s * 1e3:.1f} + ckpt "
+              f"{rep.ckpt_read_s * 1e3:.1f})")
+        d_ref = tree_digest(jax.device_get(ref.state["params"]))
+        d_ft = tree_digest(jax.device_get(tr.state["params"]))
+        print(f"reference params digest: {d_ref}")
+        print(f"recovered params digest: {d_ft}")
+        assert d_ref == d_ft, "recovery diverged!"
+        print("recovery is BIT-IDENTICAL to the uninterrupted run ✓")
+        print(f"loss: {ref_out['losses'][0]:.3f} -> "
+              f"{ref_out['losses'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

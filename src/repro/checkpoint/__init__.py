@@ -1,0 +1,4 @@
+from .manifest import Manifest, flatten_state, unflatten_state, tree_digest
+from .file_ckpt import FileCheckpointer
+from .memory_ckpt import BuddyStore, buddy_exchange, restore_from_buddy
+from .policy import CheckpointPolicy, checkpoint_kind_for

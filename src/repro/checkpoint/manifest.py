@@ -1,0 +1,112 @@
+"""Pytree flattening, shard naming and integrity hashes for checkpoints.
+
+States are nested dicts of arrays; leaves are addressed by their
+"/"-joined key path, which makes the on-disk format self-describing and
+re-shardable (a restore may run under a different process count than the
+save — global-restart is non-shrinking but elastic re-hosting is not).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict
+
+import numpy as np
+
+
+def flatten_state(state) -> Dict[str, np.ndarray]:
+    """Nested-dict pytree -> {path: np.ndarray}. Lists become index keys."""
+    out: Dict[str, np.ndarray] = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(f"{prefix}/{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(f"{prefix}/{i}", v)
+        else:
+            out[prefix] = np.asarray(node)
+
+    rec("", state)
+    return out
+
+
+def unflatten_state(flat: Dict[str, np.ndarray]):
+    """Inverse of flatten_state (all containers restored as dicts; integer
+    keys are restored as list entries when contiguous from 0)."""
+    root: dict = {}
+    for path, arr in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node)
+        if keys and all(k.isdigit() for k in keys):
+            idx = sorted(int(k) for k in keys)
+            if idx == list(range(len(idx))):
+                return [fix(node[str(i)]) for i in idx]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def leaf_digest(arr: np.ndarray) -> str:
+    h = hashlib.sha256()
+    h.update(str(arr.dtype).encode())
+    h.update(str(arr.shape).encode())
+    h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()[:16]
+
+
+def tree_digest(state) -> str:
+    """Order-stable digest of a whole state pytree."""
+    flat = flatten_state(state)
+    h = hashlib.sha256()
+    for k in sorted(flat):
+        h.update(k.encode())
+        h.update(leaf_digest(flat[k]).encode())
+    return h.hexdigest()[:16]
+
+
+@dataclasses.dataclass
+class Manifest:
+    step: int
+    leaves: Dict[str, dict]          # path -> {shape, dtype, digest, shard}
+    n_shards: int = 1
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Manifest":
+        return cls(**json.loads(s))
+
+    @classmethod
+    def build(cls, step: int, flat: Dict[str, np.ndarray], shard_of,
+              n_shards: int, extra: dict | None = None) -> "Manifest":
+        leaves = {
+            k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                "digest": leaf_digest(v), "shard": shard_of(k)}
+            for k, v in flat.items()
+        }
+        return cls(step=step, leaves=leaves, n_shards=n_shards,
+                   extra=extra or {})
+
+    def verify(self, flat: Dict[str, np.ndarray]) -> list[str]:
+        """Returns the list of corrupted/missing leaf paths (empty = OK)."""
+        bad = []
+        for k, meta in self.leaves.items():
+            if k not in flat:
+                bad.append(k)
+                continue
+            if leaf_digest(flat[k]) != meta["digest"]:
+                bad.append(k)
+        return bad

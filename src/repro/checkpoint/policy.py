@@ -1,0 +1,37 @@
+"""Checkpoint cadence + Table-2 scheme selection (failure × strategy).
+
+                 CR      ULFM     Reinit++
+    process      file    memory   memory
+    node         file    file     file
+
+CR always re-deploys, so only permanent storage survives; memory (buddy)
+checkpoints are valid only for single process failures — a node failure can
+wipe both the local and the buddy copy, hence file.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+TABLE2 = {
+    ("process", "cr"): "file",
+    ("process", "ulfm"): "memory",
+    ("process", "reinit"): "memory",
+    ("node", "cr"): "file",
+    ("node", "ulfm"): "file",
+    ("node", "reinit"): "file",
+}
+
+
+def checkpoint_kind_for(failure: str, strategy: str) -> str:
+    return TABLE2[(failure, strategy)]
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointPolicy:
+    """Every-N-steps cadence; the paper checkpoints after every iteration."""
+    every_steps: int = 1
+    async_file: bool = True
+    keep: int = 3
+
+    def should_checkpoint(self, step: int) -> bool:
+        return step % self.every_steps == 0

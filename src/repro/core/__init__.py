@@ -1,0 +1,21 @@
+"""Reinit++ — the paper's contribution as a composable library.
+
+Layers:
+  events     RankState / FailureEvent / ReinitCommand vocabulary
+  protocol   Algorithms 1 & 2 (root HandleFailure, daemon HandleReinit)
+  failure    detectors (child/channel monitors, ULFM heartbeat model,
+             deterministic fault injection)
+  reinit     reinit_main() rollback-point API (the MPI_Reinit analogue)
+  elastic    spare pool, mesh epochs, shrinking-recovery option
+  recovery   CR / Reinit++ / ULFM strategy objects
+"""
+from .events import (FailureEvent, FailureType, RankState, RecoveryReport,
+                     ReinitCommand, Respawn)
+from .protocol import (ClusterView, DaemonActions, apply_recovery,
+                       daemon_handle_reinit, root_handle_failure)
+from .failure import (ChannelMonitor, ChildMonitor, FaultInjector,
+                      HeartbeatModel, kill_process)
+from .reinit import (ROLLBACK, RollbackSignal, SIGREINIT, install_sigreinit,
+                     reinit_main)
+from .elastic import ElasticManager, MeshEpoch
+from .recovery import CR, REINIT, STRATEGIES, ULFM, get_strategy

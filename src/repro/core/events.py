@@ -1,0 +1,70 @@
+"""Event and state vocabulary of the Reinit++ protocol (paper §3.1).
+
+`RankState` mirrors MPI_Reinit_state_t exactly:
+  NEW       — first execution of the resilient function
+  REINITED  — survivor that rolled back after a failure
+  RESTARTED — failed process re-spawned to resume
+
+Failures are fail-stop, of an MPI process or of a daemon (≡ node).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import time
+from typing import Optional
+
+
+class RankState(enum.Enum):
+    NEW = "MPI_REINIT_NEW"
+    REINITED = "MPI_REINIT_REINITED"
+    RESTARTED = "MPI_REINIT_RESTARTED"
+
+
+class FailureType(enum.Enum):
+    PROCESS = "process"
+    NODE = "node"
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    kind: FailureType
+    rank: Optional[int] = None       # failed MPI process (PROCESS failures)
+    node: Optional[str] = None       # failed daemon/node (NODE failures)
+    at_step: Optional[int] = None    # iteration at which it was injected
+    wallclock: float = dataclasses.field(default_factory=time.monotonic)
+
+    def __str__(self):
+        tgt = f"rank {self.rank}" if self.kind is FailureType.PROCESS \
+            else f"node {self.node}"
+        return f"<{self.kind.value} failure of {tgt} @step {self.at_step}>"
+
+
+@dataclasses.dataclass(frozen=True)
+class Respawn:
+    """One ⟨parent daemon, child rank⟩ pair from Algorithm 1's REINIT msg."""
+    daemon: str
+    rank: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ReinitCommand:
+    """The broadcast the root sends to all daemons on a failure."""
+    respawns: tuple[Respawn, ...]
+    epoch: int                       # recovery epoch (monotonically grows)
+
+
+@dataclasses.dataclass
+class RecoveryReport:
+    """Timings of one recovery, broken down the way the paper reports them
+    (Figures 4/6/7): detection, MPI recovery, checkpoint read."""
+    strategy: str
+    failure: FailureEvent
+    detect_s: float = 0.0
+    mpi_recovery_s: float = 0.0
+    ckpt_read_s: float = 0.0
+    rollback_step: int = 0
+
+    @property
+    def total_s(self) -> float:
+        return self.detect_s + self.mpi_recovery_s + self.ckpt_read_s

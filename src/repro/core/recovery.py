@@ -1,0 +1,70 @@
+"""Recovery strategies: CR / Reinit++ / ULFM — one protocol, three costs.
+
+Each strategy declares *what actually happens* on failure; the trainer
+executes those actions for real (reload files, restore buddy shards, drop
+compiled-step caches, run agreement collectives) and the simulator charges
+their calibrated large-scale costs. The asymmetries the paper measures:
+
+  CR        tear down + re-deploy the job; file checkpoints only; compiled
+            artifacts and device state all lost.
+  Reinit++  root↔daemon tree recovery; survivors keep process + device
+            state; memory (buddy) checkpoints valid for process failures.
+  ULFM      all-rank revoke/shrink/agree collectives; survivors keep
+            process; always-on heartbeat taxes every fault-free step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .events import FailureEvent, FailureType
+from .failure import HeartbeatModel
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryStrategy:
+    name: str
+    # costs that exist at any scale
+    redeploys: bool                      # CR: full job teardown + relaunch
+    keeps_jit_cache: bool                # survivors keep compiled steps
+    # recovery communication shape
+    allrank_collectives: int             # ULFM: shrink/agree/merge rounds
+    tree_broadcasts: int                 # Reinit++: root->daemon REINIT
+    # fault-free overhead
+    heartbeat: Optional[HeartbeatModel]  # ULFM only
+
+    def checkpoint_kind(self, failure: FailureType) -> str:
+        from repro.checkpoint.policy import checkpoint_kind_for
+        key = "node" if failure is FailureType.NODE else "process"
+        return checkpoint_kind_for(key, self.key)
+
+    @property
+    def key(self) -> str:
+        return {"CR": "cr", "Reinit++": "reinit", "ULFM": "ulfm"}[self.name]
+
+    def fault_free_overhead(self, n_ranks: int) -> float:
+        return self.heartbeat.per_step_overhead(n_ranks) if self.heartbeat \
+            else 0.0
+
+
+CR = RecoveryStrategy(
+    name="CR", redeploys=True, keeps_jit_cache=False,
+    allrank_collectives=0, tree_broadcasts=0, heartbeat=None)
+
+REINIT = RecoveryStrategy(
+    name="Reinit++", redeploys=False, keeps_jit_cache=True,
+    allrank_collectives=0, tree_broadcasts=1, heartbeat=None)
+
+ULFM = RecoveryStrategy(
+    name="ULFM", redeploys=False, keeps_jit_cache=True,
+    # revoke + shrink + agree + spawn/merge — each an all-rank operation
+    allrank_collectives=4, tree_broadcasts=0, heartbeat=HeartbeatModel())
+
+STRATEGIES = {s.key: s for s in (CR, REINIT, ULFM)}
+
+
+def get_strategy(name: str) -> RecoveryStrategy:
+    k = name.lower().replace("++", "").replace("reinitpp", "reinit")
+    if k not in STRATEGIES:
+        raise KeyError(f"unknown strategy {name!r}; known: {list(STRATEGIES)}")
+    return STRATEGIES[k]

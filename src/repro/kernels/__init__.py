@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+  flash_attention/  causal block-skipping flash attention (forward):
+                    kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+                    ops.py (jit'd GQA-aware wrapper), ref.py (jnp oracle)
+  mamba_scan/       Mamba1 selective scan: d_inner-striped VMEM state,
+                    sequence streamed in chunks (TPU adaptation of the
+                    paper's GPU shared-memory prefix scan)
+
+Both are validated in interpret mode on CPU against their oracles
+(tests/test_kernels.py, tests/test_mamba_kernel_integration.py) and sweep
+shapes/dtypes; on TPU they compile to Mosaic.
+"""

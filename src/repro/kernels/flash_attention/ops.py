@@ -1,0 +1,41 @@
+"""jit'd public wrapper around the Pallas flash-attention kernel.
+
+Accepts the model-layer layout q (B,Sq,H,hd), k/v (B,Sk,Hkv,hd); flattens
+batch×head, pads hd/seq to hardware-aligned tiles when necessary, and
+dispatches to the kernel. `interpret=True` runs the kernel body in Python on
+CPU (how this container validates it); on a real TPU it compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_bhsd
+from .ref import flash_attention_ref
+
+
+def _pick_block(s: int, target: int = 128) -> int:
+    b = min(target, s)
+    while s % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jnp.ndarray:
+    """q: (B,Sq,H,hd); k,v: (B,Sk,Hkv,hd) -> (B,Sq,H,hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(Sk, block_k)
+    if bq < 8 or bk < 8:
+        # degenerate tiny shapes: not worth a kernel launch
+        return flash_attention_ref(q, k, v, causal=causal)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, hd)
+    of = flash_attention_bhsd(qf, kf, vf, causal=causal, n_q_heads=H,
+                              block_q=bq, block_k=bk, interpret=interpret)
+    return of.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

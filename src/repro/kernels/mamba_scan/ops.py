@@ -1,0 +1,21 @@
+"""Public wrapper for the selective-scan Pallas kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import selective_scan
+from .ref import selective_scan_ref
+
+
+def mamba_scan(x, dt, B, C, A, *, interpret: bool = False,
+               chunk: int = 256, block_d: int = 512):
+    """Selective scan y_t = C_t·h_t with h_t = exp(dt_t A)h_{t-1}+dt_t x_t B_t.
+
+    x, dt: (batch, S, di); B, C: (batch, S, ds); A: (di, ds).
+    Tiny shapes fall back to the jnp oracle (not worth a kernel launch).
+    """
+    bsz, S, di = x.shape
+    if S < 8 or di < 8:
+        return selective_scan_ref(x, dt, B, C, A)
+    return selective_scan(x, dt, B, C, A, chunk=chunk, block_d=block_d,
+                          interpret=interpret)

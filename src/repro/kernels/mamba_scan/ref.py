@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the selective-scan kernel: straight recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, B, C, A, h0=None):
+    """x, dt: (batch, S, di); B, C: (batch, S, ds); A: (di, ds).
+
+    h_t = exp(dt_t ⊙ A) * h_{t-1} + (dt_t ⊙ x_t) ⊗ B_t
+    y_t = h_t · C_t
+    Returns (y (batch, S, di), h_final (batch, di, ds)); all math fp32.
+    """
+    bsz, S, di = x.shape
+    ds = B.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf, Af = (B.astype(jnp.float32), C.astype(jnp.float32),
+                  A.astype(jnp.float32))
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, ds), jnp.float32)
+
+    def step(h, t):
+        dA = jnp.exp(dtf[:, t][..., None] * Af)                # (b, di, ds)
+        dBx = (dtf[:, t] * xf[:, t])[..., None] * Bf[:, t][:, None, :]
+        h = h * dA + dBx
+        y = jnp.einsum("bds,bs->bd", h, Cf[:, t])
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return ys.transpose(1, 0, 2).astype(x.dtype), h

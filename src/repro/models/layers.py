@@ -1,0 +1,147 @@
+"""Primitive layers shared by all architectures.
+
+Everything is a pure function over an explicit parameter pytree; parameter
+initializers return pytrees of arrays (or ShapeDtypeStructs in abstract mode)
+so the same code paths drive real training, smoke tests and the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+# ---------------------------------------------------------------- init utils
+
+def _init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else max(shape[-1], 1)
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, bias=False):
+    p = {"w": _init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    y = x.astype(compute_dtype) @ p["w"].astype(compute_dtype)
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# ------------------------------------------------------------------ rmsnorm
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# --------------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                  # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- gated mlp
+
+def mlp_init(key, d_model, d_ff, dtype, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi_up": _init(k2, (d_model, d_ff), dtype),
+        "wo": _init(k3, (d_ff, d_model), dtype),
+    }
+    if gated:
+        p["wi_gate"] = _init(k1, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    xc = x.astype(compute_dtype)
+    u = xc @ p["wi_up"].astype(compute_dtype)
+    if "wi_gate" in p:
+        g = xc @ p["wi_gate"].astype(compute_dtype)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(u)
+    return h @ p["wo"].astype(compute_dtype)
+
+
+# --------------------------------------------------------------- embeddings
+
+def embedding_init(key, vocab, d_model, dtype):
+    return {"table": _init(key, (vocab, d_model), dtype, scale=1.0)}
+
+
+def embed(p: Params, tokens: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return p["table"].astype(compute_dtype)[tokens]
+
+
+def unembed(p: Params, x: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return x.astype(compute_dtype) @ p["table"].astype(compute_dtype).T
+
+
+# --------------------------------------------------- chunked cross-entropy
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32. logits: (B,S,V); labels: (B,S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_unembed_xent(emb_p: Params, x: jnp.ndarray, labels: jnp.ndarray,
+                         compute_dtype, n_chunks: int = 4) -> jnp.ndarray:
+    """Cross-entropy without materializing full (B,S,V) logits.
+
+    Scans over sequence chunks; each chunk's logits live only inside one scan
+    iteration, cutting peak activation memory by n_chunks.
+    """
+    B, S, _ = x.shape
+    if S % n_chunks != 0:
+        logits = unembed(emb_p, x, compute_dtype)
+        return cross_entropy(logits, labels)
+    xs = x.reshape(B, n_chunks, S // n_chunks, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+    table = emb_p["table"].astype(compute_dtype)
+
+    def body(carry, xl):
+        xc, lc = xl
+        logits = xc.astype(compute_dtype) @ table.T
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, lc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / (B * S)

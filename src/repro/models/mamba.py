@@ -1,0 +1,495 @@
+"""Mamba1 (selective scan) and Mamba2 (SSD) blocks with train + decode paths.
+
+Training uses a *chunked* scan: a sequential `lax.scan` over sequence chunks
+carrying the SSM state, with fully parallel (associative-scan / matmul) work
+inside each chunk. This bounds activation memory to O(B * chunk * d_inner *
+d_state) regardless of sequence length — the reason SSM archs run the
+long_500k cell at all. The inner chunk computation is the part the Pallas
+kernel (repro.kernels.mamba_scan) replaces on TPU.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import shard_constraint
+
+from .config import ModelConfig
+from .layers import _init, rmsnorm, rmsnorm_init
+
+Params = Any
+
+
+def _constrain_chunks(*arrs, inner="heads"):
+    """Pin stacked per-chunk scan inputs (nchunk, B, c, d…) to
+    (replicated, batch, replicated, inner): without this GSPMD may shard
+    the leading scan axis and reshard every iteration (measured: ~540 MB
+    all-to-all per layer per chunk on falcon-mamba train_4k)."""
+    out = []
+    for a in arrs:
+        axes = [None, "batch", None] + [None] * (a.ndim - 3)
+        if inner is not None and a.ndim >= 4:
+            axes[3] = inner
+        out.append(shard_constraint(a, *axes))
+    return tuple(out)
+
+
+# ------------------------------------------------------------------- mamba1
+
+def mamba1_init(key, cfg: ModelConfig, dtype):
+    D, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(D // 16, 1)
+    ks = jax.random.split(key, 7)
+    return {
+        # split projections (not one fused (D, 2di) matrix): each output is
+        # then independently model-sharded, so the xi/z split never crosses
+        # shard boundaries (a fused split costs an all-to-all per layer)
+        "in_x": _init(ks[0], (D, di), dtype),
+        "in_z": _init(ks[5], (D, di), dtype),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _init(ks[2], (di, dt_rank + 2 * ds), dtype),
+        "dt_proj": _init(ks[3], (dt_rank, di), dtype),
+        "dt_bias": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds)).astype(dtype)),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": _init(ks[4], (di, D), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: jnp.ndarray | None = None):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C). Returns (y, last K-1 x)."""
+    K = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([init_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return y + b, xp[:, -(K - 1):, :] if K > 1 else init_state
+
+
+def _chunk_scan_m1(dA, dBx, h0):
+    """Intra-chunk associative scan. dA,dBx: (B,c,di,ds); h0: (B,di,ds)."""
+    # prepend the carry as an extra step with A=1
+    ones = jnp.ones_like(dA[:, :1])
+    A = jnp.concatenate([ones, dA], axis=1)
+    b = jnp.concatenate([h0[:, None], dBx], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, hs = jax.lax.associative_scan(combine, (A, b), axis=1)
+    return hs[:, 1:], hs[:, -1]           # per-step states, final carry
+
+
+def mamba1_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                   compute_dtype=jnp.bfloat16):
+    """x: (B,S,D) -> (B,S,D). Chunked selective scan."""
+    B, S, D = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(D // 16, 1)
+    c = min(cfg.ssm_chunk, S)
+    assert S % c == 0, f"seq {S} not divisible by chunk {c}"
+
+    xc = x.astype(compute_dtype)
+    xi = xc @ p["in_x"].astype(compute_dtype)
+    z = xc @ p["in_z"].astype(compute_dtype)
+    xi, _ = _causal_conv(xi, p["conv_w"].astype(compute_dtype),
+                         p["conv_b"].astype(compute_dtype))
+    xi = jax.nn.silu(xi)
+
+    proj = xi @ p["x_proj"].astype(compute_dtype)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(compute_dtype)
+                         + p["dt_bias"].astype(compute_dtype))   # (B,S,di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (di,ds)
+
+    nchunk = S // c
+    xi = shard_constraint(xi, "batch", None, "heads")
+    dt = shard_constraint(dt, "batch", None, "heads")
+    xs = xi.reshape(B, nchunk, c, di)
+    dts = dt.reshape(B, nchunk, c, di)
+    Bs = Bc.reshape(B, nchunk, c, ds)
+    Cs = Cc.reshape(B, nchunk, c, ds)
+
+    def chunk_body(h, inp):
+        xc, dtc, bc, cc = inp                            # (B,c,...)
+        dtf = dtc.astype(jnp.float32)
+        dA = jnp.exp(dtf[..., None] * A)                 # (B,c,di,ds)
+        dBx = (dtf * xc.astype(jnp.float32))[..., None] * bc.astype(jnp.float32)[..., None, :]
+        hs, h_last = _chunk_scan_m1(dA, dBx, h)
+        y = jnp.einsum("bcds,bcs->bcd", hs, cc.astype(jnp.float32))
+        return h_last, y.astype(compute_dtype)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0,
+                         _constrain_chunks(
+                             xs.transpose(1, 0, 2, 3),
+                             dts.transpose(1, 0, 2, 3), inner="heads")
+                         + _constrain_chunks(
+                             Bs.transpose(1, 0, 2, 3),
+                             Cs.transpose(1, 0, 2, 3), inner=None))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = y + xi * p["D"].astype(compute_dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(compute_dtype)
+
+
+def mamba1_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32,
+                      abstract: bool = False):
+    di, ds, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    shapes = {"h": (batch, di, ds), "conv": (batch, K - 1, di)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, dtype) for k, s in shapes.items()}
+    return {k: jnp.zeros(s, dtype) for k, s in shapes.items()}
+
+
+def mamba1_step(p: Params, x: jnp.ndarray, state, cfg: ModelConfig,
+                compute_dtype=jnp.bfloat16):
+    """Single-token decode. x: (B,1,D); state: {h:(B,di,ds), conv:(B,K-1,di)}."""
+    B = x.shape[0]
+    D, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(D // 16, 1)
+    xc = x.astype(compute_dtype)
+    xi = xc @ p["in_x"].astype(compute_dtype)
+    z = xc @ p["in_z"].astype(compute_dtype)
+    xi, conv_state = _causal_conv(xi, p["conv_w"].astype(compute_dtype),
+                                  p["conv_b"].astype(compute_dtype),
+                                  state["conv"].astype(compute_dtype))
+    xi = jax.nn.silu(xi)
+    proj = xi @ p["x_proj"].astype(compute_dtype)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(compute_dtype)
+                         + p["dt_bias"].astype(compute_dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtf = dt[:, 0].astype(jnp.float32)                       # (B,di)
+    dA = jnp.exp(dtf[..., None] * A)                         # (B,di,ds)
+    dBx = (dtf * xi[:, 0].astype(jnp.float32))[..., None] \
+        * Bc[:, 0].astype(jnp.float32)[:, None, :]
+    h = state["h"] * dA + dBx
+    y = jnp.einsum("bds,bs->bd", h, Cc[:, 0].astype(jnp.float32))
+    y = y.astype(compute_dtype) + xi[:, 0] * p["D"].astype(compute_dtype)
+    y = y * jax.nn.silu(z[:, 0])
+    out = y @ p["out_proj"].astype(compute_dtype)
+    return out[:, None, :], {"h": h, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+# ------------------------------------------------------------------- mamba2
+
+def mamba2_init(key, cfg: ModelConfig, dtype):
+    D, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.n_ssm_heads
+    ks = jax.random.split(key, 7)
+    return {
+        # split projections: see mamba1_init — keeps every output aligned
+        # to its own sharding (z/x over "heads", small B/C/dt replicated)
+        "in_z": _init(ks[0], (D, di), dtype),
+        "in_x": _init(ks[3], (D, di), dtype),
+        "in_bc": _init(ks[4], (D, 2 * ds), dtype),
+        "in_dt": _init(ks[5], (D, nh), dtype),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, di), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": _init(ks[6], (cfg.ssm_conv, 2 * ds), dtype, scale=0.5),
+        "conv_bc_b": jnp.zeros((2 * ds,), dtype),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "A_log": jnp.zeros((nh,), dtype),
+        "D": jnp.ones((nh,), dtype),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": _init(ks[2], (di, D), dtype),
+    }
+
+
+def _segsum(x):
+    """x: (..., c) -> (..., c, c) lower-triangular segment sums."""
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), 0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_chunk(xc, dtc, bc, cc, A, h0):
+    """One SSD chunk. xc: (B,c,nh,hp); dtc: (B,c,nh); bc,cc: (B,c,ds);
+    A: (nh,); h0: (B,nh,hp,ds). Returns (y (B,c,nh,hp), h_next)."""
+    dA = dtc * A                                             # (B,c,nh)
+    seg = _segsum(dA.transpose(0, 2, 1))                     # (B,nh,c,c)
+    L = jnp.exp(seg)
+    # diagonal (intra-chunk) term: attention-like matmuls
+    G = jnp.einsum("bqs,bks->bqk", cc, bc)                   # (B,c,c)
+    M = G[:, None] * L                                       # (B,nh,c,c)
+    y_diag = jnp.einsum("bhqk,bkh,bkhp->bqhp", M, dtc, xc)
+    # state at chunk end
+    cum = jnp.cumsum(dA, axis=1)
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)             # (B,c,nh)
+    h_new = jnp.einsum("bkh,bkh,bkhp,bks->bhps",
+                       decay_to_end, dtc, xc, bc)
+    h_next = h0 * jnp.exp(cum[:, -1])[:, :, None, None] + h_new
+    # off-diagonal: contribution of the incoming state
+    decay_from_start = jnp.exp(cum)                          # (B,c,nh)
+    y_off = jnp.einsum("bqs,bqh,bhps->bqhp", cc, decay_from_start, h0)
+    return y_diag + y_off, h_next
+
+
+def mamba2_forward(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                   compute_dtype=jnp.bfloat16):
+    B, S, D = x.shape
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    c = min(cfg.ssm_chunk, S)
+    assert S % c == 0
+
+    xc0 = x.astype(compute_dtype)
+    z = xc0 @ p["in_z"].astype(compute_dtype)
+    xi = xc0 @ p["in_x"].astype(compute_dtype)
+    bc = xc0 @ p["in_bc"].astype(compute_dtype)
+    dt = xc0 @ p["in_dt"].astype(compute_dtype)
+    xi, _ = _causal_conv(xi, p["conv_w"].astype(compute_dtype),
+                         p["conv_b"].astype(compute_dtype))
+    bc, _ = _causal_conv(bc, p["conv_bc_w"].astype(compute_dtype),
+                         p["conv_bc_b"].astype(compute_dtype))
+    xi = jax.nn.silu(xi)
+    bc = jax.nn.silu(bc)
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(compute_dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (nh,)
+
+    nchunk = S // c
+    xh = xi.reshape(B, nchunk, c, nh, hp).astype(jnp.float32)
+    dts = dt.reshape(B, nchunk, c, nh).astype(jnp.float32)
+    Bs = Bc.reshape(B, nchunk, c, ds).astype(jnp.float32)
+    Cs = Cc.reshape(B, nchunk, c, ds).astype(jnp.float32)
+
+    def chunk_body(h, inp):
+        xc, dtc, bc, cc = inp
+        y, h = _ssd_chunk(xc, dtc, bc, cc, A, h)
+        return h, y.astype(compute_dtype)
+
+    h0 = jnp.zeros((B, nh, hp, ds), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_body, h0,
+        _constrain_chunks(xh.transpose(1, 0, 2, 3, 4), inner="heads")
+        + _constrain_chunks(dts.transpose(1, 0, 2, 3),
+                            Bs.transpose(1, 0, 2, 3),
+                            Cs.transpose(1, 0, 2, 3), inner=None))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, di)
+    y = y + xi * jnp.repeat(p["D"].astype(compute_dtype), hp)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ p["out_proj"].astype(compute_dtype)
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32,
+                      abstract: bool = False):
+    di, ds, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    nh, hp = cfg.n_ssm_heads, cfg.ssm_head_dim
+    shapes = {"h": (batch, nh, hp, ds), "conv": (batch, K - 1, di + 2 * ds)}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, dtype) for k, s in shapes.items()}
+    return {k: jnp.zeros(s, dtype) for k, s in shapes.items()}
+
+
+def mamba2_step(p: Params, x: jnp.ndarray, state, cfg: ModelConfig,
+                compute_dtype=jnp.bfloat16):
+    """Single-token decode for Mamba2."""
+    B = x.shape[0]
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    xc0 = x.astype(compute_dtype)
+    z = xc0 @ p["in_z"].astype(compute_dtype)
+    xi = xc0 @ p["in_x"].astype(compute_dtype)
+    bc = xc0 @ p["in_bc"].astype(compute_dtype)
+    dt = xc0 @ p["in_dt"].astype(compute_dtype)
+    xi, conv_state_x = _causal_conv(
+        xi, p["conv_w"].astype(compute_dtype),
+        p["conv_b"].astype(compute_dtype),
+        state["conv"][..., :di].astype(compute_dtype))
+    bc, conv_state_bc = _causal_conv(
+        bc, p["conv_bc_w"].astype(compute_dtype),
+        p["conv_bc_b"].astype(compute_dtype),
+        state["conv"][..., di:].astype(compute_dtype))
+    conv_state = jnp.concatenate(
+        [conv_state_x, conv_state_bc], axis=-1)
+    xi = jax.nn.silu(xi)
+    bc = jax.nn.silu(bc)
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(compute_dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    xf = xi[:, 0].reshape(B, nh, hp).astype(jnp.float32)
+    dtf = dt[:, 0].astype(jnp.float32)                        # (B,nh)
+    dA = jnp.exp(dtf * A)                                     # (B,nh)
+    h = state["h"] * dA[:, :, None, None] \
+        + jnp.einsum("bh,bhp,bs->bhps", dtf, xf, Bc[:, 0].astype(jnp.float32))
+    y = jnp.einsum("bhps,bs->bhp", h, Cc[:, 0].astype(jnp.float32))
+    y = y + xf * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, di).astype(compute_dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z[:, 0]), cfg.norm_eps)
+    out = y @ p["out_proj"].astype(compute_dtype)
+    return out[:, None, :], {"h": h, "conv": conv_state.astype(state["conv"].dtype)}
+
+
+# ------------------------------------------------- prefill (state capture)
+
+def mamba1_forward_with_state(p, x, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    """Single-pass mamba1 forward that also returns the final recurrent state.
+
+    Used by the prefill path of SSM/hybrid archs.
+    """
+    B, S, D = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(D // 16, 1)
+    c = min(cfg.ssm_chunk, S)
+    xc0 = x.astype(compute_dtype)
+    xi_pre = xc0 @ p["in_x"].astype(compute_dtype)
+    z = xc0 @ p["in_z"].astype(compute_dtype)
+    conv_tail = xi_pre[:, -(cfg.ssm_conv - 1):].astype(jnp.float32)
+    xi, _ = _causal_conv(xi_pre, p["conv_w"].astype(compute_dtype),
+                         p["conv_b"].astype(compute_dtype))
+    xi = jax.nn.silu(xi)
+    proj = xi @ p["x_proj"].astype(compute_dtype)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(compute_dtype)
+                         + p["dt_bias"].astype(compute_dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    nchunk = S // c
+
+    def body(h, inp):
+        xc, dtc, bc, cc = inp
+        dtf = dtc.astype(jnp.float32)
+        dA = jnp.exp(dtf[..., None] * A)
+        dBx = (dtf * xc.astype(jnp.float32))[..., None] \
+            * bc.astype(jnp.float32)[..., None, :]
+        hs, h = _chunk_scan_m1(dA, dBx, h)
+        y = jnp.einsum("bcds,bcs->bcd", hs, cc.astype(jnp.float32))
+        return h, y.astype(compute_dtype)
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h, ys = jax.lax.scan(
+        body, h0,
+        _constrain_chunks(
+            xi.reshape(B, nchunk, c, di).transpose(1, 0, 2, 3),
+            dt.reshape(B, nchunk, c, di).transpose(1, 0, 2, 3),
+            inner="heads")
+        + _constrain_chunks(
+            Bc.reshape(B, nchunk, c, ds).transpose(1, 0, 2, 3),
+            Cc.reshape(B, nchunk, c, ds).transpose(1, 0, 2, 3),
+            inner=None))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    y = y + xi * p["D"].astype(compute_dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(compute_dtype)
+    return out, {"h": h, "conv": conv_tail}
+
+
+def mamba2_forward_with_state(p, x, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    B, S, D = x.shape
+    di, ds, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    c = min(cfg.ssm_chunk, S)
+    xc0 = x.astype(compute_dtype)
+    z = xc0 @ p["in_z"].astype(compute_dtype)
+    xi_pre = xc0 @ p["in_x"].astype(compute_dtype)
+    bc_pre = xc0 @ p["in_bc"].astype(compute_dtype)
+    dt = xc0 @ p["in_dt"].astype(compute_dtype)
+    conv_tail = jnp.concatenate(
+        [xi_pre[:, -(cfg.ssm_conv - 1):],
+         bc_pre[:, -(cfg.ssm_conv - 1):]], axis=-1).astype(jnp.float32)
+    xi, _ = _causal_conv(xi_pre, p["conv_w"].astype(compute_dtype),
+                         p["conv_b"].astype(compute_dtype))
+    bc, _ = _causal_conv(bc_pre, p["conv_bc_w"].astype(compute_dtype),
+                         p["conv_bc_b"].astype(compute_dtype))
+    xi = jax.nn.silu(xi)
+    bc = jax.nn.silu(bc)
+    Bc, Cc = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(compute_dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    nchunk = S // c
+    xh = xi.reshape(B, nchunk, c, nh, hp).astype(jnp.float32)
+    dts = dt.reshape(B, nchunk, c, nh).astype(jnp.float32)
+    Bs = Bc.reshape(B, nchunk, c, ds).astype(jnp.float32)
+    Cs = Cc.reshape(B, nchunk, c, ds).astype(jnp.float32)
+
+    def chunk_body(h, inp):
+        xc, dtc, bc, cc = inp
+        y, h = _ssd_chunk(xc, dtc, bc, cc, A, h)
+        return h, y.astype(compute_dtype)
+
+    h0 = jnp.zeros((B, nh, hp, ds), jnp.float32)
+    h, ys = jax.lax.scan(
+        chunk_body, h0,
+        _constrain_chunks(xh.transpose(1, 0, 2, 3, 4), inner="heads")
+        + _constrain_chunks(dts.transpose(1, 0, 2, 3),
+                            Bs.transpose(1, 0, 2, 3),
+                            Cs.transpose(1, 0, 2, 3), inner=None))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, di)
+    y = y + xi * jnp.repeat(p["D"].astype(compute_dtype), hp)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out_proj"].astype(compute_dtype)
+    return out, {"h": h, "conv": conv_tail}
+
+
+def mamba_forward_with_state(p, x, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    return mamba1_forward_with_state(p, x, cfg, compute_dtype) \
+        if cfg.ssm_version == 1 else mamba2_forward_with_state(p, x, cfg, compute_dtype)
+
+
+# ------------------------------------------------------------- dispatchers
+
+def mamba_init(key, cfg: ModelConfig, dtype):
+    return mamba1_init(key, cfg, dtype) if cfg.ssm_version == 1 \
+        else mamba2_init(key, cfg, dtype)
+
+
+def mamba_forward(p, x, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    return mamba1_forward(p, x, cfg, compute_dtype) if cfg.ssm_version == 1 \
+        else mamba2_forward(p, x, cfg, compute_dtype)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32,
+                     abstract: bool = False):
+    return mamba1_init_state(cfg, batch, dtype, abstract) if cfg.ssm_version == 1 \
+        else mamba2_init_state(cfg, batch, dtype, abstract)
+
+
+def mamba_step(p, x, state, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    return mamba1_step(p, x, state, cfg, compute_dtype) if cfg.ssm_version == 1 \
+        else mamba2_step(p, x, state, cfg, compute_dtype)
+
+
+# ------------------------------------------------- Pallas kernel binding
+
+def mamba1_forward_pallas(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                          compute_dtype=jnp.bfloat16, *,
+                          interpret: bool = False,
+                          chunk: int = 256, block_d: int = 512):
+    """mamba1_forward with the selective scan executed by the Pallas TPU
+    kernel (repro.kernels.mamba_scan) instead of the chunked jnp scan.
+
+    Identical math (tested against mamba1_forward); `interpret=True` runs
+    the kernel body in Python on CPU. On TPU this is the production path
+    for the SSM hot loop.
+    """
+    from repro.kernels.mamba_scan.ops import mamba_scan
+
+    B, S, D = x.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(D // 16, 1)
+    xc = x.astype(compute_dtype)
+    xi = xc @ p["in_x"].astype(compute_dtype)
+    z = xc @ p["in_z"].astype(compute_dtype)
+    xi, _ = _causal_conv(xi, p["conv_w"].astype(compute_dtype),
+                         p["conv_b"].astype(compute_dtype))
+    xi = jax.nn.silu(xi)
+    proj = xi @ p["x_proj"].astype(compute_dtype)
+    dt, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(compute_dtype)
+                         + p["dt_bias"].astype(compute_dtype))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = mamba_scan(xi.astype(jnp.float32), dt.astype(jnp.float32),
+                      Bc.astype(jnp.float32), Cc.astype(jnp.float32), A,
+                      interpret=interpret, chunk=chunk, block_d=block_d)
+    y = y.astype(compute_dtype)
+    y = y + xi * p["D"].astype(compute_dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(compute_dtype)

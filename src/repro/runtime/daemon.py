@@ -1,0 +1,188 @@
+"""Per-node daemon: spawn/monitor workers, relay faults, run Algorithm 2.
+
+The daemon is the ORTE-daemon analogue: it spawns its children worker
+processes, watches them with a waitpid loop (SIGCHLD semantics), relays
+death notifications to the root, and on REINIT signals survivors with
+SIGREINIT (SIGUSR1) and re-spawns the ranks assigned to it.
+
+A KILL_NODE message (node-failure injection) SIGKILLs every child and then
+the daemon itself — from the root's perspective the control channel breaks,
+exactly like a node loss.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+from repro.core.failure import ChildMonitor
+
+from .transport import connect, listener, recv_msg, send_msg
+
+
+class Daemon:
+    def __init__(self, args):
+        self.node = args.node
+        self.args = args
+        self.workers: dict[int, subprocess.Popen] = {}
+        self.worker_socks: dict[int, object] = {}
+        self.lock = threading.Lock()
+
+        self.monitor = ChildMonitor(self._on_child_death)
+        self.monitor.start()
+
+        # listener for workers
+        self.wsock = listener()
+        self.wport = self.wsock.getsockname()[1]
+        threading.Thread(target=self._worker_accept_loop,
+                         daemon=True).start()
+
+        # control channel to root
+        self.root_sock = connect("127.0.0.1", args.root_port)
+        send_msg(self.root_sock, {"type": "REGISTER_DAEMON",
+                                  "node": self.node, "pid": os.getpid()})
+
+    # ------------------------------------------------------------ workers
+
+    def spawn_worker(self, rank: int, *, restarted: bool, epoch: int):
+        a = self.args
+        cmd = [sys.executable, "-m", "repro.runtime.worker",
+               "--rank", str(rank), "--world", str(a.world),
+               "--daemon-port", str(self.wport),
+               "--steps", str(a.steps), "--dim", str(a.dim),
+               "--fail-step", str(a.fail_step),
+               "--fail-rank", str(a.fail_rank),
+               "--fail-kind", a.fail_kind,
+               "--ckpt-dir", a.ckpt_dir,
+               "--epoch", str(epoch)]
+        if restarted:
+            cmd.append("--restarted")
+        env = dict(os.environ, PYTHONPATH=a.pythonpath)
+        proc = subprocess.Popen(cmd, env=env)
+        with self.lock:
+            self.workers[rank] = proc
+        self.monitor.watch(rank, proc.pid)
+
+    def _on_child_death(self, rank: int, pid: int, status: int):
+        # SIGCHLD: relay to root (paper: daemon notifies, root decides)
+        try:
+            send_msg(self.root_sock, {"type": "CHILD_DEAD", "rank": rank,
+                                      "node": self.node, "status": status})
+        except OSError:
+            pass
+
+    def _worker_accept_loop(self):
+        while True:
+            try:
+                conn, _ = self.wsock.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._worker_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _worker_conn(self, conn):
+        rank = None
+        try:
+            while True:
+                msg = recv_msg(conn)
+                if msg is None:
+                    return
+                t = msg["type"]
+                if t == "REGISTER_WORKER":
+                    rank = msg["rank"]
+                    with self.lock:
+                        self.worker_socks[rank] = conn
+                    send_msg(self.root_sock, {**msg, "node": self.node})
+                elif t == "KILL_NODE":
+                    self._die_hard()
+                else:      # BARRIER / DONE — relay up
+                    send_msg(self.root_sock, msg)
+        except OSError:
+            return
+
+    def _die_hard(self):
+        """Node-failure emulation: children first, then ourselves.
+
+        The monitor is stopped first so the children's deaths are not
+        relayed as process failures — a real dead node sends nothing."""
+        self.monitor._stop.set()
+        with self.lock:
+            procs = list(self.workers.values())
+        for p in procs:
+            try:
+                os.kill(p.pid, signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+        os.kill(os.getpid(), signal.SIGKILL)
+
+    # --------------------------------------------------------------- root
+
+    def _broadcast_workers(self, msg: dict):
+        with self.lock:
+            socks = dict(self.worker_socks)
+        for rank, s in socks.items():
+            try:
+                send_msg(s, msg)
+            except OSError:
+                pass
+
+    def run(self):
+        while True:
+            msg = recv_msg(self.root_sock)
+            if msg is None:
+                self._die_hard()      # root gone: tear everything down
+            t = msg["type"]
+            if t == "SPAWN":          # initial deployment or Algorithm 2
+                for rank in msg["ranks"]:
+                    self.spawn_worker(rank, restarted=msg["restarted"],
+                                      epoch=msg["epoch"])
+            elif t == "REINIT":
+                # Algorithm 2: signal survivors, spawn assigned ranks
+                mine = [r for d, r in msg["respawns"] if d == self.node]
+                with self.lock:
+                    survivors = [r for r in self.workers if r not in mine
+                                 and self.workers[r].poll() is None]
+                for r in survivors:
+                    try:
+                        os.kill(self.workers[r].pid, signal.SIGUSR1)
+                    except ProcessLookupError:
+                        pass
+                for r in mine:
+                    self.monitor.unwatch(r)
+                    self.spawn_worker(r, restarted=True, epoch=msg["epoch"])
+                send_msg(self.root_sock, {"type": "REINIT_DONE",
+                                          "node": self.node,
+                                          "epoch": msg["epoch"]})
+            elif t in ("RANK_TABLE", "BARRIER_RELEASE", "JOIN_RELEASE",
+                       "SHUTDOWN"):
+                self._broadcast_workers(msg)
+                if t == "SHUTDOWN":
+                    time.sleep(0.3)
+                    with self.lock:
+                        for p in self.workers.values():
+                            if p.poll() is None:
+                                p.terminate()
+                    os._exit(0)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--node", required=True)
+    ap.add_argument("--root-port", type=int, required=True)
+    ap.add_argument("--world", type=int, required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--dim", type=int, default=4096)
+    ap.add_argument("--fail-step", type=int, default=-1)
+    ap.add_argument("--fail-rank", type=int, default=-1)
+    ap.add_argument("--fail-kind", default="process")
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--pythonpath", default="")
+    Daemon(ap.parse_args(argv)).run()
+
+
+if __name__ == "__main__":
+    main()

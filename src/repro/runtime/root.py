@@ -1,0 +1,339 @@
+"""Root (HNP): deployment, liveness, Algorithm 1, recovery orchestration.
+
+Two recovery modes, matching the paper's measured approaches:
+
+  reinit  Algorithm 1 + REINIT broadcast: survivors roll back in place,
+          only failed ranks are re-spawned (on the least-loaded node for
+          node failures). Recovery cost is confined to the root↔daemon
+          tree.
+  cr      Checkpoint-Restart: tear the whole job down (SIGKILL every
+          daemon) and re-deploy it from scratch; every rank restarts from
+          the file checkpoint.
+
+The root measures, with wall clocks, the same phases the paper reports:
+detection→REINIT-broadcast, re-registration (MPI recovery), and the first
+post-recovery barrier (rejoin). Results land in a JSON report consumed by
+benchmarks/runtime_bench.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import queue
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+from repro.core.events import FailureEvent, FailureType
+from repro.core.protocol import ClusterView, root_handle_failure
+
+from .transport import listener, recv_msg, send_msg
+
+
+class Root:
+    def __init__(self, args):
+        self.args = args
+        self.world = args.nodes * args.ranks_per_node
+        self.view = ClusterView.build(args.nodes, args.ranks_per_node,
+                                      args.spares)
+        self.sock = listener()
+        self.port = self.sock.getsockname()[1]
+        self.events: "queue.Queue[tuple]" = queue.Queue()
+        self.daemon_socks: dict[str, object] = {}
+        self.daemon_pids: dict[str, int] = {}
+        self.daemon_procs: dict[str, subprocess.Popen] = {}
+        self.rank_table: dict[int, tuple[str, int]] = {}
+        self.barrier: dict[tuple[int, int], list] = {}
+        self.joins: dict[int, dict[int, int]] = {}   # epoch -> rank -> avail
+        self.epoch = 0
+        self.done: set[int] = set()
+        self.recovering = False
+        self.shutting_down = False
+        self.timeline: list[dict] = []
+        self.report: dict = {"mode": args.mode, "world": self.world,
+                             "events": []}
+        threading.Thread(target=self._accept_loop, daemon=True).start()
+
+    # ------------------------------------------------------------ fabric
+
+    def _accept_loop(self):
+        while True:
+            try:
+                conn, _ = self.sock.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._daemon_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _daemon_conn(self, conn):
+        node = None
+        try:
+            while True:
+                msg = recv_msg(conn)
+                if msg is None:
+                    break
+                if msg["type"] == "REGISTER_DAEMON":
+                    node = msg["node"]
+                    self.daemon_socks[node] = conn
+                    self.daemon_pids[node] = msg["pid"]
+                self.events.put(("msg", msg))
+        except OSError:
+            pass
+        if node is not None:
+            self.events.put(("channel_broken", node))
+
+    def _broadcast(self, msg: dict, nodes=None):
+        for node, s in list(self.daemon_socks.items()):
+            if nodes is not None and node not in nodes:
+                continue
+            try:
+                send_msg(s, msg)
+            except OSError:
+                pass
+
+    # -------------------------------------------------------- deployment
+
+    def _spawn_daemon(self, node: str):
+        a = self.args
+        cmd = [sys.executable, "-m", "repro.runtime.daemon",
+               "--node", node, "--root-port", str(self.port),
+               "--world", str(self.world), "--steps", str(a.steps),
+               "--dim", str(a.dim), "--fail-step", str(a.fail_step),
+               "--fail-rank", str(a.fail_rank), "--fail-kind", a.fail_kind,
+               "--ckpt-dir", a.ckpt_dir, "--pythonpath", a.pythonpath]
+        env = dict(os.environ, PYTHONPATH=a.pythonpath)
+        self.daemon_procs[node] = subprocess.Popen(cmd, env=env)
+
+    def deploy(self):
+        t0 = time.monotonic()
+        for node in self.view.daemons():
+            self._spawn_daemon(node)
+        # wait for all daemons to register, then hand them their ranks
+        need = set(self.view.daemons())
+        while need:
+            kind, msg = self.events.get(timeout=30)
+            if kind == "msg" and msg["type"] == "REGISTER_DAEMON":
+                need.discard(msg["node"])
+        for node in self.view.daemons():
+            ranks = sorted(self.view.children[node])
+            if ranks:
+                send_msg(self.daemon_socks[node],
+                         {"type": "SPAWN", "ranks": ranks,
+                          "restarted": False, "epoch": self.epoch})
+        self.report["deploy_start_s"] = t0
+
+    # ----------------------------------------------------------- barrier
+
+    def _barrier_arrive(self, msg):
+        key = (msg["epoch"], msg["step"])
+        if msg["epoch"] != self.epoch:
+            return                          # stale pre-recovery arrival
+        lst = self.barrier.setdefault(key, [])
+        lst.append(msg["value"])
+        if len(lst) == self.world:
+            total = sum(lst)
+            self._broadcast({"type": "BARRIER_RELEASE",
+                             "epoch": key[0], "step": key[1],
+                             "value": total})
+            del self.barrier[key]
+            if getattr(self, "_first_barrier_after_recovery", None) is not None:
+                t0 = self._first_barrier_after_recovery
+                self.report["events"][-1]["rejoin_barrier_s"] = \
+                    time.monotonic() - t0
+                self._first_barrier_after_recovery = None
+
+    def _join_arrive(self, msg):
+        """ORTE-style rejoin barrier + consistent-rollback consensus: the
+        resume step is the minimum checkpoint available across all ranks
+        (ranks can be one step apart when a failure lands mid-save)."""
+        if msg["epoch"] != self.epoch:
+            return
+        d = self.joins.setdefault(msg["epoch"], {})
+        d[msg["rank"]] = msg["avail"]
+        if len(d) == self.world:
+            resume = min(d.values())
+            self._broadcast({"type": "JOIN_RELEASE", "epoch": msg["epoch"],
+                             "resume": resume})
+            del self.joins[msg["epoch"]]
+            if self.report["events"]:
+                ev = self.report["events"][-1]
+                if "resume_step" not in ev and ev.get("t_recover_start"):
+                    ev["resume_step"] = resume
+                    ev["join_release_s"] = \
+                        time.monotonic() - ev["t_recover_start"]
+
+    # ---------------------------------------------------------- recovery
+
+    def _handle_failure(self, failure: FailureEvent):
+        if self.shutting_down:
+            return
+        if self.recovering:
+            # A node failure can supersede an in-flight process recovery:
+            # the dying daemon may have relayed its children's deaths just
+            # before its channel broke. Process recovery targeting a dead
+            # node would stall, so the node failure takes over; duplicate
+            # process failures during recovery are stale and dropped.
+            if failure.kind is not FailureType.NODE:
+                return
+        self.recovering = True
+        t_detect = time.monotonic()
+        ev = {"failure": str(failure), "kind": failure.kind.value,
+              "detect_at_s": t_detect}
+        if self.args.mode == "cr":
+            self._recover_cr(ev, failure)
+        else:
+            self._recover_reinit(ev, failure)
+        self.report["events"].append(ev)
+
+    def _recover_reinit(self, ev, failure: FailureEvent):
+        t0 = time.monotonic()
+        cmd = root_handle_failure(self.view, failure)
+        self.epoch = cmd.epoch
+        self.barrier.clear()
+        self.joins.clear()
+        # forget lost workers' addresses
+        if failure.kind is FailureType.NODE:
+            lost = [r.rank for r in cmd.respawns]
+        else:
+            lost = [failure.rank]
+        for r in lost:
+            self.rank_table.pop(r, None)
+        self._pending_respawn = set(lost)
+        self._broadcast({"type": "REINIT", "epoch": self.epoch,
+                         "respawns": [[r.daemon, r.rank]
+                                      for r in cmd.respawns]})
+        ev["reinit_broadcast_s"] = time.monotonic() - t0
+        ev["t_recover_start"] = t0
+        # table rebroadcast happens when all lost ranks re-register
+
+    def _recover_cr(self, ev, failure: FailureEvent):
+        t0 = time.monotonic()
+        # teardown: SIGKILL every daemon (daemons take children with them
+        # on channel loss; be thorough and kill workers via daemons' procs)
+        for node, pid in list(self.daemon_pids.items()):
+            try:
+                os.kill(pid, signal.SIGKILL)
+            except ProcessLookupError:
+                pass
+        for p in self.daemon_procs.values():
+            try:
+                p.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                pass
+        self.daemon_socks.clear()
+        self.daemon_pids.clear()
+        self.daemon_procs.clear()
+        self.rank_table.clear()
+        self.barrier.clear()
+        self.joins.clear()
+        self.done.clear()
+        ev["teardown_s"] = time.monotonic() - t0
+        # re-deploy the whole application
+        self.epoch += 1
+        self.view = ClusterView.build(self.args.nodes,
+                                      self.args.ranks_per_node,
+                                      self.args.spares)
+        self._pending_respawn = set(range(self.world))
+        self.deploy()
+        ev["t_recover_start"] = t0
+
+    # --------------------------------------------------------------- run
+
+    def _maybe_broadcast_table(self):
+        if len(self.rank_table) == self.world:
+            self._broadcast({"type": "RANK_TABLE", "epoch": self.epoch,
+                             "table": {str(k): list(v) for k, v in
+                                       self.rank_table.items()}})
+            if self.recovering:
+                ev = self.report["events"][-1] if self.report["events"] \
+                    else None
+                t0 = self._last_recover_start()
+                if ev is not None and t0 is not None:
+                    ev["mpi_recovery_s"] = time.monotonic() - t0
+                self.recovering = False
+                self._first_barrier_after_recovery = time.monotonic()
+            elif "deploy_s" not in self.report:
+                self.report["deploy_s"] = \
+                    time.monotonic() - self.report.pop("deploy_start_s")
+
+    def _last_recover_start(self):
+        ev = self.report["events"][-1] if self.report["events"] else None
+        return ev.get("t_recover_start") if ev else None
+
+    def run(self) -> dict:
+        self.deploy()
+        t_start = time.monotonic()
+        self._first_barrier_after_recovery = None
+        self._pending_respawn = set()
+        while len(self.done) < self.world:
+            try:
+                kind, payload = self.events.get(timeout=120)
+            except queue.Empty:
+                raise TimeoutError("cluster stalled")
+            if kind == "channel_broken":
+                node = payload
+                if not self.shutting_down and node in self.view.children:
+                    self._handle_failure(FailureEvent(
+                        kind=FailureType.NODE, node=node))
+                continue
+            msg = payload
+            t = msg["type"]
+            if t == "REGISTER_WORKER":
+                self.rank_table[msg["rank"]] = ("127.0.0.1",
+                                                msg["peer_port"])
+                self._maybe_broadcast_table()
+            elif t == "CHILD_DEAD":
+                if not self.recovering and not self.shutting_down:
+                    # re-registered ranks also produce CHILD_DEAD for their
+                    # old pid; only treat live cluster members as failures
+                    self._handle_failure(FailureEvent(
+                        kind=FailureType.PROCESS, rank=msg["rank"]))
+            elif t == "BARRIER":
+                self._barrier_arrive(msg)
+            elif t == "JOIN":
+                self._join_arrive(msg)
+            elif t == "DONE":
+                self.done.add(msg["rank"])
+                self.report.setdefault("checksums", {})[str(msg["rank"])] \
+                    = msg["checksum"]
+        self.shutting_down = True
+        self.report["total_s"] = time.monotonic() - t_start
+        self._broadcast({"type": "SHUTDOWN"})
+        time.sleep(0.5)
+        for p in self.daemon_procs.values():
+            if p.poll() is None:
+                p.terminate()
+        if self.args.report:
+            with open(self.args.report, "w") as f:
+                json.dump(self.report, f, indent=2)
+        return self.report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=2)
+    ap.add_argument("--ranks-per-node", type=int, default=4)
+    ap.add_argument("--spares", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--dim", type=int, default=4096)
+    ap.add_argument("--fail-step", type=int, default=-1)
+    ap.add_argument("--fail-rank", type=int, default=-1)
+    ap.add_argument("--fail-kind", default="process",
+                    choices=["process", "node"])
+    ap.add_argument("--mode", default="reinit", choices=["reinit", "cr"])
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--report", default="")
+    ap.add_argument("--pythonpath", default=os.environ.get("PYTHONPATH", ""))
+    args = ap.parse_args(argv)
+    os.makedirs(args.ckpt_dir, exist_ok=True)
+    rep = Root(args).run()
+    ok = len(set(rep.get("checksums", {}).values())) >= 1
+    print(json.dumps(rep, indent=2))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

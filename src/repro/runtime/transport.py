@@ -1,0 +1,67 @@
+"""Length-prefixed JSON-over-TCP messaging (the control-plane fabric).
+
+Binary payloads (checkpoints) travel base64-encoded under "b64" keys —
+adequate for the control plane; bulk data paths in the JAX substrate never
+touch this fabric.
+"""
+from __future__ import annotations
+
+import base64
+import json
+import socket
+import struct
+from typing import Any, Optional
+
+_HDR = struct.Struct("!I")
+MAX_MSG = 512 * 1024 * 1024
+
+
+def send_msg(sock: socket.socket, msg: dict):
+    data = json.dumps(msg, separators=(",", ":")).encode()
+    sock.sendall(_HDR.pack(len(data)) + data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+def recv_msg(sock: socket.socket) -> Optional[dict]:
+    hdr = _recv_exact(sock, _HDR.size)
+    if hdr is None:
+        return None
+    (n,) = _HDR.unpack(hdr)
+    if n > MAX_MSG:
+        raise IOError(f"message too large: {n}")
+    data = _recv_exact(sock, n)
+    if data is None:
+        return None
+    return json.loads(data)
+
+
+def connect(host: str, port: int, timeout: float = 10.0) -> socket.socket:
+    s = socket.create_connection((host, port), timeout=timeout)
+    s.settimeout(None)
+    s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return s
+
+
+def listener(host: str = "127.0.0.1", port: int = 0) -> socket.socket:
+    s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+    s.bind((host, port))
+    s.listen(128)
+    return s
+
+
+def pack_bytes(b: bytes) -> str:
+    return base64.b64encode(b).decode()
+
+
+def unpack_bytes(s: str) -> bytes:
+    return base64.b64decode(s.encode())

@@ -1,0 +1,304 @@
+"""Worker process: the resilient MPI-rank analogue.
+
+Runs `reinit_main` around a BSP compute loop (numpy matmul + tree
+allreduce through the daemon/root control plane — the world communicator).
+Checkpoints after every iteration: a local in-memory copy plus a push to
+the buddy rank's peer socket (memory scheme), and a file checkpoint (file
+scheme) — exactly Table 2's matrix.
+
+Fault injection (paper §4): at the pre-drawn (step, rank), the victim
+SIGKILLs itself (process failure) or asks its daemon to take the whole node
+down (node failure). Survivors receive SIGREINIT (SIGUSR1), roll back to
+the reinit point, and rejoin the epoch barrier with re-spawned ranks.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import sys
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.events import RankState
+from repro.core.reinit import ROLLBACK, RollbackSignal, install_sigreinit, \
+    reinit_main
+from repro.checkpoint.memory_ckpt import BuddyStore
+
+from .transport import connect, listener, pack_bytes, recv_msg, send_msg, \
+    unpack_bytes
+
+
+class Worker:
+    def __init__(self, args):
+        self.rank = args.rank
+        self.world = args.world
+        self.steps = args.steps
+        self.dim = args.dim
+        self.fail_step = args.fail_step
+        self.fail_rank = args.fail_rank
+        self.fail_kind = args.fail_kind
+        self.ckpt_dir = args.ckpt_dir
+        self.initial_state = (RankState.RESTARTED if args.restarted
+                              else RankState.NEW)
+
+        self.store = BuddyStore(self.rank, self.world,
+                                push_remote=self._push_remote)
+        self.rank_table: dict[int, tuple[str, int]] = {}
+        self.table_event = threading.Event()
+        self.barrier_release: dict[tuple[int, int], float] = {}
+        self.barrier_cv = threading.Condition()
+        self.epoch = args.epoch
+
+        # peer listener (buddy checkpoint fabric)
+        self.peer_sock = listener()
+        self.peer_port = self.peer_sock.getsockname()[1]
+        threading.Thread(target=self._peer_loop, daemon=True).start()
+
+        # control channel to parent daemon
+        self.daemon_sock = connect("127.0.0.1", args.daemon_port)
+        send_msg(self.daemon_sock, {
+            "type": "REGISTER_WORKER", "rank": self.rank,
+            "peer_port": self.peer_port, "pid": os.getpid(),
+            "restarted": args.restarted})
+        threading.Thread(target=self._control_loop, daemon=True).start()
+
+    # ------------------------------------------------------------ fabric
+
+    def _peer_loop(self):
+        while True:
+            try:
+                conn, _ = self.peer_sock.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._peer_conn, args=(conn,),
+                             daemon=True).start()
+
+    def _peer_conn(self, conn):
+        try:
+            while True:
+                msg = recv_msg(conn)
+                if msg is None:
+                    return
+                if msg["type"] == "PUSH_CKPT":
+                    self.store.hold(msg["origin"], msg["step"],
+                                    unpack_bytes(msg["b64"]))
+                    send_msg(conn, {"type": "ACK"})
+                elif msg["type"] == "GET_CKPT":
+                    held = self.store.held_map(msg["origin"])
+                    send_msg(conn, {
+                        "type": "CKPT",
+                        "steps": {str(s): pack_bytes(b)
+                                  for s, b in held.items()}})
+        finally:
+            conn.close()
+
+    def _push_remote(self, buddy_rank: int, step: int, payload: bytes):
+        addr = self.rank_table.get(buddy_rank)
+        if addr is None:
+            return
+        try:
+            s = connect(*addr, timeout=5)
+            send_msg(s, {"type": "PUSH_CKPT", "origin": self.rank,
+                         "step": step, "b64": pack_bytes(payload)})
+            recv_msg(s)
+            s.close()
+        except OSError:
+            pass      # buddy died; the failure path will handle it
+
+    def _pull_from_buddy(self) -> dict[int, bytes]:
+        """All retained checkpoints the buddy holds for this rank."""
+        addr = self.rank_table.get(self.store.buddy)
+        if addr is None:
+            return {}
+        try:
+            s = connect(*addr, timeout=5)
+            send_msg(s, {"type": "GET_CKPT", "origin": self.rank})
+            msg = recv_msg(s)
+            s.close()
+            if msg:
+                return {int(k): unpack_bytes(v)
+                        for k, v in msg.get("steps", {}).items()}
+        except OSError:
+            pass
+        return {}
+
+    # ----------------------------------------------------------- control
+
+    def _control_loop(self):
+        while True:
+            msg = recv_msg(self.daemon_sock)
+            if msg is None:
+                os._exit(3)       # daemon died under us: node is gone
+            t = msg["type"]
+            if t == "RANK_TABLE":
+                self.rank_table = {int(k): tuple(v)
+                                   for k, v in msg["table"].items()}
+                self.epoch = msg["epoch"]
+                self.table_event.set()
+            elif t == "BARRIER_RELEASE":
+                with self.barrier_cv:
+                    self.barrier_release[(msg["epoch"], msg["step"])] = \
+                        msg["value"]
+                    self.barrier_cv.notify_all()
+            elif t == "JOIN_RELEASE":
+                with self.barrier_cv:
+                    self.barrier_release[("join", msg["epoch"])] = \
+                        msg["resume"]
+                    self.barrier_cv.notify_all()
+            elif t == "SHUTDOWN":
+                os._exit(0)
+
+    def _wait_release(self, key, epoch):
+        deadline = time.monotonic() + 120
+        with self.barrier_cv:
+            while key not in self.barrier_release:
+                ROLLBACK.check()          # interruptible: SIGREINIT unblocks
+                if self.epoch != epoch:   # recovered into a new epoch
+                    raise RollbackSignal(self.epoch)
+                self.barrier_cv.wait(0.05)
+                if time.monotonic() > deadline:
+                    raise TimeoutError(f"release {key}")
+            return self.barrier_release.pop(key)
+
+    def _allreduce(self, step: int, value: float) -> float:
+        """BSP collective: tree sum through daemon → root and back."""
+        epoch = self.epoch
+        send_msg(self.daemon_sock, {
+            "type": "BARRIER", "rank": self.rank, "epoch": epoch,
+            "step": step, "value": value})
+        return self._wait_release((epoch, step), epoch)
+
+    def _join(self, avail: int) -> int:
+        """ORTE-style rejoin barrier (the MPI_Init-equivalent barrier of
+        paper §3.2) extended with rollback consensus: every rank reports
+        the newest checkpoint it can restore, the root answers with the
+        minimum — the latest *consistent* global checkpoint."""
+        epoch = self.epoch
+        send_msg(self.daemon_sock, {
+            "type": "JOIN", "rank": self.rank, "epoch": epoch,
+            "avail": avail})
+        return int(self._wait_release(("join", epoch), epoch))
+
+    # --------------------------------------------------------------- app
+
+    def _ckpt_payload(self, step: int, x: np.ndarray) -> bytes:
+        return step.to_bytes(8, "little") + x.tobytes()
+
+    def _parse_payload(self, payload: bytes) -> tuple[int, np.ndarray]:
+        step = int.from_bytes(payload[:8], "little")
+        x = np.frombuffer(payload[8:], np.float64).copy()
+        return step, x
+
+    def _file_path(self, step: int) -> str:
+        return os.path.join(self.ckpt_dir, f"rank_{self.rank}.s{step}.bin")
+
+    def _save_file(self, step: int, payload: bytes):
+        tmp = self._file_path(step) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, self._file_path(step))
+        old = self._file_path(step - 3)
+        if os.path.exists(old):
+            os.unlink(old)
+
+    def _file_map(self) -> dict[int, bytes]:
+        out = {}
+        prefix = f"rank_{self.rank}.s"
+        try:
+            names = os.listdir(self.ckpt_dir)
+        except FileNotFoundError:
+            return out
+        for name in names:
+            if name.startswith(prefix) and name.endswith(".bin"):
+                step = int(name[len(prefix):-4])
+                with open(os.path.join(self.ckpt_dir, name), "rb") as f:
+                    out[step] = f.read()
+        return out
+
+    def body(self, state: RankState) -> int:
+        self.table_event.wait(30)     # need the rank table before buddy I/O
+        # --- application recovery (Table 2): gather restorable checkpoints
+        if state is RankState.RESTARTED:
+            avail_map = self._pull_from_buddy()   # memory scheme (process)
+            if not avail_map:
+                avail_map = self._file_map()      # file scheme (node)
+        elif state is RankState.REINITED:
+            avail_map = self.store.local_map()    # survivors: local memory
+            if not avail_map:
+                avail_map = self._file_map()
+        else:
+            # NEW: resume from file if one exists — the CR re-deploy path
+            avail_map = self._file_map()
+        # --- consistent-cut consensus: resume at min over ranks
+        resume = self._join(max(avail_map, default=0))
+        if resume > 0:
+            if resume not in avail_map:
+                raise RuntimeError(
+                    f"rank {self.rank}: no ckpt for agreed step {resume}; "
+                    f"have {sorted(avail_map)}")
+            start, x = self._parse_payload(avail_map[resume])
+        else:
+            start = 0
+            rng = np.random.default_rng(self.rank)
+            x = rng.standard_normal(self.dim)
+        w = np.eye(self.dim) * 0.999        # fixed "model"
+
+        sentinel = os.path.join(self.ckpt_dir, "INJECTED")
+        for step in range(start, self.steps):
+            ROLLBACK.check()
+            # fault injection — exactly once per run (paper §4: single
+            # failure); the sentinel stops re-spawned/restarted processes
+            # from re-killing themselves at the same step
+            if (step == self.fail_step and self.rank == self.fail_rank
+                    and not os.path.exists(sentinel)):
+                with open(sentinel, "w") as f:
+                    f.write(f"step={step} rank={self.rank}")
+                if self.fail_kind == "node":
+                    send_msg(self.daemon_sock, {"type": "KILL_NODE"})
+                    time.sleep(10)
+                os.kill(os.getpid(), signal.SIGKILL)
+            # BSP compute + collective
+            x = w @ x + 1e-3
+            total = self._allreduce(step, float(x.sum()))
+            x[0] = total / self.world       # interlocked dependency
+            # checkpoint: memory (local+buddy) and file
+            payload = self._ckpt_payload(step + 1, x)
+            self.store.save(step + 1, payload)
+            self._save_file(step + 1, payload)
+        send_msg(self.daemon_sock, {
+            "type": "DONE", "rank": self.rank,
+            "checksum": float(np.sum(x))})
+        # wait for shutdown
+        while True:
+            time.sleep(0.2)
+
+    def run(self):
+        install_sigreinit()
+        try:
+            reinit_main(self.body, initial_state=self.initial_state)
+        except SystemExit:
+            raise
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rank", type=int, required=True)
+    ap.add_argument("--world", type=int, required=True)
+    ap.add_argument("--daemon-port", type=int, required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--dim", type=int, default=4096)
+    ap.add_argument("--fail-step", type=int, default=-1)
+    ap.add_argument("--fail-rank", type=int, default=-1)
+    ap.add_argument("--fail-kind", default="process")
+    ap.add_argument("--ckpt-dir", required=True)
+    ap.add_argument("--restarted", action="store_true")
+    ap.add_argument("--epoch", type=int, default=0)
+    Worker(ap.parse_args(argv)).run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .costs import ClusterCosts, AppProfile, APPS
+from .cluster import simulate_run, SimResult, recovery_time

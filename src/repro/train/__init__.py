@@ -1,0 +1,4 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, lr_at
+from .data import TokenPipeline
+from .trainer import Trainer, TrainConfig
+from .straggler import StragglerTracker

@@ -1,0 +1,45 @@
+"""Straggler detection over step times (flat-line/outlier protection).
+
+The paper's recovery model assumes fail-stop failures; production fleets
+also see *slow* nodes. The tracker keeps a robust running estimate
+(median + MAD over a window) and flags steps (or ranks, when per-rank times
+are reported) that exceed `threshold` MADs. Mitigation is a hook: the
+trainer logs, and at scale the ElasticManager can re-host the slow shard
+exactly like a failed one — a deliberate reuse of the Reinit++ path.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+from typing import Callable, Deque, Optional
+
+
+@dataclasses.dataclass
+class StragglerTracker:
+    window: int = 50
+    threshold_mads: float = 6.0
+    min_samples: int = 10
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+
+    def __post_init__(self):
+        self._times: Deque[float] = collections.deque(maxlen=self.window)
+        self.flagged: list[tuple[int, float]] = []
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        flagged = False
+        if len(self._times) >= self.min_samples:
+            med = statistics.median(self._times)
+            mad = statistics.median(abs(t - med) for t in self._times) or 1e-9
+            if seconds > med + self.threshold_mads * mad and seconds > 1.5 * med:
+                flagged = True
+                self.flagged.append((step, seconds))
+                if self.on_straggler:
+                    self.on_straggler(step, seconds, med)
+        self._times.append(seconds)
+        return flagged
+
+    @property
+    def median(self) -> float:
+        return statistics.median(self._times) if self._times else 0.0

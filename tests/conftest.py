@@ -1,0 +1,9 @@
+import os
+import sys
+
+# tests run on the single real CPU device — only the dry-run uses the
+# 512-placeholder fleet, and it does so in its own subprocesses.
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)

@@ -1,0 +1,142 @@
+"""reinit_main semantics, fault injection, optimizer, data pipeline."""
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core import (FailureType, FaultInjector, RankState, ROLLBACK,
+                        RollbackSignal, reinit_main)
+from repro.core.elastic import ElasticManager, MeshEpoch
+from repro.core.protocol import ClusterView
+from repro.core.recovery import get_strategy
+from repro.train.data import TokenPipeline
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, \
+    lr_at
+
+
+def test_reinit_main_states():
+    calls = []
+
+    def fn(state):
+        calls.append(state)
+        if len(calls) < 3:
+            ROLLBACK.arm(len(calls))
+            ROLLBACK.check()
+        return 7
+
+    assert reinit_main(fn) == 7
+    assert calls == [RankState.NEW, RankState.REINITED, RankState.REINITED]
+
+
+def test_reinit_main_restarted_initial_state():
+    seen = []
+    reinit_main(lambda s: seen.append(s),
+                initial_state=RankState.RESTARTED)
+    assert seen == [RankState.RESTARTED]
+
+
+def test_reinit_main_exhausts():
+    def always_roll(state):
+        raise RollbackSignal(0)
+    with pytest.raises(RuntimeError):
+        reinit_main(always_roll, max_restarts=3)
+
+
+def test_fault_injector_deterministic():
+    a = FaultInjector(n_ranks=64, n_steps=100, seed=9)
+    b = FaultInjector(n_ranks=64, n_steps=100, seed=9)
+    assert (a.fail_step, a.fail_rank) == (b.fail_step, b.fail_rank)
+    # fires exactly once
+    hits = [s for s in range(100) if a.check(s) is not None]
+    assert hits == [a.fail_step]
+
+
+def test_fault_injector_node_kind_names_node():
+    view = ClusterView.build(4, 4)
+    inj = FaultInjector(n_ranks=16, n_steps=10, kind=FailureType.NODE,
+                        seed=1)
+    ev = inj.check(inj.fail_step, view)
+    assert ev.kind is FailureType.NODE and ev.node is not None
+
+
+def test_strategy_lookup_aliases():
+    assert get_strategy("Reinit++").name == "Reinit++"
+    assert get_strategy("CR").redeploys
+    assert get_strategy("ulfm").heartbeat is not None
+
+
+def test_elastic_shrink_plan():
+    em = ElasticManager(ClusterView.build(2, 4, 1),
+                        MeshEpoch(0, data_parallel=4, model_parallel=2))
+    from repro.core.events import FailureEvent
+    mesh = em.shrink_plan(FailureEvent(kind=FailureType.PROCESS, rank=0))
+    assert mesh.data_parallel == 3 and mesh.epoch == 1
+    em2 = ElasticManager(ClusterView.build(2, 4, 1),
+                         MeshEpoch(0, data_parallel=1, model_parallel=2))
+    assert em2.shrink_plan(
+        FailureEvent(kind=FailureType.PROCESS, rank=0)) is None
+
+
+# ----------------------------------------------------------- optimizer
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(lr_at(cfg, 0)) == 0.0
+    assert abs(float(lr_at(cfg, 10)) - 1.0) < 1e-6
+    assert float(lr_at(cfg, 55)) < 1.0
+    assert abs(float(lr_at(cfg, 100)) - 0.1) < 1e-6
+
+
+def test_adamw_decreases_quadratic_loss():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=1000, min_lr_ratio=1.0)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt, _ = adamw_update(params, g, opt, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_grad_clip_caps_update_norm():
+    params = {"w": jnp.zeros(3)}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    g = {"w": jnp.array([1e6, 0.0, 0.0])}
+    _, _, metrics = adamw_update(params, g, opt, cfg)
+    assert float(metrics["grad_norm"]) > 1e5   # reported raw
+
+
+# ------------------------------------------------------------- data
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_data_step_indexed_deterministic(step):
+    p = TokenPipeline(vocab_size=512, global_batch=2, seq_len=16, seed=3)
+    a = p.batch(step)
+    b = p.batch(step)
+    assert np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    # labels are next-token
+    assert a["tokens"].shape == a["labels"].shape == (2, 16)
+
+
+def test_data_different_steps_differ():
+    p = TokenPipeline(vocab_size=512, global_batch=2, seq_len=16, seed=3)
+    a, b = p.batch(1), p.batch(2)
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(b["tokens"]))
+
+
+def test_data_tokens_in_vocab():
+    p = TokenPipeline(vocab_size=100, global_batch=4, seq_len=32, seed=0)
+    t = np.asarray(p.batch(5)["tokens"])
+    assert t.min() >= 0 and t.max() < 100

@@ -1,0 +1,100 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _mk(shape, dtype):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,Hkv,hd", [
+    (2, 128, 128, 4, 4, 64),        # MHA
+    (1, 256, 256, 8, 2, 64),        # GQA 4:1
+    (2, 128, 256, 4, 1, 128),       # MQA, longer KV (decode-suffix case)
+    (1, 128, 128, 4, 4, 128),
+    (1, 512, 512, 2, 2, 64),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, Sq, Sk, H, Hkv, hd, causal, dtype):
+    q = _mk((B, Sq, H, hd), dtype)
+    k = _mk((B, Sk, Hkv, hd), dtype)
+    v = _mk((B, Sk, Hkv, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_sizes():
+    q = _mk((1, 256, 2, 64), jnp.float32)
+    k = _mk((1, 256, 2, 64), jnp.float32)
+    v = _mk((1, 256, 2, 64), jnp.float32)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    for bq, bk in [(64, 64), (128, 256), (256, 128)]:
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_tiny_fallback():
+    """Degenerate shapes fall back to the reference (no kernel launch)."""
+    q = _mk((1, 4, 2, 16), jnp.float32)
+    k = _mk((1, 4, 2, 16), jnp.float32)
+    v = _mk((1, 4, 2, 16), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("b,S,di,ds", [
+    (2, 64, 32, 8),
+    (1, 256, 128, 16),
+    (2, 128, 64, 16),
+    (1, 128, 256, 32),
+])
+@pytest.mark.parametrize("chunk,block_d", [(32, 32), (64, 128)])
+def test_mamba_scan_matches_ref(b, S, di, ds, chunk, block_d):
+    x = _mk((b, S, di), jnp.float32) * 0.5
+    dt = jnp.abs(_mk((b, S, di), jnp.float32)) * 0.1
+    B = _mk((b, S, ds), jnp.float32)
+    C = _mk((b, S, ds), jnp.float32)
+    A = -jnp.abs(_mk((di, ds), jnp.float32)) - 0.1
+    y, h = mamba_scan(x, dt, B, C, A, interpret=True, chunk=chunk,
+                      block_d=block_d)
+    yr, hr = selective_scan_ref(x, dt, B, C, A)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_scan_state_continuity():
+    """Scanning two halves with carried state == one full scan."""
+    b, S, di, ds = 1, 128, 32, 8
+    x = _mk((b, S, di), jnp.float32) * 0.5
+    dt = jnp.abs(_mk((b, S, di), jnp.float32)) * 0.1
+    B = _mk((b, S, ds), jnp.float32)
+    C = _mk((b, S, ds), jnp.float32)
+    A = -jnp.abs(_mk((di, ds), jnp.float32)) - 0.1
+    y_full, h_full = selective_scan_ref(x, dt, B, C, A)
+    half = S // 2
+    y1, h1 = selective_scan_ref(x[:, :half], dt[:, :half], B[:, :half],
+                                C[:, :half], A)
+    y2, h2 = selective_scan_ref(x[:, half:], dt[:, half:], B[:, half:],
+                                C[:, half:], A, h0=h1)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full[:, half:]),
+                               atol=1e-5)

@@ -1,0 +1,88 @@
+"""Property tests for Algorithms 1 & 2 (the paper's §3.1 recovery logic)."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core import (ClusterView, FailureEvent, FailureType, RankState,
+                        apply_recovery, daemon_handle_reinit,
+                        root_handle_failure)
+
+
+@st.composite
+def clusters(draw):
+    n_nodes = draw(st.integers(1, 8))
+    rpn = draw(st.integers(1, 16))
+    spares = draw(st.integers(0, 2))
+    return ClusterView.build(n_nodes, rpn, spares), n_nodes, rpn
+
+
+@given(clusters(), st.data())
+@settings(max_examples=50, deadline=None)
+def test_process_failure_invariants(cluster, data):
+    view, n_nodes, rpn = cluster
+    ranks = view.ranks()
+    victim = data.draw(st.sampled_from(ranks))
+    before = set(ranks)
+    cmd = root_handle_failure(
+        view, FailureEvent(kind=FailureType.PROCESS, rank=victim))
+    states = apply_recovery(view, cmd)
+    # non-shrinking: world preserved
+    assert set(states) == before
+    # exactly the victim is RESTARTED; everyone else REINITED
+    restarted = {r for r, s in states.items() if s is RankState.RESTARTED}
+    assert restarted == {victim}
+    assert all(s is RankState.REINITED for r, s in states.items()
+               if r != victim)
+    # victim re-spawned on its original node
+    assert cmd.respawns[0].daemon == view.parent(victim)
+
+
+@given(clusters(), st.data())
+@settings(max_examples=50, deadline=None)
+def test_node_failure_invariants(cluster, data):
+    view, n_nodes, rpn = cluster
+    if n_nodes < 2:
+        return
+    dead = data.draw(st.sampled_from(
+        [d for d in view.daemons() if view.children[d]]))
+    lost = set(view.children[dead])
+    before = set(view.ranks())
+    loads_before = {d: len(c) for d, c in view.children.items()
+                    if d != dead}
+    least = min((n, d) for d, n in loads_before.items())[1]
+    cmd = root_handle_failure(
+        view, FailureEvent(kind=FailureType.NODE, node=dead))
+    states = apply_recovery(view, cmd)
+    assert set(states) == before                      # non-shrinking
+    restarted = {r for r, s in states.items() if s is RankState.RESTARTED}
+    assert restarted == lost
+    # Algorithm 1: all lost ranks land on the least-loaded surviving node
+    assert {r.daemon for r in cmd.respawns} == {least}
+    assert dead not in view.children
+
+
+def test_each_rank_handled_exactly_once():
+    view = ClusterView.build(3, 4, 1)
+    cmd = root_handle_failure(
+        view, FailureEvent(kind=FailureType.PROCESS, rank=5))
+    seen = []
+    for d in view.daemons():
+        acts = daemon_handle_reinit(view, d, cmd)
+        seen += list(acts.signal_survivors) + list(acts.spawn)
+    assert sorted(seen) == view.ranks()
+
+
+def test_epoch_monotonic():
+    view = ClusterView.build(2, 4, 1)
+    e0 = view.epoch
+    root_handle_failure(view, FailureEvent(kind=FailureType.PROCESS, rank=0))
+    e1 = view.epoch
+    root_handle_failure(view, FailureEvent(kind=FailureType.PROCESS, rank=1))
+    assert view.epoch > e1 > e0
+
+
+def test_no_survivors_raises():
+    view = ClusterView.build(1, 4)
+    with pytest.raises(RuntimeError):
+        root_handle_failure(
+            view, FailureEvent(kind=FailureType.NODE, node="node0"))

@@ -1,0 +1,49 @@
+"""Property test for the rollback-consensus rule the rejoin barrier uses.
+
+The consistent cut after a failure is min(latest checkpoint per rank):
+ranks in a BSP loop with a per-step barrier can be at most one step apart,
+and every rank retains ≥3 checkpoints — so the agreed step is always
+restorable by everyone. This mirrors root._join_arrive + worker.body.
+"""
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+
+def join_release(avails: dict[int, int]) -> int:
+    return min(avails.values())
+
+
+@given(st.integers(0, 1000), st.integers(2, 64), st.data())
+@settings(max_examples=50, deadline=None)
+def test_consensus_step_restorable_by_all(base, world, data):
+    # BSP skew: each rank is at base or base+1
+    avails = {r: base + data.draw(st.integers(0, 1))
+              for r in range(world)}
+    resume = join_release(avails)
+    assert resume in (base, base + 1)
+    # retention window: every rank keeps steps [avail-2, avail]
+    for r, a in avails.items():
+        retained = set(range(max(a - 2, 0), a + 1))
+        assert resume in retained or resume == 0
+
+
+@given(st.dictionaries(st.integers(0, 63), st.integers(0, 100),
+                       min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_consensus_never_exceeds_any_rank(avails):
+    resume = join_release(avails)
+    assert all(resume <= a for a in avails.values())
+
+
+def test_buddy_store_retention():
+    from repro.checkpoint.memory_ckpt import BuddyStore
+    s = BuddyStore(rank=0, world=4)
+    for step in range(1, 8):
+        s.save(step, bytes([step]))
+    kept = sorted(s.local_map())
+    assert kept == [5, 6, 7]          # last 3 retained
+    s.hold(3, 5, b"a")
+    s.hold(3, 6, b"b")
+    s.hold(3, 9, b"c")
+    assert sorted(s.held_map(3)) == [9]   # hold prunes < step-2
+    assert s.buddy == 1

@@ -1,0 +1,88 @@
+"""The simulator must reproduce the paper's measured claims (§5)."""
+import pytest
+
+from repro.sim import APPS, recovery_time, simulate_run
+
+
+RANKS = [16, 32, 64, 128, 256, 512, 1024]
+
+
+def _rec(strategy, n, kind="process"):
+    return recovery_time(strategy, n, kind)["mpi_recovery_s"]
+
+
+def test_cr_recovery_flat_and_about_3s():
+    ts = [_rec("cr", n) for n in RANKS]
+    assert max(ts) / min(ts) < 1.05          # "scales excellently"
+    assert 2.0 < ts[0] < 4.0                 # ≈3 s (paper §5.3)
+
+
+def test_reinit_recovery_flat_and_about_half_second():
+    ts = [_rec("reinit", n) for n in RANKS]
+    assert max(ts) / min(ts) < 1.05
+    assert 0.3 < ts[0] < 0.7                 # ≈0.5 s (paper §5.3)
+
+
+def test_reinit_up_to_6x_faster_than_cr():
+    ratios = [_rec("cr", n) / _rec("reinit", n) for n in RANKS]
+    assert all(4.0 < r < 9.0 for r in ratios)    # paper: "up to 6×"
+
+
+def test_ulfm_on_par_small_3x_at_1024():
+    r64 = _rec("ulfm", 64) / _rec("reinit", 64)
+    r1024 = _rec("ulfm", 1024) / _rec("reinit", 1024)
+    assert r64 < 1.5                          # on par up to 64 ranks
+    assert 2.5 < r1024 < 4.0                  # ≈3× at 1024 (paper §5.3)
+    # and it grows monotonically
+    rs = [_rec("ulfm", n) for n in RANKS]
+    assert all(a <= b for a, b in zip(rs, rs[1:]))
+
+
+def test_node_failure_reinit_about_2x_faster_than_cr():
+    for n in [16, 256, 1024]:
+        cr = _rec("cr", n, "node")
+        re = _rec("reinit", n, "node")
+        assert 1.5 < cr / re < 3.0            # paper §5.4: ≈2×
+        assert 1.0 < re < 2.0                 # ≈1.5 s
+
+
+def test_node_recovery_slower_than_process_for_reinit():
+    assert _rec("reinit", 256, "node") > 2 * _rec("reinit", 256, "process")
+
+
+def test_cr_total_time_grows_with_ranks_due_to_lustre():
+    t16 = simulate_run(APPS["comd"], 16, "cr").total_s
+    t1024 = simulate_run(APPS["comd"], 1024, "cr").total_s
+    assert t1024 > 1.5 * t16                  # Fig 4: writes dominate
+
+
+def test_reinit_total_time_flat():
+    t16 = simulate_run(APPS["comd"], 16, "reinit").total_s
+    t1024 = simulate_run(APPS["comd"], 1024, "reinit").total_s
+    assert t1024 / t16 < 1.1
+
+
+def test_ulfm_inflates_pure_app_time():
+    a16 = simulate_run(APPS["hpccg"], 16, "ulfm").app_time_s
+    a1024 = simulate_run(APPS["hpccg"], 1024, "ulfm").app_time_s
+    r1024 = simulate_run(APPS["hpccg"], 1024, "reinit").app_time_s
+    assert a1024 > a16                        # Fig 5 divergence
+    assert a1024 > 1.02 * r1024               # visibly above Reinit++
+    # CR and Reinit++ are interference-free
+    c1024 = simulate_run(APPS["hpccg"], 1024, "cr").app_time_s
+    assert abs(c1024 - r1024) < 1e-9
+
+
+def test_recovery_time_app_independent():
+    """Fig 6: recovery depends only on rank count, not the app."""
+    rs = [simulate_run(APPS[a], 256, "reinit").mpi_recovery_s
+          for a in APPS]
+    assert max(rs) - min(rs) < 1e-9
+
+
+@pytest.mark.parametrize("strategy", ["cr", "reinit", "ulfm"])
+def test_breakdown_positive(strategy):
+    r = simulate_run(APPS["lulesh"], 128, strategy)
+    assert r.ckpt_write_s > 0 and r.mpi_recovery_s > 0
+    assert r.ckpt_read_s > 0 and r.app_time_s > 0
+    assert r.total_s > r.app_time_s

@@ -1,0 +1,67 @@
+"""Sharded trainer recovery on a real (simulated 8-device) mesh.
+
+Runs the fault-tolerant Trainer under an 8-way data mesh in a subprocess:
+the buddy memory checkpoint is an actual `ppermute` ring over the mesh,
+and recovery restores the state through the inverse permute. The
+fault-injected run must match the fault-free run on the SAME mesh
+bit-for-bit (identical compiled program + deterministic collectives).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+CODE = """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import tempfile
+    import jax
+    from repro.checkpoint.manifest import tree_digest
+    from repro.configs import get_config, reduced
+    from repro.core import FailureType, FaultInjector
+    from repro.models.model import Model
+    from repro.sharding.rules import ShardingRules
+    from repro.train import AdamWConfig, TokenPipeline, TrainConfig, Trainer
+
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rules = ShardingRules(batch="data", embed="data")
+    cfg = reduced(get_config("paper-demo"))
+    model = Model(cfg)
+    data = TokenPipeline(cfg.vocab_size, 8, 32, seed=11)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+
+    def run(d, injector=None):
+        tr = Trainer(model, data, opt,
+                     TrainConfig(total_steps=10, ckpt_dir=d,
+                                 strategy="reinit"),
+                     mesh=mesh, rules=rules, injector=injector)
+        res = tr.run()
+        return tr, res
+
+    with tempfile.TemporaryDirectory() as d1, \\
+            tempfile.TemporaryDirectory() as d2:
+        ref, _ = run(d1)
+        inj = FaultInjector(n_ranks=8, n_steps=10,
+                            kind=FailureType.PROCESS, seed=5)
+        ft, res = run(d2, injector=inj)
+        assert len(res["reports"]) == 1
+        # memory (buddy-permute) restore path was used
+        assert res["reports"][0].rollback_step == inj.fail_step
+        a = tree_digest(jax.device_get(ref.state["params"]))
+        b = tree_digest(jax.device_get(ft.state["params"]))
+        assert a == b, (a, b)
+        print("SHARDED_FT_OK")
+"""
+
+
+def test_sharded_trainer_buddy_recovery():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(CODE)], env=env,
+        capture_output=True, text=True, timeout=600)
+    assert "SHARDED_FT_OK" in proc.stdout, \
+        proc.stdout[-1000:] + proc.stderr[-3000:]
