@@ -1,60 +1,114 @@
 """Table 2 + measured checkpoint costs at this machine's scale.
 
-Times the REAL substrate: sharded file checkpoints (write+read, sync and
-async) vs the in-memory buddy copy, on a ~64 MB train state — the ratio is
-the paper's motivation for memory checkpointing."""
+Times the REAL substrate on a ~64 MB train state, old path vs new path:
+
+  old   np.savez shards + sha256-over-tobytes digests, single-threaded
+        reads (the seed implementation, preserved under fmt="npz")
+  new   serde frames + word-sum digests, parallel shard IO, memmapped
+        verified reads (the fast-path engine)
+
+The old-vs-new ratios are the paper's motivation made measurable: recovery
+speed is won in the checkpoint substrate. `bench_file_io()` returns the
+raw numbers so run.py can serialize them into BENCH_checkpoint.json and
+recovery_time.py can fold them into end-to-end recovery figures.
+"""
 from __future__ import annotations
 
 import tempfile
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import FileCheckpointer, checkpoint_kind_for
 
+STATE_MB = 64.0
+N_SHARDS = 4
 
-def _state(mb: float = 64.0):
+
+def _state(mb: float = STATE_MB):
     n = int(mb * 1e6 / 4 / 4)
     key = jax.random.PRNGKey(0)
     return {f"p{i}": jax.random.normal(jax.random.fold_in(key, i), (n,))
             for i in range(4)}
 
 
-def run(report=print):
+def _time(fn, repeats: int = 3) -> float:
+    """Best-of-N wall time — min is the standard noise-robust estimator
+    for container CPU contention."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        fn()
+        best = min(best, time.monotonic() - t0)
+    return best
+
+
+def bench_file_io(state=None, *, mb: float = STATE_MB) -> dict:
+    """Write/read timings for both formats on the same state. Loads run
+    with verify=True — the digest check is part of the recovery path."""
+    if state is None:
+        state = _state(mb)
+        jax.block_until_ready(state)
+    out = {"state_mb": mb, "n_shards": N_SHARDS}
+
+    # warmup: steady-state numbers, not one-time import/jit costs
+    warm = _state(0.1)
+    for fmt in ("npz", "bin"):
+        with tempfile.TemporaryDirectory() as d, \
+                FileCheckpointer(d, n_shards=N_SHARDS, fmt=fmt) as ck:
+            ck.save(1, warm)
+            ck.load_latest()
+
+    for fmt in ("npz", "bin"):
+        with tempfile.TemporaryDirectory() as d, \
+                FileCheckpointer(d, keep=2, n_shards=N_SHARDS,
+                                 fmt=fmt) as ck:
+            out[f"{fmt}_write_s"] = _time(lambda: ck.save(1, state))
+            out[f"{fmt}_async_submit_s"] = _time(
+                lambda: ck.save(2, state, async_=True), repeats=1)
+            ck.wait()
+            loaded = {}
+
+            def read():
+                step, st = ck.load_latest()
+                loaded["state"] = jax.tree.map(lambda a: a + 0, st)
+
+            out[f"{fmt}_read_s"] = _time(read)
+
+    out["write_speedup"] = out["npz_write_s"] / max(out["bin_write_s"], 1e-9)
+    out["read_speedup"] = out["npz_read_s"] / max(out["bin_read_s"], 1e-9)
+    return out
+
+
+def run(report=print) -> dict:
     state = _state()
     jax.block_until_ready(state)
-
-    with tempfile.TemporaryDirectory() as d:
-        ck = FileCheckpointer(d, keep=2, n_shards=2)
-        t0 = time.monotonic()
-        ck.save(1, state)
-        t_file_sync = time.monotonic() - t0
-        t0 = time.monotonic()
-        ck.save(2, state, async_=True)
-        t_file_async_submit = time.monotonic() - t0
-        ck.wait()
-        t0 = time.monotonic()
-        _, loaded = ck.load_latest()
-        t_file_read = time.monotonic() - t0
+    io = bench_file_io(state)
 
     t0 = time.monotonic()
     mem_copy = jax.tree.map(lambda a: a + 0, state)
     jax.block_until_ready(mem_copy)
     t_mem = time.monotonic() - t0
+    io["memory_copy_s"] = t_mem
 
-    report(f"table2_file_write_sync,{t_file_sync * 1e6:.0f},64MB")
+    report(f"table2_file_write_sync_old,{io['npz_write_s'] * 1e6:.0f},64MB")
+    report(f"table2_file_write_sync_new,{io['bin_write_s'] * 1e6:.0f},64MB")
     report(f"table2_file_write_async_submit,"
-           f"{t_file_async_submit * 1e6:.0f},64MB")
-    report(f"table2_file_read,{t_file_read * 1e6:.0f},64MB")
+           f"{io['bin_async_submit_s'] * 1e6:.0f},64MB")
+    report(f"table2_file_read_old,{io['npz_read_s'] * 1e6:.0f},64MB")
+    report(f"table2_file_read_new,{io['bin_read_s'] * 1e6:.0f},64MB")
     report(f"table2_memory_copy,{t_mem * 1e6:.0f},64MB")
+    report(f"table2_write_speedup_new_vs_old,0,"
+           f"x={io['write_speedup']:.2f}")
+    report(f"table2_read_speedup_new_vs_old,0,"
+           f"x={io['read_speedup']:.2f}")
     report(f"table2_mem_speedup_vs_file,0,"
-           f"x={t_file_sync / max(t_mem, 1e-9):.1f}")
+           f"x={io['bin_write_s'] / max(t_mem, 1e-9):.1f}")
     for failure in ["process", "node"]:
         for strat in ["cr", "ulfm", "reinit"]:
             report(f"table2_kind_{failure}_{strat},0,"
                    f"{checkpoint_kind_for(failure, strat)}")
+    return io
 
 
 if __name__ == "__main__":

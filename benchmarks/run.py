@@ -2,22 +2,85 @@
 
 Prints ``name,us_per_call,derived`` CSV lines. Slow real-process suites
 (runtime_bench) run last; pass --fast to skip them.
+
+Also writes ``BENCH_checkpoint.json`` at the repo root: machine-readable
+old-vs-new checkpoint write/read/recovery timings, so future PRs have a
+perf trajectory to regress against.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_checkpoint.json")
+
+
+def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
+                     path: str = BENCH_JSON) -> bool:
+    """Returns True only when the file was actually (re)written."""
+    if not ckpt_io:
+        return False
+    doc = {
+        "state_mb": ckpt_io.get("state_mb"),
+        "n_shards": ckpt_io.get("n_shards"),
+        "old": {"write_s": ckpt_io.get("npz_write_s"),
+                "read_s": ckpt_io.get("npz_read_s")},
+        "new": {"write_s": ckpt_io.get("bin_write_s"),
+                "read_s": ckpt_io.get("bin_read_s"),
+                "async_submit_s": ckpt_io.get("bin_async_submit_s")},
+        "speedup": {"write": ckpt_io.get("write_speedup"),
+                    "read": ckpt_io.get("read_speedup")},
+        "memory_copy_s": ckpt_io.get("memory_copy_s"),
+    }
+    if e2e:
+        doc["old"]["recovery_e2e_s"] = e2e["recovery_e2e_old_s"]
+        doc["new"]["recovery_e2e_s"] = e2e["recovery_e2e_new_s"]
+        doc["speedup"]["recovery"] = e2e["recovery_speedup"]
+        doc["recovery_ranks"] = e2e["ranks"]
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return True
 
 
 def main() -> None:
     fast = "--fast" in sys.argv
     from benchmarks import (app_overhead, checkpoint_bench, recovery_time,
                             step_bench, total_time, trainer_bench)
+
+    print("name,us_per_call,derived")
+    failures = 0
+
+    # checkpoint substrate first: its measured IO feeds the end-to-end
+    # recovery figures and BENCH_checkpoint.json
+    ckpt_io = e2e = None
+    try:
+        ckpt_io = checkpoint_bench.run(report=print)
+    except Exception:                     # noqa: BLE001
+        failures += 1
+        print("table2_checkpointing_FAILED,0,error")
+        traceback.print_exc()
+    try:
+        e2e = recovery_time.run(report=print, ckpt_io=ckpt_io)
+    except Exception:                     # noqa: BLE001
+        failures += 1
+        print("fig6/fig7_recovery_FAILED,0,error")
+        traceback.print_exc()
+    try:
+        if write_bench_json(ckpt_io, e2e):
+            print(f"bench_json_written,0,{BENCH_JSON}")
+        else:
+            print("bench_json_skipped,0,checkpoint_bench_failed")
+    except Exception:                     # noqa: BLE001
+        failures += 1
+        traceback.print_exc()
+
     suites = [
-        ("fig6/fig7 recovery", recovery_time.run),
         ("fig4 total time", total_time.run),
         ("fig5 app overhead", app_overhead.run),
-        ("table2 checkpointing", checkpoint_bench.run),
         ("step microbench", step_bench.run),
         ("trainer recovery", trainer_bench.run),
     ]
@@ -25,12 +88,10 @@ def main() -> None:
         from benchmarks import runtime_bench
         suites.append(("real-process runtime", runtime_bench.run))
 
-    print("name,us_per_call,derived")
-    failures = 0
     for label, fn in suites:
         try:
             fn(report=print)
-        except Exception:                     # noqa: BLE001
+        except Exception:                 # noqa: BLE001
             failures += 1
             print(f"{label.replace(' ', '_')}_FAILED,0,error")
             traceback.print_exc()
@@ -43,7 +104,7 @@ def main() -> None:
             print(f"roofline_{r.arch}_{r.shape}_{r.mesh},"
                   f"{r.t_overlap * 1e6:.0f},"
                   f"dom={r.dominant};frac={r.roofline_fraction:.3f}")
-    except Exception:                         # noqa: BLE001
+    except Exception:                     # noqa: BLE001
         print("roofline_artifacts_missing,0,run launch/dryrun first")
 
     if failures:

@@ -4,6 +4,17 @@ States are nested dicts of arrays; leaves are addressed by their
 "/"-joined key path, which makes the on-disk format self-describing and
 re-shardable (a restore may run under a different process count than the
 save — global-restart is non-shrinking but elastic re-hosting is not).
+
+Integrity digests come in two algorithms:
+
+  "wordsum"  (default) — the tiled-reduction checksum from
+             `repro.kernels.checksum`: device-resident leaves are digested
+             *on device* (Pallas kernel on TPU, jnp reduction elsewhere)
+             and host leaves through the vectorized numpy reference;
+             neither path materializes a `tobytes()` copy. Only dtype,
+             shape and two 4-byte word-sums feed the final (tiny) sha256.
+  "sha256"   — the legacy full-content hash, kept for the np.savez
+             comparison path and old manifests.
 """
 from __future__ import annotations
 
@@ -17,7 +28,13 @@ import numpy as np
 
 def flatten_state(state) -> Dict[str, np.ndarray]:
     """Nested-dict pytree -> {path: np.ndarray}. Lists become index keys."""
-    out: Dict[str, np.ndarray] = {}
+    return {k: np.asarray(v) for k, v in flatten_leaves(state).items()}
+
+
+def flatten_leaves(state) -> Dict[str, Any]:
+    """Like flatten_state but leaves arrays untouched — device arrays stay
+    on device (the fast checkpoint path digests and drains them itself)."""
+    out: Dict[str, Any] = {}
 
     def rec(prefix, node):
         if isinstance(node, dict):
@@ -27,7 +44,7 @@ def flatten_state(state) -> Dict[str, np.ndarray]:
             for i, v in enumerate(node):
                 rec(f"{prefix}/{i}", v)
         else:
-            out[prefix] = np.asarray(node)
+            out[prefix] = node
 
     rec("", state)
     return out
@@ -57,7 +74,29 @@ def unflatten_state(flat: Dict[str, np.ndarray]):
     return fix(root)
 
 
-def leaf_digest(arr: np.ndarray) -> str:
+def digest_from_checksum(dtype, shape, s0: int, s1: int) -> str:
+    """Combine word-sums with leaf metadata into the digest string —
+    only these few bytes ever reach hashlib."""
+    h = hashlib.sha256()
+    h.update(f"{dtype}|{tuple(shape)}".encode())
+    h.update(s0.to_bytes(4, "little"))
+    h.update(s1.to_bytes(4, "little"))
+    return h.hexdigest()[:16]
+
+
+def leaf_digest(arr) -> str:
+    """Wordsum digest: on-device reduction for jax arrays, vectorized
+    numpy for host arrays."""
+    from repro.kernels.checksum.ops import leaf_checksum   # lazy: jax init
+    s0, s1 = leaf_checksum(arr)
+    if not hasattr(arr, "dtype"):
+        arr = np.asarray(arr)
+    return digest_from_checksum(arr.dtype, arr.shape, s0, s1)
+
+
+def leaf_digest_sha256(arr: np.ndarray) -> str:
+    """Legacy full-content digest (hashes a tobytes copy on the host)."""
+    arr = np.asarray(arr)
     h = hashlib.sha256()
     h.update(str(arr.dtype).encode())
     h.update(str(arr.shape).encode())
@@ -65,9 +104,12 @@ def leaf_digest(arr: np.ndarray) -> str:
     return h.hexdigest()[:16]
 
 
+DIGESTS = {"wordsum": leaf_digest, "sha256": leaf_digest_sha256}
+
+
 def tree_digest(state) -> str:
     """Order-stable digest of a whole state pytree."""
-    flat = flatten_state(state)
+    flat = flatten_leaves(state)
     h = hashlib.sha256()
     for k in sorted(flat):
         h.update(k.encode())
@@ -81,32 +123,49 @@ class Manifest:
     leaves: Dict[str, dict]          # path -> {shape, dtype, digest, shard}
     n_shards: int = 1
     extra: dict = dataclasses.field(default_factory=dict)
+    algo: str = "wordsum"
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), sort_keys=True)
 
     @classmethod
     def from_json(cls, s: str) -> "Manifest":
-        return cls(**json.loads(s))
+        d = json.loads(s)
+        d.setdefault("algo", "sha256")   # pre-wordsum manifests
+        return cls(**d)
 
     @classmethod
-    def build(cls, step: int, flat: Dict[str, np.ndarray], shard_of,
-              n_shards: int, extra: dict | None = None) -> "Manifest":
-        leaves = {
-            k: {"shape": list(v.shape), "dtype": str(v.dtype),
-                "digest": leaf_digest(v), "shard": shard_of(k)}
-            for k, v in flat.items()
-        }
-        return cls(step=step, leaves=leaves, n_shards=n_shards,
-                   extra=extra or {})
+    def build(cls, step: int, flat: Dict[str, Any], shard_of,
+              n_shards: int, extra: dict | None = None,
+              algo: str = "wordsum",
+              digests: Dict[str, str] | None = None) -> "Manifest":
+        """`digests` short-circuits hashing when the caller already
+        computed them (e.g. on device, or in a per-shard thread pool)."""
+        fn = DIGESTS[algo]
 
-    def verify(self, flat: Dict[str, np.ndarray]) -> list[str]:
-        """Returns the list of corrupted/missing leaf paths (empty = OK)."""
+        def meta(k, v):
+            if not hasattr(v, "shape"):
+                v = np.asarray(v)
+            return {"shape": list(v.shape), "dtype": str(v.dtype),
+                    "digest": (digests[k] if digests is not None else fn(v)),
+                    "shard": shard_of(k)}
+
+        leaves = {k: meta(k, v) for k, v in flat.items()}
+        return cls(step=step, leaves=leaves, n_shards=n_shards,
+                   extra=extra or {}, algo=algo)
+
+    def verify(self, flat: Dict[str, Any], paths=None) -> list[str]:
+        """Returns corrupted/missing leaf paths (empty = OK). With
+        `paths`, checks only that subset (per-shard parallel verify) and
+        skips the global missing-leaf sweep."""
+        fn = DIGESTS[self.algo]
         bad = []
-        for k, meta in self.leaves.items():
-            if k not in flat:
+        keys = self.leaves.keys() if paths is None else paths
+        for k in keys:
+            meta = self.leaves.get(k)
+            if meta is None or k not in flat:
                 bad.append(k)
                 continue
-            if leaf_digest(flat[k]) != meta["digest"]:
+            if fn(flat[k]) != meta["digest"]:
                 bad.append(k)
         return bad

@@ -87,10 +87,15 @@ class BuddyStore:
     """
 
     def __init__(self, rank: int, world: int,
-                 push_remote: Optional[Callable[[int, int, bytes], None]] = None):
+                 push_remote: Optional[Callable[[int, int, bytes], None]] = None,
+                 *, retain: int = 2):
         self.rank = rank
         self.world = world
         self.push_remote = push_remote
+        # retention window: keep steps in [latest - retain, latest], both
+        # locally and for held buddy copies — retain+1 checkpoints total,
+        # enough for the BSP skew of one step plus the rejoin consensus
+        self.retain = retain
         self._lock = threading.Lock()
         self.local: Dict[int, bytes] = {}      # step -> my own bytes
         self.held: Dict[int, Dict[int, bytes]] = {}   # origin rank -> step -> bytes
@@ -103,7 +108,7 @@ class BuddyStore:
         with self._lock:
             self.local[step] = payload
             self.local = {s: b for s, b in self.local.items()
-                          if s >= step - 2 or s == step}
+                          if s >= step - self.retain}
         if self.push_remote is not None:
             self.push_remote(self.buddy, step, payload)
 
@@ -112,7 +117,7 @@ class BuddyStore:
         with self._lock:
             d = self.held.setdefault(origin_rank, {})
             d[step] = payload
-            for s in [s for s in d if s < step - 2]:
+            for s in [s for s in d if s < step - self.retain]:
                 del d[s]
 
     def latest_local(self):

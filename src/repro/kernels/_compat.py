@@ -1,0 +1,11 @@
+"""Pallas API drift shims shared by all kernel packages.
+
+jax renamed `pltpu.TPUCompilerParams` to `pltpu.CompilerParams`; support
+both so the kernels run on whichever jax the image bakes in.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

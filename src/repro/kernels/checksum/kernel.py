@@ -1,0 +1,74 @@
+"""Pallas TPU tiled-reduction checksum kernel.
+
+Computes the (s0, s1) word-sums of `ref.py` over a uint32 word stream
+entirely on device: the words are tiled into (block_rows, 128) VMEM
+stripes, the grid walks the stripes sequentially ("arbitrary" semantics),
+and two (1, 1) SMEM scalars accumulate
+
+    s0 += sum(tile)
+    s1 += sum(tile * (global_word_index + 1))      (all mod 2^32)
+
+Only the two 4-byte scalars ever cross back to the host — the checkpoint
+path never materializes a host-side `tobytes()` copy just to hash it.
+uint32 arithmetic wraps mod 2^32 natively, which is exactly the checksum's
+definition, so no masking is needed on device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .._compat import CompilerParams
+
+_COLS = 128
+
+
+def _checksum_kernel(w_ref, s0_ref, s1_ref, *, block_rows: int):
+    gi = pl.program_id(0)
+
+    @pl.when(gi == 0)
+    def _init():
+        s0_ref[0, 0] = jnp.uint32(0)
+        s1_ref[0, 0] = jnp.uint32(0)
+
+    w = w_ref[...]                                   # (block_rows, 128)
+    base = jnp.uint32(block_rows * _COLS) * gi.astype(jnp.uint32)
+    row = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, _COLS), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (block_rows, _COLS), 1)
+    idx = base + row * jnp.uint32(_COLS) + col + jnp.uint32(1)
+    s0_ref[0, 0] += jnp.sum(w, dtype=jnp.uint32)
+    s1_ref[0, 0] += jnp.sum(w * idx, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def checksum_kernel(words, *, block_rows: int = 8, interpret: bool = False):
+    """words: 1-D uint32 → (s0, s1) uint32 device scalars."""
+    n = words.size
+    rows = -(-n // _COLS)
+    rows_pad = -(-rows // block_rows) * block_rows
+    w2 = jnp.pad(words, (0, rows_pad * _COLS - n)).reshape(rows_pad, _COLS)
+
+    kernel = functools.partial(_checksum_kernel, block_rows=block_rows)
+    s0, s1 = pl.pallas_call(
+        kernel,
+        grid=(rows_pad // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, _COLS), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), jnp.uint32),
+            jax.ShapeDtypeStruct((1, 1), jnp.uint32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(w2)
+    return s0[0, 0], s1[0, 0]

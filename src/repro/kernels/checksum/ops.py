@@ -1,0 +1,104 @@
+"""Dispatch wrapper for the checkpoint checksum.
+
+`leaf_checksum` routes each leaf to the cheapest correct implementation:
+
+  - host numpy arrays       → vectorized numpy reference (no tobytes copy)
+  - device jax arrays, TPU  → Pallas tiled-reduction kernel (on-device)
+  - device jax arrays, else → jitted jnp reduction (same math, same wrap)
+
+All three compute the identical (s0, s1) word-sum pair defined in
+`ref.py`; parity is asserted in tests/test_checksum.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ref import checksum_words_ref
+
+# Below this many words a kernel launch costs more than it saves.
+_PALLAS_MIN_WORDS = 1 << 15
+
+
+def _device_words(x: jax.Array) -> jax.Array:
+    """Bitcast a device array to its little-endian uint32 word stream,
+    zero-padded to a whole number of words (matches ref._byte_view)."""
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    flat = x.reshape(-1)
+    isz = x.dtype.itemsize
+    if isz == 4:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    if isz == 8:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32).reshape(-1)
+    if isz == 2:
+        u16 = jax.lax.bitcast_convert_type(flat, jnp.uint16)
+        if u16.size % 2:
+            u16 = jnp.concatenate([u16, jnp.zeros((1,), jnp.uint16)])
+        pairs = u16.reshape(-1, 2).astype(jnp.uint32)
+        return pairs[:, 0] | (pairs[:, 1] << 16)
+    if isz == 1:
+        u8 = jax.lax.bitcast_convert_type(flat, jnp.uint8)
+        pad = -u8.size % 4
+        if pad:
+            u8 = jnp.concatenate([u8, jnp.zeros((pad,), jnp.uint8)])
+        quads = u8.reshape(-1, 4).astype(jnp.uint32)
+        return (quads[:, 0] | (quads[:, 1] << 8)
+                | (quads[:, 2] << 16) | (quads[:, 3] << 24))
+    raise TypeError(f"unsupported itemsize {isz} for dtype {x.dtype}")
+
+
+@jax.jit
+def _wordsum_jnp(words):
+    idx = jnp.arange(1, words.size + 1, dtype=jnp.uint32)
+    s0 = jnp.sum(words, dtype=jnp.uint32)
+    s1 = jnp.sum(words * idx, dtype=jnp.uint32)
+    return s0, s1
+
+
+def checksum_words(x, *, interpret: bool = False) -> tuple[int, int]:
+    """(s0, s1) of an array's byte stream via the device path.
+
+    `x` must be a jax array (or convertible); use `checksum_words_ref`
+    for the pure-host path. `interpret=True` forces the Pallas kernel in
+    interpret mode (for CPU parity testing).
+    """
+    words = _device_words(jnp.asarray(x))
+    if words.size == 0:
+        return 0, 0
+    if interpret or (jax.default_backend() == "tpu"
+                     and words.size >= _PALLAS_MIN_WORDS):
+        # lazy: host-only digest paths never pay the pallas import
+        from .kernel import checksum_kernel
+        s0, s1 = checksum_kernel(words, interpret=interpret)
+    else:
+        s0, s1 = _wordsum_jnp(words)
+    return int(s0), int(s1)
+
+
+def checksum_words_device(x: jax.Array):
+    """Like checksum_words but returns the (s0, s1) *device scalars*
+    without forcing a host sync — the async checkpoint path enqueues the
+    reduction alongside the D2H drain and int()s the result on the
+    writer thread. Returns None for empty arrays (checksum (0, 0))."""
+    words = _device_words(jnp.asarray(x))
+    if words.size == 0:
+        return None
+    if (jax.default_backend() == "tpu"
+            and words.size >= _PALLAS_MIN_WORDS):
+        from .kernel import checksum_kernel
+        return checksum_kernel(words)
+    return _wordsum_jnp(words)
+
+
+def leaf_checksum(arr) -> tuple[int, int]:
+    """Type-dispatching entry point used by checkpoint.manifest."""
+    if isinstance(arr, jax.Array):
+        try:
+            return checksum_words(arr)
+        except TypeError:       # exotic itemsize — fall through to host
+            pass
+    return checksum_words_ref(np.asarray(arr))

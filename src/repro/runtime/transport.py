@@ -1,8 +1,13 @@
 """Length-prefixed JSON-over-TCP messaging (the control-plane fabric).
 
-Binary payloads (checkpoints) travel base64-encoded under "b64" keys —
-adequate for the control plane; bulk data paths in the JAX substrate never
-touch this fabric.
+Wire format: an 8-byte header `!II` = (json_len, payload_len), then the
+JSON document, then `payload_len` raw bytes. Control messages set
+payload_len=0 and cost nothing extra; bulk data (checkpoint frames) rides
+the payload channel untouched — no base64 inflation, no json escaping,
+and sendall() works straight from a memoryview of the source buffer.
+Receivers find the payload under msg["_payload"].
+
+The base64 helpers are kept for small blobs embedded in control fields.
 """
 from __future__ import annotations
 
@@ -12,13 +17,17 @@ import socket
 import struct
 from typing import Any, Optional
 
-_HDR = struct.Struct("!I")
+_HDR = struct.Struct("!II")
 MAX_MSG = 512 * 1024 * 1024
 
 
-def send_msg(sock: socket.socket, msg: dict):
+def send_msg(sock: socket.socket, msg: dict,
+             payload: bytes | bytearray | memoryview | None = None):
     data = json.dumps(msg, separators=(",", ":")).encode()
-    sock.sendall(_HDR.pack(len(data)) + data)
+    plen = 0 if payload is None else len(payload)
+    sock.sendall(_HDR.pack(len(data), plen) + data)
+    if plen:
+        sock.sendall(payload)
 
 
 def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
@@ -35,13 +44,19 @@ def recv_msg(sock: socket.socket) -> Optional[dict]:
     hdr = _recv_exact(sock, _HDR.size)
     if hdr is None:
         return None
-    (n,) = _HDR.unpack(hdr)
-    if n > MAX_MSG:
-        raise IOError(f"message too large: {n}")
+    n, plen = _HDR.unpack(hdr)
+    if n > MAX_MSG or plen > MAX_MSG:
+        raise IOError(f"message too large: {n}+{plen}")
     data = _recv_exact(sock, n)
     if data is None:
         return None
-    return json.loads(data)
+    msg = json.loads(data)
+    if plen:
+        payload = _recv_exact(sock, plen)
+        if payload is None:
+            return None
+        msg["_payload"] = payload
+    return msg
 
 
 def connect(host: str, port: int, timeout: float = 10.0) -> socket.socket:

@@ -26,10 +26,10 @@ import numpy as np
 from repro.core.events import RankState
 from repro.core.reinit import ROLLBACK, RollbackSignal, install_sigreinit, \
     reinit_main
+from repro.checkpoint import serde
 from repro.checkpoint.memory_ckpt import BuddyStore
 
-from .transport import connect, listener, pack_bytes, recv_msg, send_msg, \
-    unpack_bytes
+from .transport import connect, listener, recv_msg, send_msg
 
 
 class Worker:
@@ -85,14 +85,19 @@ class Worker:
                     return
                 if msg["type"] == "PUSH_CKPT":
                     self.store.hold(msg["origin"], msg["step"],
-                                    unpack_bytes(msg["b64"]))
+                                    msg["_payload"])
                     send_msg(conn, {"type": "ACK"})
                 elif msg["type"] == "GET_CKPT":
                     held = self.store.held_map(msg["origin"])
-                    send_msg(conn, {
-                        "type": "CKPT",
-                        "steps": {str(s): pack_bytes(b)
-                                  for s, b in held.items()}})
+                    # all retained frames concatenated on the raw payload
+                    # channel; the index maps step -> (offset, length)
+                    index, blobs, off = {}, [], 0
+                    for s, b in held.items():
+                        index[str(s)] = [off, len(b)]
+                        blobs.append(b)
+                        off += len(b)
+                    send_msg(conn, {"type": "CKPT", "steps": index},
+                             payload=b"".join(blobs))
         finally:
             conn.close()
 
@@ -103,7 +108,7 @@ class Worker:
         try:
             s = connect(*addr, timeout=5)
             send_msg(s, {"type": "PUSH_CKPT", "origin": self.rank,
-                         "step": step, "b64": pack_bytes(payload)})
+                         "step": step}, payload=payload)
             recv_msg(s)
             s.close()
         except OSError:
@@ -120,8 +125,9 @@ class Worker:
             msg = recv_msg(s)
             s.close()
             if msg:
-                return {int(k): unpack_bytes(v)
-                        for k, v in msg.get("steps", {}).items()}
+                blob = msg.get("_payload", b"")
+                return {int(k): blob[off:off + n]
+                        for k, (off, n) in msg.get("steps", {}).items()}
         except OSError:
             pass
         return {}
@@ -186,12 +192,11 @@ class Worker:
     # --------------------------------------------------------------- app
 
     def _ckpt_payload(self, step: int, x: np.ndarray) -> bytes:
-        return step.to_bytes(8, "little") + x.tobytes()
+        return serde.to_bytes({"x": x}, extra={"step": step})
 
     def _parse_payload(self, payload: bytes) -> tuple[int, np.ndarray]:
-        step = int.from_bytes(payload[:8], "little")
-        x = np.frombuffer(payload[8:], np.float64).copy()
-        return step, x
+        extra, flat = serde.from_bytes(payload)
+        return int(extra["step"]), np.array(flat["x"])   # writable copy
 
     def _file_path(self, step: int) -> str:
         return os.path.join(self.ckpt_dir, f"rank_{self.rank}.s{step}.bin")

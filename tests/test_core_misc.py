@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (FailureType, FaultInjector, RankState, ROLLBACK,
                         RollbackSignal, reinit_main)

@@ -1,7 +1,6 @@
 """Property tests for Algorithms 1 & 2 (the paper's §3.1 recovery logic)."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 from repro.core import (ClusterView, FailureEvent, FailureType, RankState,
                         apply_recovery, daemon_handle_reinit,

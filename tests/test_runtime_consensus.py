@@ -5,8 +5,7 @@ ranks in a BSP loop with a per-step barrier can be at most one step apart,
 and every rank retains ≥3 checkpoints — so the agreed step is always
 restorable by everyone. This mirrors root._join_arrive + worker.body.
 """
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _hyp import given, settings, st
 
 
 def join_release(avails: dict[int, int]) -> int:

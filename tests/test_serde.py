@@ -1,0 +1,153 @@
+"""Zero-copy serde frames: roundtrip, alignment, memmap, corruption."""
+import os
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.checkpoint import FileCheckpointer, serde
+
+BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _bit_equal(a: np.ndarray, b: np.ndarray) -> bool:
+    a, b = np.asarray(a), np.asarray(b)
+    return (str(a.dtype) == str(b.dtype) and a.shape == b.shape
+            and np.ascontiguousarray(a).reshape(-1).view(np.uint8).tobytes()
+            == np.ascontiguousarray(b).reshape(-1).view(np.uint8).tobytes())
+
+
+def test_roundtrip_explicit_dtypes():
+    rng = np.random.default_rng(0)
+    flat = {
+        "f32": rng.standard_normal((5, 7)).astype(np.float32),
+        "bf16": rng.standard_normal(33).astype(BF16),
+        "f16": rng.standard_normal(9).astype(np.float16),
+        "i8": rng.integers(-100, 100, 13).astype(np.int8),
+        "u64": rng.integers(0, 2**40, 4).astype(np.uint64),
+        "zero_d": np.float32(2.5).reshape(()),
+        "empty": np.zeros((0, 3), np.int32),
+        "bool": rng.random(10) > 0.5,
+    }
+    extra = {"step": 17, "tag": "t"}
+    buf = serde.to_bytes(flat, extra)
+    got_extra, back = serde.from_bytes(buf)
+    assert got_extra == extra
+    assert set(back) == set(flat)
+    for k in flat:
+        assert _bit_equal(flat[k], back[k]), k
+
+
+def test_file_and_bytes_agree(tmp_path):
+    flat = {"a": np.arange(100, dtype=np.float32),
+            "b": np.ones((3, 4), np.float64)}
+    p = str(tmp_path / "f.bin")
+    n = serde.write_file(p, flat, {"x": 1})
+    buf = serde.to_bytes(flat, {"x": 1})
+    assert os.path.getsize(p) == n == len(buf)
+    with open(p, "rb") as f:
+        assert f.read() == buf
+
+
+def test_memmap_views_and_alignment(tmp_path):
+    flat = {"a": np.arange(64, dtype=np.float32),
+            "b": np.arange(7, dtype=np.int8)}
+    p = str(tmp_path / "f.bin")
+    serde.write_file(p, flat)
+    _, mapped = serde.open_file(p, mmap=True)
+    import mmap
+    for k in flat:
+        assert _bit_equal(flat[k], mapped[k])
+        base = mapped[k]
+        while getattr(base, "base", None) is not None:
+            base = base.base
+        # the view chain bottoms out in the file mapping, not a copy
+        assert isinstance(base, (np.memmap, mmap.mmap)), (k, type(base))
+    buf = serde.to_bytes(flat)
+    import json
+    import struct
+    _, hlen, _ = struct.unpack("<8sII", buf[:16])
+    hdr = json.loads(buf[16:16 + hlen])
+    assert all(e["offset"] % serde.ALIGN == 0 for e in hdr["leaves"])
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(IOError):
+        serde.from_bytes(b"NOTMAGIC" + b"\0" * 64)
+    with pytest.raises(IOError):
+        serde.from_bytes(b"\x01")
+
+
+def test_header_growth_fixpoint():
+    """Many leaves push offsets across digit/alignment boundaries; the
+    header must still describe exactly where the data landed."""
+    flat = {f"leaf_{i:03d}": np.full((11,), i, np.float32)
+            for i in range(40)}
+    _, back = serde.from_bytes(serde.to_bytes(flat))
+    for k, v in flat.items():
+        assert _bit_equal(v, back[k]), k
+
+
+@st.composite
+def pytree_leaves(draw):
+    dtype = draw(st.sampled_from(
+        [np.float32, np.float16, np.int32, np.int8, BF16]))
+    shape = tuple(draw(st.lists(st.integers(0, 5), min_size=0,
+                                max_size=3)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+@given(st.dictionaries(st.text(alphabet="abcdef/", min_size=1, max_size=8)
+                       .filter(lambda s: "//" not in s
+                               and not s.startswith("/")
+                               and not s.endswith("/")),
+                       pytree_leaves(), min_size=1, max_size=8))
+@settings(max_examples=30, deadline=None)
+def test_roundtrip_property(flat):
+    buf = serde.to_bytes(flat, {"step": 1})
+    extra, back = serde.from_bytes(buf)
+    assert extra == {"step": 1}
+    assert set(back) == set(flat)
+    for k in flat:
+        assert _bit_equal(flat[k], back[k]), k
+
+
+def test_corruption_caught_by_parallel_verify(tmp_path):
+    """A flipped byte in a memmapped shard is caught by the per-shard
+    parallel verify pass — on whichever shard it lands."""
+    ck = FileCheckpointer(str(tmp_path), n_shards=3)
+    state = {"a": jnp.arange(512.0), "b": jnp.ones((64, 4)),
+             "c": jnp.zeros(33, jnp.int32)}
+    ck.save(5, state)
+    d = str(tmp_path / "step_0000000005")
+    # flip one data byte in every shard that has payload; each must trip
+    import json
+    import struct
+    tripped = 0
+    for i in range(3):
+        p = os.path.join(d, f"shard_{i:05d}.bin")
+        with open(p, "rb") as f:
+            buf = f.read()
+        _, hlen, _ = struct.unpack("<8sII", buf[:16])
+        leaves = json.loads(buf[16:16 + hlen])["leaves"]
+        leaves = [e for e in leaves if e["nbytes"]]
+        if not leaves:
+            continue
+        pos = leaves[0]["offset"] + leaves[0]["nbytes"] // 2
+        with open(p, "r+b") as f:
+            f.seek(pos)
+            old = f.read(1)
+            f.seek(pos)
+            f.write(bytes([old[0] ^ 0x01]))
+        with pytest.raises(IOError, match="corrupt"):
+            ck.load(5)
+        with open(p, "r+b") as f:          # restore for the next shard
+            f.seek(pos)
+            f.write(old)
+        tripped += 1
+    assert tripped >= 2
+    ck.load(5)                              # pristine again: verifies clean
