@@ -18,11 +18,13 @@ import tempfile
 import time
 
 import jax
+import numpy as np
 
 from repro.checkpoint import FileCheckpointer, checkpoint_kind_for
 
 STATE_MB = 64.0
 N_SHARDS = 4
+DELTA_DIRTY_FRAC = 0.05         # steady-state dirtiness of the delta bench
 
 
 def _state(mb: float = STATE_MB):
@@ -77,6 +79,52 @@ def bench_file_io(state=None, *, mb: float = STATE_MB) -> dict:
 
     out["write_speedup"] = out["npz_write_s"] / max(out["bin_write_s"], 1e-9)
     out["read_speedup"] = out["npz_read_s"] / max(out["bin_read_s"], 1e-9)
+    out.update(bench_delta_io(mb=mb))
+    return out
+
+
+def bench_delta_io(*, mb: float = STATE_MB,
+                   dirty_frac: float = DELTA_DIRTY_FRAC) -> dict:
+    """Steady-state delta checkpointing on a `dirty_frac`-dirty state:
+    every save mutates a contiguous `dirty_frac` window of each leaf (a
+    different window each time, like an optimizer walking its state) and
+    writes a tile-range delta against the previous save; reads compose
+    base + deltas and verify the composed digests."""
+    state = {k: np.array(v) for k, v in _state(mb).items()}
+    out = {}
+    with tempfile.TemporaryDirectory() as d, \
+            FileCheckpointer(d, keep=16, n_shards=N_SHARDS,
+                             delta_every=16) as ck:
+        ck.save(1, state)
+        full_bytes = ck.last_write["bytes"]
+        counter = {"step": 1}
+
+        def save_next():
+            s = counter["step"] = counter["step"] + 1
+            for v in state.values():
+                n = v.size
+                w = max(1, int(n * dirty_frac))
+                start = (s * w) % max(1, n - w)
+                v[start:start + w] += 1.0
+            ck.save(s, state)
+
+        out["bin_delta_write_s"] = _time(save_next)
+        assert ck.last_write["kind"] == "delta", ck.last_write
+        out["delta_bytes"] = ck.last_write["bytes"]
+        out["delta_full_bytes"] = full_bytes
+        out["delta_bytes_frac"] = ck.last_write["bytes"] / full_bytes
+        out["delta_dirty_frac"] = dirty_frac
+        loaded = {}
+
+        def read():
+            step, st = ck.load_latest()
+            loaded["state"] = jax.tree.map(lambda a: a + 0, st)
+
+        out["bin_delta_read_s"] = _time(read)
+        # composed restore is bit-exact vs the live state
+        step, st = ck.load_latest()
+        assert all(np.array_equal(np.asarray(st[k]), state[k])
+                   for k in state)
     return out
 
 
@@ -97,6 +145,12 @@ def run(report=print) -> dict:
            f"{io['bin_async_submit_s'] * 1e6:.0f},64MB")
     report(f"table2_file_read_old,{io['npz_read_s'] * 1e6:.0f},64MB")
     report(f"table2_file_read_new,{io['bin_read_s'] * 1e6:.0f},64MB")
+    report(f"table2_file_write_delta,{io['bin_delta_write_s'] * 1e6:.0f},"
+           f"64MB_{io['delta_dirty_frac']:.0%}_dirty")
+    report(f"table2_file_read_delta,{io['bin_delta_read_s'] * 1e6:.0f},"
+           f"64MB_compose")
+    report(f"table2_delta_bytes_frac,0,"
+           f"frac={io['delta_bytes_frac']:.4f}")
     report(f"table2_memory_copy,{t_mem * 1e6:.0f},64MB")
     report(f"table2_write_speedup_new_vs_old,0,"
            f"x={io['write_speedup']:.2f}")

@@ -5,7 +5,9 @@ Prints ``name,us_per_call,derived`` CSV lines. Slow real-process suites
 
 Also writes ``BENCH_checkpoint.json`` at the repo root: machine-readable
 old-vs-new checkpoint write/read/recovery timings, so future PRs have a
-perf trajectory to regress against.
+perf trajectory to regress against. ``--check-regression`` re-measures
+the checkpoint/recovery numbers and exits nonzero when any new-path
+number regressed >20% against the committed file.
 """
 from __future__ import annotations
 
@@ -16,6 +18,7 @@ import traceback
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_checkpoint.json")
+REGRESSION_TOLERANCE = 0.20
 
 
 def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
@@ -31,6 +34,10 @@ def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
         "new": {"write_s": ckpt_io.get("bin_write_s"),
                 "read_s": ckpt_io.get("bin_read_s"),
                 "async_submit_s": ckpt_io.get("bin_async_submit_s")},
+        "delta": {"write_s": ckpt_io.get("bin_delta_write_s"),
+                  "read_s": ckpt_io.get("bin_delta_read_s"),
+                  "bytes_frac": ckpt_io.get("delta_bytes_frac"),
+                  "dirty_frac": ckpt_io.get("delta_dirty_frac")},
         "speedup": {"write": ckpt_io.get("write_speedup"),
                     "read": ckpt_io.get("read_speedup")},
         "memory_copy_s": ckpt_io.get("memory_copy_s"),
@@ -46,8 +53,58 @@ def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
     return True
 
 
+def check_regression(path: str = BENCH_JSON,
+                     tolerance: float = REGRESSION_TOLERANCE) -> int:
+    """Re-measure the fast-path checkpoint/recovery numbers and compare
+    against the committed baseline. >`tolerance` slower on any new-path
+    write/read/recovery number is a failure (exit 1). Speedups or small
+    noise pass."""
+    if not os.path.exists(path):
+        print(f"regression_check_skipped,0,no_baseline:{path}")
+        return 0
+    with open(path) as f:
+        committed = json.load(f)
+    from benchmarks import checkpoint_bench, recovery_time
+
+    def measure() -> dict:
+        ckpt_io = checkpoint_bench.bench_file_io()
+        e2e = recovery_time.e2e_rows(ckpt_io)
+        return {
+            ("new", "write_s"): ckpt_io.get("bin_write_s"),
+            ("new", "read_s"): ckpt_io.get("bin_read_s"),
+            ("new", "recovery_e2e_s"): e2e["recovery_e2e_new_s"],
+            ("delta", "write_s"): ckpt_io.get("bin_delta_write_s"),
+            ("delta", "read_s"): ckpt_io.get("bin_delta_read_s"),
+            ("delta", "bytes_frac"): ckpt_io.get("delta_bytes_frac"),
+        }
+
+    # best of two full passes: container CPU contention makes a single
+    # wall-time sample too noisy to gate on
+    a, b = measure(), measure()
+    fresh = {k: (min(a[k], b[k]) if a[k] is not None and b[k] is not None
+                 else a[k] or b[k]) for k in a}
+    failures = 0
+    for (group, key), now in fresh.items():
+        base = (committed.get(group) or {}).get(key)
+        if base is None or now is None or base <= 0:
+            print(f"regress_{group}_{key},0,no_baseline")
+            continue
+        ratio = now / base
+        status = "OK" if ratio <= 1.0 + tolerance else "REGRESSED"
+        if status == "REGRESSED":
+            failures += 1
+        print(f"regress_{group}_{key},{now * 1e6:.0f},"
+              f"base={base:.6f};ratio={ratio:.2f};{status}")
+    print(f"regression_check,{failures},"
+          f"tolerance={tolerance:.0%};{'FAIL' if failures else 'PASS'}")
+    return 1 if failures else 0
+
+
 def main() -> None:
     fast = "--fast" in sys.argv
+    if "--check-regression" in sys.argv:
+        print("name,us_per_call,derived")
+        sys.exit(check_regression())
     from benchmarks import (app_overhead, checkpoint_bench, recovery_time,
                             step_bench, total_time, trainer_bench)
 

@@ -124,6 +124,12 @@ class Manifest:
     n_shards: int = 1
     extra: dict = dataclasses.field(default_factory=dict)
     algo: str = "wordsum"
+    # delta checkpoints: "full" snapshots stand alone; a "delta" records
+    # only dirty tile ranges against its parent step (chain walked at
+    # load). Digests always describe the *composed* full state, so a
+    # restore through any chain verifies end-to-end.
+    kind: str = "full"
+    base_step: int | None = None
 
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self), sort_keys=True)
@@ -132,13 +138,17 @@ class Manifest:
     def from_json(cls, s: str) -> "Manifest":
         d = json.loads(s)
         d.setdefault("algo", "sha256")   # pre-wordsum manifests
+        d.setdefault("kind", "full")     # pre-delta manifests
+        d.setdefault("base_step", None)
         return cls(**d)
 
     @classmethod
     def build(cls, step: int, flat: Dict[str, Any], shard_of,
               n_shards: int, extra: dict | None = None,
               algo: str = "wordsum",
-              digests: Dict[str, str] | None = None) -> "Manifest":
+              digests: Dict[str, str] | None = None,
+              kind: str = "full",
+              base_step: int | None = None) -> "Manifest":
         """`digests` short-circuits hashing when the caller already
         computed them (e.g. on device, or in a per-shard thread pool)."""
         fn = DIGESTS[algo]
@@ -152,7 +162,8 @@ class Manifest:
 
         leaves = {k: meta(k, v) for k, v in flat.items()}
         return cls(step=step, leaves=leaves, n_shards=n_shards,
-                   extra=extra or {}, algo=algo)
+                   extra=extra or {}, algo=algo, kind=kind,
+                   base_step=base_step)
 
     def verify(self, flat: Dict[str, Any], paths=None) -> list[str]:
         """Returns corrupted/missing leaf paths (empty = OK). With

@@ -17,6 +17,7 @@ next rank):
 """
 from __future__ import annotations
 
+import os
 import threading
 from typing import Any, Callable, Dict, Optional
 
@@ -78,17 +79,44 @@ def restore_from_buddy(buddy_state, mesh: Mesh, rules: ShardingRules,
                      check_rep=False)(buddy_state)
 
 
+class _Spilled:
+    """Marker for a payload tiered out to local disk. `owned` entries
+    were written by the store (deleted on eviction); un-owned entries
+    reference a file some other layer already persisted (e.g. the
+    worker's rank checkpoint file) — the tier must neither rewrite nor
+    delete those."""
+
+    __slots__ = ("path", "nbytes", "kind", "owned")
+
+    def __init__(self, path: str, nbytes: int, kind: str,
+                 owned: bool = True):
+        self.path = path
+        self.nbytes = nbytes
+        self.kind = kind
+        self.owned = owned
+
+
 class BuddyStore:
-    """Rank-local in-memory checkpoint store with a remote buddy copy.
+    """Rank-local in-memory checkpoint store with a remote buddy copy and
+    an optional spill-to-file tier.
 
     `push_remote` is injected by the runtime (worker TCP send); the store
     itself is transport-agnostic so the trainer and tests can use it with a
     plain dict fabric.
+
+    Tiering (the paper's memory/file dichotomy promoted to an LRU tier):
+    with `spill_dir` set, only the `hot_steps` newest steps of each
+    retention window stay resident; older retained payloads are written
+    out as frame files on local disk and read back transparently on
+    access. Spilled serde *base* frames are additionally kept alive past
+    the retention window while a retained delta frame still chains to
+    them, so every retained step stays composable.
     """
 
     def __init__(self, rank: int, world: int,
                  push_remote: Optional[Callable[[int, int, bytes], None]] = None,
-                 *, retain: int = 2):
+                 *, retain: int = 2, spill_dir: Optional[str] = None,
+                 hot_steps: Optional[int] = None):
         self.rank = rank
         self.world = world
         self.push_remote = push_remote
@@ -96,19 +124,123 @@ class BuddyStore:
         # locally and for held buddy copies — retain+1 checkpoints total,
         # enough for the BSP skew of one step plus the rejoin consensus
         self.retain = retain
+        self.spill_dir = spill_dir
+        self.hot_steps = retain + 1 if hot_steps is None else max(1,
+                                                                  hot_steps)
+        self.spilled_bytes = 0          # bytes the tier itself wrote
         self._lock = threading.Lock()
-        self.local: Dict[int, bytes] = {}      # step -> my own bytes
-        self.held: Dict[int, Dict[int, bytes]] = {}   # origin rank -> step -> bytes
+        self.local: Dict[int, Any] = {}      # step -> bytes | _Spilled
+        self._local_disk: Dict[int, str] = {}   # step -> durable path
+        self.held: Dict[int, Dict[int, Any]] = {}  # origin -> step -> ...
 
     @property
     def buddy(self) -> int:
         return (self.rank + 1) % self.world
 
-    def save(self, step: int, payload: bytes):
+    # ----------------------------------------------------------- tiering
+
+    def _payload_kind(self, payload: bytes) -> str:
+        from . import serde
+        return serde.peek_kind(payload)
+
+    def _spill_path(self, tag: str, step: int) -> str:
+        return os.path.join(self.spill_dir, f"{tag}.s{step}.bin")
+
+    def _prune(self, d: Dict[int, Any], latest: int, tag: str,
+               disk_refs: Dict[int, str] | None = None) -> list:
+        """Window policy for one {step: payload} map (caller holds the
+        lock). Keeps [latest - retain, latest]; when the window floor is
+        a delta frame its chain is walked down to the full-frame anchor
+        so every kept step stays composable. Cold entries with a known
+        on-disk copy (`disk_refs`) become zero-I/O reference markers;
+        the rest are returned as the spill worklist [(step, payload,
+        path)] — those file writes happen *outside* the lock (see
+        _spill) so concurrent hold()/held_map() never stall on disk
+        I/O."""
+        lo = latest - self.retain
+        keep = {s for s in d if s >= lo}
+        if keep:
+            # delta frames chain to step-1: walk the window floor's chain
+            # down to its full-frame anchor so every kept step composes
+            kinds = {s: (e.kind if isinstance(e, _Spilled)
+                         else self._payload_kind(e)) for s, e in d.items()}
+            s = min(keep)
+            while kinds.get(s) == "delta" and (s - 1) in d:
+                s -= 1
+                keep.add(s)
+        for s in [s for s in d if s not in keep]:
+            e = d.pop(s)
+            if isinstance(e, _Spilled):
+                if e.owned:
+                    self.spilled_bytes -= e.nbytes
+                    try:
+                        os.unlink(e.path)
+                    except OSError:
+                        pass
+        if self.spill_dir is None:
+            return []
+        hot_floor = latest - (self.hot_steps - 1)
+        work = []
+        for s, e in list(d.items()):
+            if s >= hot_floor or isinstance(e, _Spilled):
+                continue
+            ref = (disk_refs or {}).get(s)
+            if ref is not None:     # durable copy exists: just point at it
+                d[s] = _Spilled(ref, len(e), self._payload_kind(e),
+                                owned=False)
+            else:
+                work.append((s, e, self._spill_path(tag, s)))
+        return work
+
+    def _spill(self, d: Dict[int, Any], work: list):
+        """Write the spill worklist to disk lock-free (payload bytes are
+        immutable), then swap in the markers under the lock; an entry
+        evicted meanwhile just has its fresh file deleted."""
+        for s, payload, path in work:
+            os.makedirs(self.spill_dir, exist_ok=True)
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(payload)
+            os.replace(tmp, path)
+            with self._lock:
+                if d.get(s) is payload:
+                    d[s] = _Spilled(path, len(payload),
+                                    self._payload_kind(payload))
+                    self.spilled_bytes += len(payload)
+                    continue
+            try:
+                os.unlink(path)             # superseded while we wrote
+            except OSError:
+                pass
+
+    def _fetch(self, e) -> bytes:
+        if isinstance(e, _Spilled):
+            with open(e.path, "rb") as f:
+                return f.read()
+        return e
+
+    def resident_bytes(self) -> int:
+        with self._lock:
+            maps = [self.local] + list(self.held.values())
+            return sum(len(e) for m in maps for e in m.values()
+                       if not isinstance(e, _Spilled))
+
+    # ------------------------------------------------------------- store
+
+    def save(self, step: int, payload: bytes,
+             on_disk: Optional[str] = None):
+        """`on_disk`: path of a durable copy of `payload` some other
+        layer already wrote (e.g. the rank's file checkpoint) — the
+        spill tier then references it instead of writing a duplicate."""
         with self._lock:
             self.local[step] = payload
-            self.local = {s: b for s, b in self.local.items()
-                          if s >= step - self.retain}
+            if on_disk is not None:
+                self._local_disk[step] = on_disk
+            work = self._prune(self.local, step, "local",
+                               self._local_disk)
+            for s in [s for s in self._local_disk if s not in self.local]:
+                del self._local_disk[s]
+        self._spill(self.local, work)
         if self.push_remote is not None:
             self.push_remote(self.buddy, step, payload)
 
@@ -117,28 +249,42 @@ class BuddyStore:
         with self._lock:
             d = self.held.setdefault(origin_rank, {})
             d[step] = payload
-            for s in [s for s in d if s < step - self.retain]:
-                del d[s]
+            work = self._prune(d, step, f"held_{origin_rank}")
+        self._spill(d, work)
+
+    def _fetch_map(self, snap: Dict[int, Any]) -> Dict[int, bytes]:
+        """Materialize a snapshot of entries *outside* the lock (disk
+        reads don't stall concurrent save/hold); an entry whose backing
+        file was reaped underneath us is simply dropped — it was out of
+        the window anyway."""
+        out = {}
+        for s, e in snap.items():
+            try:
+                out[s] = self._fetch(e)
+            except OSError:
+                pass
+        return out
 
     def latest_local(self):
-        with self._lock:
-            if not self.local:
-                return None, None
-            s = max(self.local)
-            return s, self.local[s]
+        m = self.local_map()
+        if not m:
+            return None, None
+        s = max(m)
+        return s, m[s]
 
     def latest_held(self, origin_rank: int):
-        with self._lock:
-            d = self.held.get(origin_rank, {})
-            if not d:
-                return None, None
-            s = max(d)
-            return s, d[s]
+        m = self.held_map(origin_rank)
+        if not m:
+            return None, None
+        s = max(m)
+        return s, m[s]
 
     def local_map(self) -> Dict[int, bytes]:
         with self._lock:
-            return dict(self.local)
+            snap = dict(self.local)
+        return self._fetch_map(snap)
 
     def held_map(self, origin_rank: int) -> Dict[int, bytes]:
         with self._lock:
-            return dict(self.held.get(origin_rank, {}))
+            snap = dict(self.held.get(origin_rank, {}))
+        return self._fetch_map(snap)

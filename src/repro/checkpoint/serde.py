@@ -33,16 +33,57 @@ Design points:
 Integrity is *not* this layer's job — digests live in manifest.json
 (file path) or the control message (buddy path), so corruption checks
 can run per-shard in parallel against the mapped views.
+
+Delta frames
+------------
+
+A *delta frame* records only the byte ranges of a state that changed
+since a parent frame, at 4 KB tile granularity (the tile of
+`kernels.checksum` — dirtiness is decided by comparing per-tile
+(s0, s1, mix) digest rows, which on accelerators are computed on device
+so only 12 bytes per tile ever cross to the host):
+
+    offset 0      magic       8 bytes   b"RPROCKD1"
+    offset 8      header_len  u32 LE    byte length of the JSON header
+    offset 12     reserved    u32 LE    0 (format flags, future use)
+    offset 16     header      UTF-8 JSON, header_len bytes
+    ...           zero pad to the next 64-byte boundary
+    data          dirty-range bytes, every range starting on a 64-byte
+                  boundary, in header order
+
+    header JSON: {"version": 1,
+                  "kind":   "delta",
+                  "base":   {"step": <int>},   # parent frame of the chain
+                  "extra":  {...user metadata...},
+                  "leaves": [{"path", "dtype", "shape", "full",
+                              "ranges": [[leaf_off, nbytes, frame_off],
+                                         ...]}, ...]}
+
+Semantics:
+
+  - `base.step` names the immediate parent (deltas chain; a restore
+    walks down to the nearest full frame and re-applies upward).
+  - A leaf with `full: true` carries its complete byte stream (new leaf,
+    or shape/dtype changed) as a single range.
+  - Leaves whose tiles all match the parent are omitted entirely — a
+    clean snapshot's delta is just the header.
+  - `ranges` entries are [offset-in-leaf-bytes, length, offset-in-frame];
+    dirty tiles are merged into maximal runs and the final range is
+    clipped to the leaf's byte length (partial trailing tile).
+  - Composition (`apply_delta`/`compose`) is bit-exact: base + deltas
+    reproduces the full snapshot byte-for-byte, enforced downstream by
+    manifest digests over the composed state.
 """
 from __future__ import annotations
 
 import json
 import struct
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import numpy as np
 
 MAGIC = b"RPROCKP1"
+DELTA_MAGIC = b"RPROCKD1"
 ALIGN = 64
 _FIXED = struct.Struct("<8sII")      # magic, header_len, reserved
 VERSION = 1
@@ -184,3 +225,322 @@ def open_file(path: str, *, mmap: bool = True
         return _parse(mm)
     with open(path, "rb") as f:
         return _parse(f.read())
+
+
+# --------------------------------------------------------------- deltas
+
+def peek_kind(buf) -> str:
+    """'full' | 'delta' for a serde frame, 'raw' for anything else."""
+    head = bytes(buf[:8])
+    if head == MAGIC:
+        return "full"
+    if head == DELTA_MAGIC:
+        return "delta"
+    return "raw"
+
+
+class LeafTiles(NamedTuple):
+    """Per-leaf tile digests plus the identity (byte length, dtype,
+    shape) they were taken over — a leaf reshaped or reinterpreted to
+    the same bytes must never be mistaken for a patchable one."""
+    nbytes: int
+    dtype: str
+    shape: tuple
+    rows: np.ndarray        # (n_tiles, 3) uint32
+
+
+def _leaf_tiles(v, rows=None) -> LeafTiles:
+    from repro.kernels.checksum.ops import tile_checksums
+    meta = v if hasattr(v, "nbytes") else np.asarray(v)
+    return LeafTiles(int(meta.nbytes), str(meta.dtype),
+                     tuple(np.shape(v)),
+                     tile_checksums(v) if rows is None else rows)
+
+
+def tile_digests(flat: Dict[str, Any]) -> Dict[str, LeafTiles]:
+    """Per-leaf LeafTiles — device arrays are digested on device, host
+    arrays by the vectorized numpy reference."""
+    return {k: _leaf_tiles(v) for k, v in flat.items()}
+
+
+class DeltaPlan:
+    """Outcome of diffing a snapshot against its parent's tile digests.
+
+    entries: {path: None (full leaf) | [(leaf_off, nbytes), ...]}; clean
+    leaves are absent. `feasible` is False when the leaf *set* changed in
+    a way a delta cannot express (a leaf disappeared)."""
+
+    def __init__(self, entries, new_tiles, dirty_bytes, total_bytes,
+                 feasible):
+        self.entries = entries
+        self.new_tiles = new_tiles
+        self.dirty_bytes = dirty_bytes
+        self.total_bytes = total_bytes
+        self.feasible = feasible
+
+    @property
+    def dirty_fraction(self) -> float:
+        if not self.feasible:
+            return 1.0
+        return self.dirty_bytes / self.total_bytes if self.total_bytes \
+            else 0.0
+
+
+def delta_plan(flat: Dict[str, Any],
+               prev_tiles: Dict[str, LeafTiles],
+               new_tiles: Dict[str, LeafTiles] | None = None) -> DeltaPlan:
+    """Diff `flat` against the parent snapshot's per-tile digests
+    ({path: LeafTiles} as produced by `tile_digests`).
+
+    `new_tiles` short-circuits digesting when the caller already computed
+    (or enqueued on device) this snapshot's tiles."""
+    from repro.kernels.checksum.ref import TILE_BYTES
+    if new_tiles is None:
+        new_tiles = tile_digests(flat)
+    entries: Dict[str, Any] = {}
+    dirty = total = 0
+    for k, v in flat.items():
+        cur = new_tiles[k]
+        nbytes = int(cur.nbytes)
+        nt = np.asarray(cur.rows)
+        total += nbytes
+        prev = prev_tiles.get(k)
+        if (prev is None or prev[:3] != cur[:3]    # nbytes/dtype/shape
+                or np.asarray(prev.rows).shape != nt.shape):
+            entries[k] = None    # new / reshaped / recast: full leaf
+            dirty += nbytes
+            continue
+        changed = np.any(np.asarray(prev.rows) != nt, axis=1)
+        if not changed.any():
+            continue                               # clean leaf: omitted
+        idx = np.flatnonzero(changed)
+        # merge consecutive dirty tiles into maximal runs
+        splits = np.flatnonzero(np.diff(idx) > 1) + 1
+        ranges = []
+        for run in np.split(idx, splits):
+            off = int(run[0]) * TILE_BYTES
+            end = min((int(run[-1]) + 1) * TILE_BYTES, nbytes)
+            ranges.append((off, end - off))
+            dirty += end - off
+        entries[k] = ranges
+    feasible = all(k in flat for k in prev_tiles)
+    return DeltaPlan(entries, new_tiles, dirty, total, feasible)
+
+
+class ChainPlanner:
+    """The base/delta cadence policy, shared by every delta producer
+    (FileCheckpointer shards, worker buddy pushes): a full frame every
+    `base_every`-th snapshot, tile-range deltas between, degrading to a
+    full frame when the dirty fraction exceeds `max_dirty`, the leaf set
+    changed, or the chain would not anchor (non-monotonic step; with
+    `contiguous`, a parent other than step-1 — the BuddyStore retention
+    walk assumes step-1 chains).
+
+    `decide` is pure; call `commit` only after the frame is durably
+    written so a failed write never corrupts the chain state."""
+
+    def __init__(self, base_every: int, max_dirty: float = 0.5, *,
+                 contiguous: bool = False):
+        self.base_every = base_every
+        self.max_dirty = max_dirty
+        self.contiguous = contiguous
+        self.prev: tuple | None = None        # (step, tiles)
+        self.since_base = 0
+
+    def decide(self, flat: Dict[str, Any], step: int,
+               new_tiles: Dict[str, tuple] | None = None):
+        """-> (kind, plan-or-None, tiles, base_step-or-None)."""
+        if new_tiles is None:
+            new_tiles = tile_digests(flat)
+        prev = self.prev
+        if (self.base_every <= 1 or prev is None or prev[0] >= step
+                or self.since_base >= self.base_every - 1
+                or (self.contiguous and prev[0] != step - 1)):
+            return "full", None, new_tiles, None
+        plan = delta_plan(flat, prev[1], new_tiles)
+        if not plan.feasible or plan.dirty_fraction > self.max_dirty:
+            return "full", None, new_tiles, None
+        return "delta", plan, new_tiles, prev[0]
+
+    def commit(self, step: int, tiles: Dict[str, tuple], kind: str):
+        self.prev = (step, tiles)
+        self.since_base = self.since_base + 1 if kind == "delta" else 0
+
+
+def _delta_layout(flat: Dict[str, Any], plan: DeltaPlan, base_step: int,
+                  extra: dict | None):
+    """(prefix, [(uint8_view, leaf_off, nbytes, frame_off)], frame_size)
+    for the subset of plan entries whose paths are in `flat`."""
+    views = {}
+    entries = []
+    for k in flat:
+        if k not in plan.entries:
+            continue
+        v = _leaf_bytes(flat[k])
+        views[k] = v
+        rng = plan.entries[k]
+        full = rng is None
+        entries.append({"path": k,
+                        "dtype": str(getattr(flat[k], "dtype",
+                                             np.asarray(flat[k]).dtype)),
+                        "shape": list(np.shape(flat[k])),
+                        "full": full,
+                        "ranges": [[0, int(v.size), 0]] if full
+                        else [[o, n, 0] for o, n in rng]})
+    while True:     # same offset/header fixpoint as _layout
+        header = json.dumps({"version": VERSION, "kind": "delta",
+                             "base": {"step": int(base_step)},
+                             "extra": extra or {}, "leaves": entries},
+                            separators=(",", ":")).encode()
+        off = _align(_FIXED.size + len(header))
+        changed = False
+        for e in entries:
+            for r in e["ranges"]:
+                if r[2] != off:
+                    r[2] = off
+                    changed = True
+                off += _align(r[1])
+        if not changed:
+            break
+    data_start = _align(_FIXED.size + len(header))
+    prefix = _FIXED.pack(DELTA_MAGIC, len(header), 0) + header
+    prefix += b"\0" * (data_start - len(prefix))
+    placed = [(views[e["path"]], r[0], r[1], r[2])
+              for e in entries for r in e["ranges"]]
+    return prefix, placed, off
+
+
+def to_delta_bytes(flat: Dict[str, Any], plan: DeltaPlan, *,
+                   base_step: int, extra: dict | None = None) -> bytes:
+    prefix, placed, size = _delta_layout(flat, plan, base_step, extra)
+    buf = bytearray(size)
+    buf[:len(prefix)] = prefix
+    mv = memoryview(buf)
+    for view, leaf_off, n, frame_off in placed:
+        mv[frame_off:frame_off + n] = memoryview(view[leaf_off:
+                                                      leaf_off + n])
+    return bytes(buf)
+
+
+def write_delta_file(path: str, flat: Dict[str, Any], plan: DeltaPlan, *,
+                     base_step: int, extra: dict | None = None) -> int:
+    prefix, placed, size = _delta_layout(flat, plan, base_step, extra)
+    with open(path, "wb") as f:
+        f.write(prefix)
+        pos = len(prefix)
+        for view, leaf_off, n, frame_off in placed:
+            if frame_off > pos:
+                f.write(b"\0" * (frame_off - pos))
+            f.write(memoryview(view[leaf_off:leaf_off + n]))
+            pos = frame_off + n
+        if size > pos:
+            f.write(b"\0" * (size - pos))
+    return size
+
+
+def _parse_delta(buf) -> Tuple[dict, Any]:
+    head = bytes(buf[:_FIXED.size])
+    if len(head) < _FIXED.size:
+        raise IOError("delta frame truncated (no fixed header)")
+    magic, hlen, _ = _FIXED.unpack(head)
+    if magic != DELTA_MAGIC:
+        raise IOError(f"bad delta magic {magic!r}")
+    try:
+        header = json.loads(bytes(buf[_FIXED.size:_FIXED.size + hlen]))
+    except ValueError as e:
+        raise IOError(f"delta header corrupt: {e}") from None
+    mv = buf if isinstance(buf, np.ndarray) else memoryview(buf)
+    return header, mv
+
+
+def delta_base_step(buf) -> int:
+    header, _ = _parse_delta(buf)
+    return int(header["base"]["step"])
+
+
+def apply_delta(flat: Dict[str, np.ndarray], buf,
+                writable: set | None = None
+                ) -> Tuple[dict, int, Dict[str, np.ndarray]]:
+    """Patch one delta frame onto `flat` (a parsed parent snapshot).
+
+    Returns (extra, base_step, new_flat). Untouched leaves pass through
+    as-is (memmap views stay mapped); `full` leaves become views into
+    `buf`; range-patched leaves are materialized copies. Bit-exact.
+
+    `writable` (chain-compose optimization) names leaves the caller
+    already owns as writable copies: those are patched in place instead
+    of re-copied, so a K-link chain materializes each dirty leaf once,
+    not K times. Paths this call materializes are added to the set."""
+    header, mv = _parse_delta(buf)
+    is_arr = isinstance(buf, np.ndarray)
+    out = dict(flat)
+    for e in header["leaves"]:
+        dt = _dtype(e["dtype"])
+        if e["full"]:
+            [[_, n, off]] = e["ranges"]
+            raw = mv[off:off + n]
+            if len(raw) != n:
+                raise IOError(f"delta truncated at leaf {e['path']}")
+            arr = raw.view(dt) if is_arr else np.frombuffer(raw, dtype=dt)
+            out[e["path"]] = arr.reshape(e["shape"])
+            if writable is not None:
+                writable.discard(e["path"])    # back to a read-only view
+            continue
+        cur = out.get(e["path"])
+        if cur is None:
+            raise IOError(f"delta patches unknown leaf {e['path']}")
+        if str(cur.dtype) != e["dtype"]:
+            raise IOError(f"delta dtype mismatch at leaf {e['path']}: "
+                          f"{cur.dtype} vs {e['dtype']}")
+        if writable is None or e["path"] not in writable:
+            cur = np.array(cur)                # writable materialized
+            if writable is not None:
+                writable.add(e["path"])
+        bv = cur.reshape(-1).view(np.uint8)
+        for leaf_off, n, frame_off in e["ranges"]:
+            raw = mv[frame_off:frame_off + n]
+            if len(raw) != n:
+                raise IOError(f"delta truncated at leaf {e['path']}")
+            bv[leaf_off:leaf_off + n] = np.frombuffer(raw, np.uint8) \
+                if not is_arr else raw
+        out[e["path"]] = cur.reshape(e["shape"])
+    return header.get("extra", {}), int(header["base"]["step"]), out
+
+
+def chain_steps(frames: Dict[int, Any], step: int) -> list:
+    """Frame steps [base, ..., step] needed to compose `step`; raises
+    KeyError when the chain is broken."""
+    chain = [step]
+    while True:
+        buf = frames.get(chain[-1])
+        if buf is None:
+            raise KeyError(f"missing frame for step {chain[-1]}")
+        if peek_kind(buf) != "delta":
+            return list(reversed(chain))
+        chain.append(delta_base_step(buf))
+
+
+def composable_steps(frames: Dict[int, Any]) -> list:
+    """Steps whose full state is reconstructible from `frames` alone."""
+    out = []
+    for s in frames:
+        try:
+            chain_steps(frames, s)
+            out.append(s)
+        except (KeyError, IOError):
+            pass
+    return sorted(out)
+
+
+def compose(frames: Dict[int, Any], step: int
+            ) -> Tuple[dict, Dict[str, np.ndarray]]:
+    """Reconstruct the full snapshot at `step` from a {step: frame-bytes}
+    map by walking the delta chain down to its base full frame and
+    re-applying patches upward. Returns (extra of the target frame,
+    flat). Raises KeyError on a broken chain."""
+    chain = chain_steps(frames, step)
+    extra, flat = from_bytes(frames[chain[0]])
+    writable: set = set()
+    for s in chain[1:]:
+        extra, _, flat = apply_delta(flat, frames[s], writable)
+    return extra, flat

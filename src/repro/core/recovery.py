@@ -32,6 +32,11 @@ class RecoveryStrategy:
     tree_broadcasts: int                 # Reinit++: root->daemon REINIT
     # fault-free overhead
     heartbeat: Optional[HeartbeatModel]  # ULFM only
+    # pipelined recovery: survivors redistribute/restore state while the
+    # replacement ranks are still spawning (the REINIT broadcast carries
+    # enough context to start the restore early). CR cannot overlap —
+    # nothing survives the teardown to do the restoring.
+    overlap_restore: bool = False
 
     def checkpoint_kind(self, failure: FailureType) -> str:
         from repro.checkpoint.policy import checkpoint_kind_for
@@ -49,15 +54,18 @@ class RecoveryStrategy:
 
 CR = RecoveryStrategy(
     name="CR", redeploys=True, keeps_jit_cache=False,
-    allrank_collectives=0, tree_broadcasts=0, heartbeat=None)
+    allrank_collectives=0, tree_broadcasts=0, heartbeat=None,
+    overlap_restore=False)
 
 REINIT = RecoveryStrategy(
     name="Reinit++", redeploys=False, keeps_jit_cache=True,
-    allrank_collectives=0, tree_broadcasts=1, heartbeat=None)
+    allrank_collectives=0, tree_broadcasts=1, heartbeat=None,
+    overlap_restore=True)
 
 ULFM = RecoveryStrategy(
     name="ULFM", redeploys=False, keeps_jit_cache=True,
-    # revoke + shrink + agree + spawn/merge — each an all-rank operation
+    # revoke + shrink + agree + spawn/merge — each an all-rank operation;
+    # the agreement rounds serialize against the restore, no overlap
     allrank_collectives=4, tree_broadcasts=0, heartbeat=HeartbeatModel())
 
 STRATEGIES = {s.key: s for s in (CR, REINIT, ULFM)}

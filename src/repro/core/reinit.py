@@ -16,6 +16,7 @@ next safe-point check raises.
 """
 from __future__ import annotations
 
+import contextlib
 import signal
 import threading
 from typing import Callable, Optional
@@ -36,6 +37,12 @@ class _RollbackFlag:
     def __init__(self):
         self._armed = threading.Event()
         self.epoch = 0
+        # True only while the main thread sits inside an interruptible()
+        # region (a blocking wait that is safe to unwind). The paper's
+        # masked/deferred-signal split: SIGREINIT raises *immediately*
+        # inside the region — no polling period — and defers to the next
+        # check() everywhere else.
+        self._interruptible = False
 
     def arm(self, epoch: int = 0):
         self.epoch = epoch
@@ -50,6 +57,18 @@ class _RollbackFlag:
     def clear(self):
         self._armed.clear()
 
+    @contextlib.contextmanager
+    def interruptible(self):
+        """Marks a blocking wait as a safe point: SIGREINIT delivered
+        inside unwinds the wait at once (event-driven rollback, replacing
+        the recovery path's polling sleeps)."""
+        self._interruptible = True
+        try:
+            self.check()          # armed before we blocked: unwind now
+            yield
+        finally:
+            self._interruptible = False
+
 
 ROLLBACK = _RollbackFlag()
 
@@ -59,11 +78,15 @@ SIGREINIT = signal.SIGUSR1
 def install_sigreinit(flag: _RollbackFlag = ROLLBACK):
     """Installs the SIGREINIT (SIGUSR1) handler. Python delivers signals at
     bytecode boundaries in the main thread — the handler arms the flag and
-    also raises immediately when the interpreter is at a safe point, which
-    matches the paper's masked-deferred-signal implementation."""
+    raises immediately when the main thread is inside an
+    ROLLBACK.interruptible() wait (a declared safe point), which matches
+    the paper's masked-deferred-signal implementation."""
 
     def handler(signum, frame):
         flag.arm()
+        if flag._interruptible:
+            flag._armed.clear()
+            raise RollbackSignal(flag.epoch)
 
     signal.signal(SIGREINIT, handler)
 

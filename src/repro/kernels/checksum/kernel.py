@@ -44,6 +44,51 @@ def _checksum_kernel(w_ref, s0_ref, s1_ref, *, block_rows: int):
     s1_ref[0, 0] += jnp.sum(w * idx, dtype=jnp.uint32)
 
 
+def _tile_checksum_kernel(w_ref, out_ref):
+    """One grid step = one 4 KB tile = one (8, 128) block: emit the
+    tile's standalone (s0, s1, m) digest row — the local-weighted
+    word-sum pair plus the nonlinear xor-shift-multiply mix column (the
+    delta checkpointer compares these rows across consecutive
+    snapshots)."""
+    from .ref import MIX_C
+    w = w_ref[...]                                   # (8, 128)
+    row = jax.lax.broadcasted_iota(jnp.uint32, w.shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, w.shape, 1)
+    idx = row * jnp.uint32(_COLS) + col + jnp.uint32(1)
+    mixed = (w ^ (w >> jnp.uint32(16))) * jnp.uint32(MIX_C)
+    out_ref[0, 0] = jnp.sum(w, dtype=jnp.uint32)
+    out_ref[0, 1] = jnp.sum(w * idx, dtype=jnp.uint32)
+    out_ref[0, 2] = jnp.sum(mixed, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tile_checksum_kernel(words, *, interpret: bool = False):
+    """words: 1-D uint32 → (n_tiles, 3) uint32 per-4KB-tile digests.
+
+    The tile is TILE_WORDS = 8*128 words, matching `ref.tile_checksums_ref`
+    bit-for-bit (trailing partial tile zero-padded). Grid steps are
+    independent ("parallel" semantics); only 12 bytes per tile — 0.3% of
+    the data — ever leave the device.
+    """
+    from .ref import TILE_WORDS
+    rows_per_tile = TILE_WORDS // _COLS              # 8
+    n = words.size
+    nt = max(1, -(-n // TILE_WORDS))
+    w2 = jnp.pad(words, (0, nt * TILE_WORDS - n)) \
+        .reshape(nt * rows_per_tile, _COLS)
+    return pl.pallas_call(
+        _tile_checksum_kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((rows_per_tile, _COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (i, 0),
+                               memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((nt, 3), jnp.uint32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(w2)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def checksum_kernel(words, *, block_rows: int = 8, interpret: bool = False):
     """words: 1-D uint32 → (s0, s1) uint32 device scalars."""

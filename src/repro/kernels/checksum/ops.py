@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .ref import checksum_words_ref
+from .ref import TILE_WORDS, checksum_words_ref, tile_checksums_ref
 
 # Below this many words a kernel launch costs more than it saves.
 _PALLAS_MIN_WORDS = 1 << 15
@@ -92,6 +92,51 @@ def checksum_words_device(x: jax.Array):
         from .kernel import checksum_kernel
         return checksum_kernel(words)
     return _wordsum_jnp(words)
+
+
+@jax.jit
+def _tilesum_jnp(words):
+    from .ref import MIX_C
+    n = words.size
+    nt = max(1, -(-n // TILE_WORDS))
+    w = jnp.pad(words, (0, nt * TILE_WORDS - n)).reshape(nt, TILE_WORDS)
+    idx = jnp.arange(1, TILE_WORDS + 1, dtype=jnp.uint32)
+    mixed = (w ^ (w >> jnp.uint32(16))) * jnp.uint32(MIX_C)
+    s0 = jnp.sum(w, axis=1, dtype=jnp.uint32)
+    s1 = jnp.sum(w * idx, axis=1, dtype=jnp.uint32)
+    m = jnp.sum(mixed, axis=1, dtype=jnp.uint32)
+    return jnp.stack([s0, s1, m], axis=1)
+
+
+def tile_checksums_device(x, *, interpret: bool = False):
+    """Per-4KB-tile (s0, s1, mix) digests of a device array, computed on
+    device and returned as *device* (n_tiles, 3) uint32 — the delta
+    checkpoint path enqueues this alongside the D2H drain and
+    np.asarray()s the tiny result (12 B/tile) on the writer thread.
+    Returns None for empty arrays. Same values as `tile_checksums_ref`
+    (parity-tested)."""
+    words = _device_words(jnp.asarray(x))
+    if words.size == 0:
+        return None
+    if interpret or (jax.default_backend() == "tpu"
+                     and words.size >= _PALLAS_MIN_WORDS):
+        from .kernel import tile_checksum_kernel
+        return tile_checksum_kernel(words, interpret=interpret)
+    return _tilesum_jnp(words)
+
+
+def tile_checksums(arr) -> np.ndarray:
+    """Type-dispatching per-tile digest entry point (host ndarray out):
+    device arrays stay on device for the reduction, host arrays go through
+    the vectorized numpy reference."""
+    if isinstance(arr, jax.Array):
+        try:
+            t = tile_checksums_device(arr)
+            return np.zeros((0, 3), np.uint32) if t is None \
+                else np.asarray(t)
+        except TypeError:       # exotic itemsize — fall through to host
+            pass
+    return tile_checksums_ref(np.asarray(arr))
 
 
 def leaf_checksum(arr) -> tuple[int, int]:

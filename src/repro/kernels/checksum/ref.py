@@ -29,6 +29,12 @@ import numpy as np
 M32 = 0xFFFFFFFF
 _CHUNK_WORDS = 1 << 20          # 4 MB per chunk keeps temporaries cache-friendly
 
+# Delta-checkpoint tile: 1024 words = 4 KB. Matches the Pallas kernel's
+# (8, 128) grid block exactly, so one device pass yields both the per-tile
+# digests and (via scalar_from_tiles) the whole-leaf digest.
+TILE_WORDS = 1 << 10
+TILE_BYTES = TILE_WORDS * 4
+
 
 def byte_view(arr: np.ndarray) -> np.ndarray:
     """Flat uint8 view of the array's bytes (copy only if non-contiguous).
@@ -68,4 +74,91 @@ def checksum_words_ref(arr: np.ndarray) -> tuple[int, int]:
         i_tail = words.size + 1
         s0 = (s0 + w_tail) & M32
         s1 = (s1 + i_tail * w_tail) & M32
+    return s0, s1
+
+
+_TILE_ARANGE = np.arange(1, TILE_WORDS + 1, dtype=np.uint32)
+
+# Odd (invertible mod 2^32) diffusion constant for the nonlinear mix
+# column — the golden-ratio multiplier.
+MIX_C = np.uint32(0x9E3779B1)
+
+
+def n_tiles(nbytes: int) -> int:
+    """Tile count of an nbytes-long byte stream (ceil over 4 KB tiles)."""
+    return max(1, -(-nbytes // TILE_BYTES)) if nbytes else 0
+
+
+def _mix(w: np.ndarray) -> np.ndarray:
+    """Nonlinear per-word mix: x ^= x >> 16; x *= MIX_C (mod 2^32)."""
+    return np.multiply(w ^ (w >> np.uint32(16)), MIX_C, dtype=np.uint32)
+
+
+def tile_checksums_ref(arr: np.ndarray) -> np.ndarray:
+    """Per-tile (s0, s1, m) digests of `arr`'s byte stream.
+
+    Each TILE_WORDS-word tile is digested as a standalone word stream:
+    s0/s1 are the local-weighted word-sum pair of `checksum_words_ref`
+    (so `scalar_from_tiles` folds them back into the whole-leaf digest),
+    and m = sum(mix(w)) is a *nonlinear* mix column. The mix is what
+    makes dirtiness detection sound against structured updates: a
+    uniform shift of every word in a tile (e.g. float32 `x *= 2` bumps
+    each exponent, adding 2^23 to every word — and 1024 * 2^23 ≡ 0 mod
+    2^32) is invisible to any linear-in-words sum, but scatters under
+    xor-shift-multiply. Equal rows between two snapshots mean the tile
+    is clean (up to the 96-bit digest).
+
+    Returns shape (n_tiles, 3) uint32; a trailing partial tile is
+    zero-padded (harmless: padding contributes 0 to all three columns
+    and the byte length is fixed by the leaf's dtype/shape).
+    """
+    b = byte_view(np.asarray(arr))
+    nbytes = b.size
+    nt = n_tiles(nbytes)
+    if nt == 0:
+        return np.zeros((0, 3), np.uint32)
+    out = np.zeros((nt, 3), np.uint32)
+    n_main = (nbytes // 4) * 4
+    words = b[:n_main].view(np.uint32)
+    full = words.size // TILE_WORDS
+    if full:
+        w = words[:full * TILE_WORDS].reshape(full, TILE_WORDS)
+        out[:full, 0] = w.sum(axis=1, dtype=np.uint64) & M32
+        out[:full, 1] = np.multiply(w, _TILE_ARANGE,
+                                    dtype=np.uint32) \
+            .sum(axis=1, dtype=np.uint64) & M32
+        out[:full, 2] = _mix(w).sum(axis=1, dtype=np.uint64) & M32
+    rest = words[full * TILE_WORDS:]
+    tail = b[n_main:]
+    if rest.size or tail.size:
+        s0 = int(rest.sum(dtype=np.uint64)) & M32
+        s1 = int(np.multiply(rest, _TILE_ARANGE[:rest.size],
+                             dtype=np.uint32).sum(dtype=np.uint64)) & M32
+        m = int(_mix(rest).sum(dtype=np.uint64)) & M32
+        if tail.size:
+            w_tail = int.from_bytes(tail.tobytes(), "little")
+            s0 = (s0 + w_tail) & M32
+            s1 = (s1 + (rest.size + 1) * w_tail) & M32
+            m = (m + int(_mix(np.array([w_tail], np.uint32))[0])) & M32
+        out[full, 0] = s0
+        out[full, 1] = s1
+        out[full, 2] = m
+    return out
+
+
+def scalar_from_tiles(tiles: np.ndarray) -> tuple[int, int]:
+    """Fold per-tile digests into the whole-stream (s0, s1) pair (the mix
+    column is dirtiness-only and does not participate).
+
+    Tile t's local weights j+1 relate to global weights t*W + j + 1 by
+        s1 = sum_t (s1_t + t*W * s0_t)    (mod 2^32)
+    so the scalar digest costs nothing beyond the tiled pass. Bit-equal to
+    `checksum_words_ref` on the same byte stream (asserted in tests).
+    """
+    t = np.asarray(tiles, dtype=np.uint64)
+    if t.size == 0:
+        return 0, 0
+    s0 = int(t[:, 0].sum()) & M32
+    base = (np.arange(t.shape[0], dtype=np.uint64) * TILE_WORDS) & M32
+    s1 = int(((t[:, 1] + base * t[:, 0]) & M32).sum()) & M32
     return s0, s1

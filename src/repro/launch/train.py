@@ -26,6 +26,9 @@ def main(argv=None):
                     choices=["reinit", "cr", "ulfm"])
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=1)
+    ap.add_argument("--ckpt-delta-every", type=int, default=0,
+                    help="K>1: full file snapshot every K-th save, "
+                         "dirty-tile delta frames between")
     ap.add_argument("--fail-kind", default="",
                     choices=["", "process", "node"])
     ap.add_argument("--seed", type=int, default=0)
@@ -65,6 +68,7 @@ def main(argv=None):
                       warmup_steps=max(args.steps // 10, 1))
     tc = TrainConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
                      ckpt_every=args.ckpt_every, strategy=args.strategy,
+                     ckpt_delta_every=args.ckpt_delta_every,
                      seed=args.seed, log_every=10)
     injector = None
     if args.fail_kind:

@@ -17,7 +17,6 @@ import signal
 import subprocess
 import sys
 import threading
-import time
 
 from repro.core.failure import ChildMonitor
 
@@ -30,7 +29,12 @@ class Daemon:
         self.args = args
         self.workers: dict[int, subprocess.Popen] = {}
         self.worker_socks: dict[int, object] = {}
+        self.last_table: dict | None = None   # newest RANK_TABLE seen
         self.lock = threading.Lock()
+        # serializes writes to worker sockets: the run loop broadcasts
+        # while per-connection threads replay the cached table — two
+        # concurrent sendall()s on one socket could interleave frames
+        self.send_lock = threading.Lock()
 
         self.monitor = ChildMonitor(self._on_child_death)
         self.monitor.start()
@@ -96,7 +100,21 @@ class Daemon:
                     rank = msg["rank"]
                     with self.lock:
                         self.worker_socks[rank] = conn
+                        table = self.last_table
                     send_msg(self.root_sock, {**msg, "node": self.node})
+                    # replay the newest rank table to the late joiner so a
+                    # re-spawned rank starts its buddy pull immediately —
+                    # overlapping the restore with the rest of the
+                    # world's re-registration (survivor entries in the
+                    # cached table stay valid; a stale entry for another
+                    # re-spawned rank just refuses the connect and the
+                    # puller falls back to its file checkpoint)
+                    if table is not None:
+                        try:
+                            with self.send_lock:
+                                send_msg(conn, table)
+                        except OSError:
+                            pass
                 elif t == "KILL_NODE":
                     self._die_hard()
                 else:      # BARRIER / DONE — relay up
@@ -126,9 +144,27 @@ class Daemon:
             socks = dict(self.worker_socks)
         for rank, s in socks.items():
             try:
-                send_msg(s, msg)
+                with self.send_lock:
+                    send_msg(s, msg)
             except OSError:
                 pass
+
+    def _spawn_many(self, ranks, *, restarted: bool, epoch: int):
+        """fork+exec the ranks concurrently — the spawn fan-out inside a
+        node happens in parallel, so a node-failure respawn costs one
+        spawn latency, not len(ranks) of them."""
+        if len(ranks) <= 1:
+            for r in ranks:
+                self.spawn_worker(r, restarted=restarted, epoch=epoch)
+            return
+        threads = [threading.Thread(target=self.spawn_worker, args=(r,),
+                                    kwargs={"restarted": restarted,
+                                            "epoch": epoch})
+                   for r in ranks]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
 
     def run(self):
         while True:
@@ -137,9 +173,8 @@ class Daemon:
                 self._die_hard()      # root gone: tear everything down
             t = msg["type"]
             if t == "SPAWN":          # initial deployment or Algorithm 2
-                for rank in msg["ranks"]:
-                    self.spawn_worker(rank, restarted=msg["restarted"],
-                                      epoch=msg["epoch"])
+                self._spawn_many(msg["ranks"], restarted=msg["restarted"],
+                                 epoch=msg["epoch"])
             elif t == "REINIT":
                 # Algorithm 2: signal survivors, spawn assigned ranks
                 mine = [r for d, r in msg["respawns"] if d == self.node]
@@ -153,19 +188,30 @@ class Daemon:
                         pass
                 for r in mine:
                     self.monitor.unwatch(r)
-                    self.spawn_worker(r, restarted=True, epoch=msg["epoch"])
+                self._spawn_many(mine, restarted=True, epoch=msg["epoch"])
                 send_msg(self.root_sock, {"type": "REINIT_DONE",
                                           "node": self.node,
                                           "epoch": msg["epoch"]})
             elif t in ("RANK_TABLE", "BARRIER_RELEASE", "JOIN_RELEASE",
-                       "SHUTDOWN"):
+                       "FENCE_RELEASE", "SHUTDOWN"):
+                if t == "RANK_TABLE":
+                    with self.lock:
+                        self.last_table = msg
                 self._broadcast_workers(msg)
                 if t == "SHUTDOWN":
-                    time.sleep(0.3)
+                    # join on the children's exits (they os._exit on the
+                    # relayed SHUTDOWN) rather than sleeping a fixed drain
                     with self.lock:
-                        for p in self.workers.values():
-                            if p.poll() is None:
-                                p.terminate()
+                        procs = list(self.workers.values())
+                    for p in procs:
+                        try:
+                            p.wait(timeout=2)
+                        except subprocess.TimeoutExpired:
+                            p.terminate()
+                            try:
+                                p.wait(timeout=1)
+                            except subprocess.TimeoutExpired:
+                                p.kill()
                     os._exit(0)
 
 

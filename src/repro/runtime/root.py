@@ -46,7 +46,8 @@ class Root:
         self.daemon_pids: dict[str, int] = {}
         self.daemon_procs: dict[str, subprocess.Popen] = {}
         self.rank_table: dict[int, tuple[str, int]] = {}
-        self.barrier: dict[tuple[int, int], list] = {}
+        self.barrier: dict[tuple[int, int], dict[int, float]] = {}
+        self.fences: dict[tuple[int, int], int] = {}  # kill-barrier victims
         self.joins: dict[int, dict[int, int]] = {}   # epoch -> rank -> avail
         self.epoch = 0
         self.done: set[int] = set()
@@ -83,7 +84,10 @@ class Root:
         except OSError:
             pass
         if node is not None:
-            self.events.put(("channel_broken", node))
+            # carry the socket identity: a channel that was already
+            # replaced (CR teardown + re-deploy) must not be mistaken
+            # for a failure of the *new* daemon on the same node
+            self.events.put(("channel_broken", (node, conn)))
 
     def _broadcast(self, msg: dict, nodes=None):
         for node, s in list(self.daemon_socks.items()):
@@ -131,10 +135,13 @@ class Root:
         key = (msg["epoch"], msg["step"])
         if msg["epoch"] != self.epoch:
             return                          # stale pre-recovery arrival
-        lst = self.barrier.setdefault(key, [])
-        lst.append(msg["value"])
-        if len(lst) == self.world:
-            total = sum(lst)
+        d = self.barrier.setdefault(key, {})
+        d[msg["rank"]] = msg["value"]
+        if len(d) == self.world:
+            # reduce in rank order: float addition is order-sensitive, and
+            # a deterministic reduction is what makes a recovered run
+            # land on the bit-identical state of the fault-free run
+            total = sum(d[r] for r in sorted(d))
             self._broadcast({"type": "BARRIER_RELEASE",
                              "epoch": key[0], "step": key[1],
                              "value": total})
@@ -144,6 +151,33 @@ class Root:
                 self.report["events"][-1]["rejoin_barrier_s"] = \
                     time.monotonic() - t0
                 self._first_barrier_after_recovery = None
+        else:
+            self._maybe_release_fence(key)
+
+    def _fence_arrive(self, msg):
+        """Deterministic kill barrier: a fault-injecting victim FENCEs at
+        its kill step instead of dying immediately. The fence releases —
+        and only then does the victim die — once every *other* rank has
+        arrived at that step's barrier, i.e. has completed the previous
+        iteration and committed its checkpoint for this step. The
+        consistent cut after recovery is then always exactly the fence
+        step, killing the timing dependence SIGKILL injection used to
+        have."""
+        key = (msg["epoch"], msg["step"])
+        if msg["epoch"] != self.epoch:
+            return
+        self.fences[key] = msg["rank"]
+        self._maybe_release_fence(key)
+
+    def _maybe_release_fence(self, key):
+        victim = self.fences.get(key)
+        if victim is None:
+            return
+        arrived = self.barrier.get(key, {})
+        if len(arrived) >= self.world - 1:
+            self._broadcast({"type": "FENCE_RELEASE",
+                             "epoch": key[0], "step": key[1]})
+            del self.fences[key]
 
     def _join_arrive(self, msg):
         """ORTE-style rejoin barrier + consistent-rollback consensus: the
@@ -193,10 +227,13 @@ class Root:
         cmd = root_handle_failure(self.view, failure)
         self.epoch = cmd.epoch
         self.barrier.clear()
+        self.fences.clear()
         self.joins.clear()
-        # forget lost workers' addresses
+        # forget lost workers' addresses (and a lost node's daemon channel)
         if failure.kind is FailureType.NODE:
             lost = [r.rank for r in cmd.respawns]
+            self.daemon_socks.pop(failure.node, None)
+            self.daemon_pids.pop(failure.node, None)
         else:
             lost = [failure.rank]
         for r in lost:
@@ -205,9 +242,17 @@ class Root:
         self._broadcast({"type": "REINIT", "epoch": self.epoch,
                          "respawns": [[r.daemon, r.rank]
                                       for r in cmd.respawns]})
+        # pipeline the restore with the respawn: push the survivors'
+        # addresses (and the new epoch) out immediately so survivors roll
+        # back and re-spawned ranks begin their buddy pulls while the
+        # rest of the world is still re-registering — the full table
+        # rebroadcast happens when all lost ranks are back
+        self._broadcast({"type": "RANK_TABLE", "epoch": self.epoch,
+                         "partial": True,
+                         "table": {str(k): list(v) for k, v in
+                                   self.rank_table.items()}})
         ev["reinit_broadcast_s"] = time.monotonic() - t0
         ev["t_recover_start"] = t0
-        # table rebroadcast happens when all lost ranks re-register
 
     def _recover_cr(self, ev, failure: FailureEvent):
         t0 = time.monotonic()
@@ -228,6 +273,7 @@ class Root:
         self.daemon_procs.clear()
         self.rank_table.clear()
         self.barrier.clear()
+        self.fences.clear()
         self.joins.clear()
         self.done.clear()
         ev["teardown_s"] = time.monotonic() - t0
@@ -274,8 +320,10 @@ class Root:
             except queue.Empty:
                 raise TimeoutError("cluster stalled")
             if kind == "channel_broken":
-                node = payload
-                if not self.shutting_down and node in self.view.children:
+                node, conn = payload
+                if (not self.shutting_down
+                        and node in self.view.children
+                        and self.daemon_socks.get(node) is conn):
                     self._handle_failure(FailureEvent(
                         kind=FailureType.NODE, node=node))
                 continue
@@ -293,6 +341,14 @@ class Root:
                         kind=FailureType.PROCESS, rank=msg["rank"]))
             elif t == "BARRIER":
                 self._barrier_arrive(msg)
+            elif t == "FENCE":
+                self._fence_arrive(msg)
+            elif t == "REINIT_DONE":
+                ev = self.report["events"][-1] if self.report["events"] \
+                    else None
+                t0 = self._last_recover_start()
+                if ev is not None and t0 is not None:
+                    ev["respawn_done_s"] = time.monotonic() - t0
             elif t == "JOIN":
                 self._join_arrive(msg)
             elif t == "DONE":
@@ -302,10 +358,18 @@ class Root:
         self.shutting_down = True
         self.report["total_s"] = time.monotonic() - t_start
         self._broadcast({"type": "SHUTDOWN"})
-        time.sleep(0.5)
+        # join on the daemons' exits instead of a fixed drain sleep: each
+        # daemon exits once its workers are gone, so a clean shutdown
+        # costs exactly the teardown latency, not a worst-case timer
         for p in self.daemon_procs.values():
-            if p.poll() is None:
+            try:
+                p.wait(timeout=5)
+            except subprocess.TimeoutExpired:
                 p.terminate()
+                try:
+                    p.wait(timeout=2)
+                except subprocess.TimeoutExpired:
+                    p.kill()
         if self.args.report:
             with open(self.args.report, "w") as f:
                 json.dump(self.report, f, indent=2)

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import os
+import shutil
 import signal
 import sys
 import threading
@@ -33,6 +34,10 @@ from .transport import connect, listener, recv_msg, send_msg
 
 
 class Worker:
+    # buddy frames chain deltas against the previous step's push; a full
+    # base every 2nd step keeps chains shorter than the retention window
+    PUSH_BASE_EVERY = 2
+
     def __init__(self, args):
         self.rank = args.rank
         self.world = args.world
@@ -45,8 +50,29 @@ class Worker:
         self.initial_state = (RankState.RESTARTED if args.restarted
                               else RankState.NEW)
 
-        self.store = BuddyStore(self.rank, self.world,
-                                push_remote=self._push_remote)
+        # retention window spills to local disk past the hot step — the
+        # paper's memory/file dichotomy as an LRU tier, exercised by the
+        # real-process runtime on every run. Prior incarnations of this
+        # rank (pre-respawn) are dead by the time we start: reap their
+        # orphaned spill dirs.
+        spill_prefix = f".spill_r{self.rank}_"
+        try:
+            for name in os.listdir(self.ckpt_dir):
+                if name.startswith(spill_prefix) \
+                        and name != spill_prefix + str(os.getpid()):
+                    shutil.rmtree(os.path.join(self.ckpt_dir, name),
+                                  ignore_errors=True)
+        except OSError:
+            pass
+        self.store = BuddyStore(
+            self.rank, self.world, push_remote=self._push_remote,
+            spill_dir=os.path.join(self.ckpt_dir,
+                                   spill_prefix + str(os.getpid())),
+            hot_steps=1)
+        # buddy frame cadence shared with FileCheckpointer's policy;
+        # contiguous: BuddyStore's retention walk assumes step-1 chains
+        self._chain = serde.ChainPlanner(self.PUSH_BASE_EVERY,
+                                         contiguous=True)
         self.rank_table: dict[int, tuple[str, int]] = {}
         self.table_event = threading.Event()
         self.barrier_release: dict[tuple[int, int], float] = {}
@@ -145,6 +171,8 @@ class Worker:
                                    for k, v in msg["table"].items()}
                 self.epoch = msg["epoch"]
                 self.table_event.set()
+                with self.barrier_cv:     # epoch bump unblocks stale waits
+                    self.barrier_cv.notify_all()
             elif t == "BARRIER_RELEASE":
                 with self.barrier_cv:
                     self.barrier_release[(msg["epoch"], msg["step"])] = \
@@ -155,20 +183,43 @@ class Worker:
                     self.barrier_release[("join", msg["epoch"])] = \
                         msg["resume"]
                     self.barrier_cv.notify_all()
+            elif t == "FENCE_RELEASE":
+                with self.barrier_cv:
+                    self.barrier_release[("fence", msg["step"])] = 1
+                    self.barrier_cv.notify_all()
             elif t == "SHUTDOWN":
                 os._exit(0)
 
-    def _wait_release(self, key, epoch):
-        deadline = time.monotonic() + 120
-        with self.barrier_cv:
-            while key not in self.barrier_release:
-                ROLLBACK.check()          # interruptible: SIGREINIT unblocks
-                if self.epoch != epoch:   # recovered into a new epoch
-                    raise RollbackSignal(self.epoch)
-                self.barrier_cv.wait(0.05)
-                if time.monotonic() > deadline:
-                    raise TimeoutError(f"release {key}")
-            return self.barrier_release.pop(key)
+    def _wait_release(self, key, epoch, timeout: float = 120.0):
+        """Event-driven wait: woken by the condition variable (releases,
+        epoch bumps) or unwound instantly by SIGREINIT via the
+        interruptible safe-point — no polling period on the recovery
+        critical path."""
+        deadline = time.monotonic() + timeout
+        try:
+            with self.barrier_cv:
+                while key not in self.barrier_release:
+                    ROLLBACK.check()
+                    if self.epoch != epoch:   # recovered: new epoch
+                        raise RollbackSignal(self.epoch)
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TimeoutError(f"release {key}")
+                    with ROLLBACK.interruptible():
+                        self.barrier_cv.wait(min(remaining, 5.0))
+                return self.barrier_release.pop(key)
+        except RuntimeError as e:
+            # SIGREINIT can land while Condition.wait is re-acquiring the
+            # cv lock; the handler's RollbackSignal aborts the acquire
+            # and the `with` exit then fails releasing an un-held lock,
+            # surfacing as RuntimeError with the rollback swallowed.
+            # The lock is un-held (future acquires are fine) — translate
+            # exactly that case back into the rollback that caused it;
+            # anything else is a real error and propagates.
+            if "lock" not in str(e):
+                raise
+            ROLLBACK.clear()
+            raise RollbackSignal(self.epoch)
 
     def _allreduce(self, step: int, value: float) -> float:
         """BSP collective: tree sum through daemon → root and back."""
@@ -192,10 +243,21 @@ class Worker:
     # --------------------------------------------------------------- app
 
     def _ckpt_payload(self, step: int, x: np.ndarray) -> bytes:
-        return serde.to_bytes({"x": x}, extra={"step": step})
+        """Serde frame for this step — a tile-range delta against the
+        previous step's frame when the state is sparse-dirty (redistribu-
+        tion then moves only dirty bytes), a full frame otherwise or on
+        every PUSH_BASE_EVERY-th step (chain anchor)."""
+        flat = {"x": x}
+        kind, plan, tiles, base = self._chain.decide(flat, step)
+        self._chain.commit(step, tiles, kind)
+        if kind == "delta":
+            return serde.to_delta_bytes(flat, plan, base_step=base,
+                                        extra={"step": step})
+        return serde.to_bytes(flat, extra={"step": step})
 
-    def _parse_payload(self, payload: bytes) -> tuple[int, np.ndarray]:
-        extra, flat = serde.from_bytes(payload)
+    def _compose_state(self, frames: dict[int, bytes], step: int
+                       ) -> tuple[int, np.ndarray]:
+        extra, flat = serde.compose(frames, step)
         return int(extra["step"]), np.array(flat["x"])   # writable copy
 
     def _file_path(self, step: int) -> str:
@@ -238,14 +300,16 @@ class Worker:
         else:
             # NEW: resume from file if one exists — the CR re-deploy path
             avail_map = self._file_map()
-        # --- consistent-cut consensus: resume at min over ranks
-        resume = self._join(max(avail_map, default=0))
+        # --- consistent-cut consensus: resume at min over ranks; a step
+        # counts as available only when its delta chain composes locally
+        composable = serde.composable_steps(avail_map)
+        resume = self._join(max(composable, default=0))
         if resume > 0:
-            if resume not in avail_map:
+            if resume not in composable:
                 raise RuntimeError(
                     f"rank {self.rank}: no ckpt for agreed step {resume}; "
-                    f"have {sorted(avail_map)}")
-            start, x = self._parse_payload(avail_map[resume])
+                    f"have {sorted(composable)}")
+            start, x = self._compose_state(avail_map, resume)
         else:
             start = 0
             rng = np.random.default_rng(self.rank)
@@ -257,11 +321,24 @@ class Worker:
             ROLLBACK.check()
             # fault injection — exactly once per run (paper §4: single
             # failure); the sentinel stops re-spawned/restarted processes
-            # from re-killing themselves at the same step
+            # from re-killing themselves at the same step. The kill waits
+            # behind a FENCE (deterministic kill barrier): the root
+            # releases it once every other rank has arrived at this
+            # step's barrier — i.e. has committed its checkpoint for this
+            # step — so the post-recovery consistent cut is always
+            # exactly `step`, independent of scheduling around SIGKILL.
             if (step == self.fail_step and self.rank == self.fail_rank
                     and not os.path.exists(sentinel)):
                 with open(sentinel, "w") as f:
                     f.write(f"step={step} rank={self.rank}")
+                send_msg(self.daemon_sock, {
+                    "type": "FENCE", "rank": self.rank,
+                    "epoch": self.epoch, "step": step})
+                try:
+                    self._wait_release(("fence", step), self.epoch,
+                                       timeout=60.0)
+                except (RollbackSignal, TimeoutError):
+                    pass          # recovery already racing us: die anyway
                 if self.fail_kind == "node":
                     send_msg(self.daemon_sock, {"type": "KILL_NODE"})
                     time.sleep(10)
@@ -270,16 +347,19 @@ class Worker:
             x = w @ x + 1e-3
             total = self._allreduce(step, float(x.sum()))
             x[0] = total / self.world       # interlocked dependency
-            # checkpoint: memory (local+buddy) and file
+            # checkpoint: file first, then memory (local+buddy) — the
+            # store's spill tier references the rank file already on
+            # disk instead of writing the same bytes twice
             payload = self._ckpt_payload(step + 1, x)
-            self.store.save(step + 1, payload)
             self._save_file(step + 1, payload)
+            self.store.save(step + 1, payload,
+                            on_disk=self._file_path(step + 1))
         send_msg(self.daemon_sock, {
             "type": "DONE", "rank": self.rank,
             "checksum": float(np.sum(x))})
-        # wait for shutdown
-        while True:
-            time.sleep(0.2)
+        # park until SHUTDOWN (control loop exits the process) — an event
+        # wait, not a poll loop
+        threading.Event().wait()
 
     def run(self):
         install_sigreinit()

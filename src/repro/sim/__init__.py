@@ -1,2 +1,2 @@
 from .costs import ClusterCosts, AppProfile, APPS
-from .cluster import simulate_run, SimResult, recovery_time
+from .cluster import simulate_run, SimResult, recovery_time, recovery_e2e

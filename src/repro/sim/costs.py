@@ -34,6 +34,14 @@ class ClusterCosts:
     scheduler_redeploy_s: float = 1.5   # CR: allocator + relaunch
     teardown_s: float = 0.6             # CR: kill + drain the old job
 
+    # --- legacy serialized recovery engine (pre-pipelining): the old
+    # runtime polled instead of waiting on events, and ran respawn,
+    # drain and restore strictly one after another. Charged only to the
+    # non-overlapped e2e path (measured: the removed sleeps were a 0.3 s
+    # respawn/drain poll in the daemon and a 0.5 s drain in the root).
+    poll_respawn_s: float = 0.3         # poll period: expected wait /2
+    poll_drain_s: float = 0.5           # fixed teardown drain sleep
+
     # --- ULFM collectives [Bosilca et al.]: revoke is a flood; shrink and
     # agree are tree/allreduce-style with a per-rank linear component the
     # prototype exhibits at scale (paper Fig. 6: on par with Reinit++ up to

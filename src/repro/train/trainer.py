@@ -50,6 +50,8 @@ class TrainConfig:
     ckpt_dir: str = "/tmp/repro_ckpt"
     ckpt_every: int = 1
     ckpt_shards: int = 4
+    # K>1: full file snapshot every K-th save, dirty-tile deltas between
+    ckpt_delta_every: int = 0
     async_file_ckpt: bool = False
     strategy: str = "reinit"
     # logical deployment (the paper's root/daemon/rank tree)
@@ -87,7 +89,8 @@ class Trainer:
         self.policy = CheckpointPolicy(every_steps=tc.ckpt_every,
                                        async_file=tc.async_file_ckpt)
         self.file_ckpt = FileCheckpointer(tc.ckpt_dir,
-                                          n_shards=tc.ckpt_shards)
+                                          n_shards=tc.ckpt_shards,
+                                          delta_every=tc.ckpt_delta_every)
         # buddy memory checkpoint: (step, state_copy, buddy_copy)
         self.mem_ckpt: Optional[tuple[int, Any, Any]] = None
         self.state: Optional[dict] = None

@@ -1,0 +1,301 @@
+"""Delta checkpoints: tile digests, delta frames, chain compose, tiering.
+
+The load-bearing property: base + N delta frames restores a state
+BIT-EXACTLY equal to a full snapshot — across dtype-boundary leaves
+(bf16/f16/i8), partial trailing tiles, scalars and empties — enforced
+both at the serde layer and through FileCheckpointer's manifest-verified
+composed loads.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.checkpoint import FileCheckpointer, serde
+from repro.checkpoint.manifest import tree_digest
+from repro.checkpoint.memory_ckpt import BuddyStore
+from repro.kernels.checksum.ref import (TILE_BYTES, checksum_words_ref,
+                                        scalar_from_tiles,
+                                        tile_checksums_ref)
+
+BF16 = np.dtype(ml_dtypes.bfloat16)
+
+
+def _bit_equal(a, b) -> bool:
+    a, b = np.asarray(a), np.asarray(b)
+    return (str(a.dtype) == str(b.dtype) and a.shape == b.shape
+            and np.ascontiguousarray(a).reshape(-1).view(np.uint8).tobytes()
+            == np.ascontiguousarray(b).reshape(-1).view(np.uint8).tobytes())
+
+
+# ------------------------------------------------------------ tile digests
+
+def test_tile_digests_fold_to_scalar_checksum():
+    rng = np.random.default_rng(3)
+    for arr in [rng.standard_normal(5).astype(np.float32),
+                rng.standard_normal(TILE_BYTES // 4).astype(np.float32),
+                rng.standard_normal(TILE_BYTES // 4 + 1).astype(np.float32),
+                rng.standard_normal(3000).astype(BF16),
+                rng.integers(0, 255, 3 * TILE_BYTES + 7).astype(np.uint8),
+                np.zeros((0,), np.float32),
+                np.float64(2.5).reshape(())]:
+        tiles = tile_checksums_ref(arr)
+        assert scalar_from_tiles(tiles) == checksum_words_ref(arr)
+
+
+def test_tile_digest_localizes_change():
+    a = np.zeros(4 * TILE_BYTES // 4, np.float32)     # 4 exact tiles
+    b = a.copy()
+    b[TILE_BYTES // 4 + 3] = 1.0                      # dirty tile 1 only
+    ta, tb = tile_checksums_ref(a), tile_checksums_ref(b)
+    changed = np.any(ta != tb, axis=1)
+    assert list(changed) == [False, True, False, False]
+
+
+def test_tile_digest_device_parity():
+    from repro.kernels.checksum.ops import tile_checksums
+    rng = np.random.default_rng(5)
+    for arr in [rng.standard_normal(2048).astype(np.float32),
+                rng.standard_normal(513).astype(np.float16)]:
+        assert np.array_equal(tile_checksums(jnp.asarray(arr)),
+                              tile_checksums_ref(arr))
+
+
+def test_tile_digest_pallas_interpret_parity():
+    from repro.kernels.checksum.kernel import tile_checksum_kernel
+    from repro.kernels.checksum.ops import _device_words
+    rng = np.random.default_rng(6)
+    arr = rng.standard_normal(3 * TILE_BYTES // 4 + 11).astype(np.float32)
+    words = _device_words(jnp.asarray(arr))
+    got = np.asarray(tile_checksum_kernel(words, interpret=True))
+    assert np.array_equal(got, tile_checksums_ref(arr))
+
+
+# ------------------------------------------------------------ serde deltas
+
+def _mutate(flat, rng, n_edits=3):
+    """Randomly mutate a few scattered elements of a few leaves."""
+    out = {k: np.array(v) for k, v in flat.items()}
+    keys = [k for k in out if out[k].size]
+    for k in rng.choice(keys, size=min(n_edits, len(keys)),
+                        replace=False) if keys else []:
+        v = out[k].reshape(-1)
+        idx = rng.integers(0, v.size)
+        v[idx] = v[idx] + np.asarray(1, dtype=v.dtype) \
+            if v.dtype != np.bool_ else ~v[idx]
+    return out
+
+
+@st.composite
+def boundary_leaves(draw):
+    dtype = draw(st.sampled_from(
+        [np.float32, np.float16, np.int8, np.uint64, BF16]))
+    # sizes straddling word/tile boundaries, incl. partial trailing tiles
+    n = draw(st.sampled_from(
+        [0, 1, 3, 7, TILE_BYTES // 4 - 1, TILE_BYTES // 4,
+         TILE_BYTES // 4 + 1, 2 * TILE_BYTES // 4 + 13]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(n).astype(dtype)
+
+
+@given(st.dictionaries(st.text(alphabet="abcd", min_size=1, max_size=4),
+                       boundary_leaves(), min_size=1, max_size=5),
+       st.integers(1, 4), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_base_plus_n_deltas_bit_exact(flat, n_deltas, seed):
+    """base + N chained delta frames == the full snapshot, bit for bit."""
+    rng = np.random.default_rng(seed)
+    frames = {0: serde.to_bytes(flat, {"step": 0})}
+    tiles = serde.tile_digests(flat)
+    cur = flat
+    for step in range(1, n_deltas + 1):
+        cur = _mutate(cur, rng)
+        plan = serde.delta_plan(cur, tiles)
+        frames[step] = serde.to_delta_bytes(cur, plan, base_step=step - 1,
+                                            extra={"step": step})
+        tiles = plan.new_tiles
+    assert serde.composable_steps(frames) == list(range(n_deltas + 1))
+    extra, got = serde.compose(frames, n_deltas)
+    assert extra == {"step": n_deltas}
+    want = serde.from_bytes(serde.to_bytes(cur))[1]   # full-snapshot oracle
+    assert set(got) == set(want)
+    for k in want:
+        assert _bit_equal(want[k], got[k]), k
+
+
+def test_delta_plan_marks_new_and_reshaped_leaves_full():
+    a = {"x": np.arange(100, dtype=np.float32)}
+    tiles = serde.tile_digests(a)
+    b = {"x": np.arange(50, dtype=np.float32),       # reshaped
+         "y": np.ones(10, np.float32)}               # new
+    plan = serde.delta_plan(b, tiles)
+    assert plan.entries["x"] is None and plan.entries["y"] is None
+
+
+def test_delta_plan_marks_same_bytes_reshape_full():
+    """Identical bytes under a different shape/dtype must not be treated
+    as a clean leaf — the composed state would keep the stale shape."""
+    a = {"x": np.arange(1024, dtype=np.float32).reshape(2, 512)}
+    tiles = serde.tile_digests(a)
+    b = {"x": np.asarray(a["x"]).reshape(1024)}        # same bytes
+    plan = serde.delta_plan(b, tiles)
+    assert plan.entries["x"] is None                   # full leaf
+    c = {"x": np.asarray(a["x"]).view(np.int32)}       # same bytes, recast
+    plan = serde.delta_plan(c, tiles)
+    assert plan.entries["x"] is None
+
+
+def test_delta_plan_infeasible_on_removed_leaf():
+    a = {"x": np.ones(4, np.float32), "y": np.ones(4, np.float32)}
+    tiles = serde.tile_digests(a)
+    plan = serde.delta_plan({"x": np.ones(4, np.float32)}, tiles)
+    assert not plan.feasible and plan.dirty_fraction == 1.0
+
+
+def test_clean_snapshot_delta_is_header_only():
+    flat = {"x": np.arange(5000, dtype=np.float32)}
+    tiles = serde.tile_digests(flat)
+    plan = serde.delta_plan(flat, tiles)
+    buf = serde.to_delta_bytes(flat, plan, base_step=1)
+    assert len(buf) < 256
+    _, _, out = serde.apply_delta(serde.from_bytes(
+        serde.to_bytes(flat))[1], buf)
+    assert _bit_equal(out["x"], flat["x"])
+
+
+def test_broken_chain_not_composable():
+    flat = {"x": np.arange(64, dtype=np.float32)}
+    tiles = serde.tile_digests(flat)
+    plan = serde.delta_plan(flat, tiles)
+    d = serde.to_delta_bytes(flat, plan, base_step=1)
+    assert serde.composable_steps({2: d}) == []
+    with pytest.raises(KeyError):
+        serde.compose({2: d}, 2)
+
+
+# --------------------------------------------------------- FileCheckpointer
+
+def test_file_ckpt_delta_chain_roundtrip(tmp_path):
+    ck = FileCheckpointer(str(tmp_path), keep=4, n_shards=3, delta_every=4)
+    rng = np.random.default_rng(0)
+    state = {"a": rng.standard_normal(30000).astype(np.float32),
+             "nest": {"b": rng.standard_normal((64, 9)).astype(np.float32)},
+             "step": np.int32(0)}
+    digests = {}
+    for step in range(1, 7):
+        state = {"a": np.array(state["a"]),
+                 "nest": {"b": np.array(state["nest"]["b"])},
+                 "step": np.int32(step)}
+        state["a"][step * 31:step * 31 + 40] += 1.0
+        ck.save(step, state)
+        digests[step] = tree_digest(state)
+        kind = ck._manifest(step).kind
+        assert kind == ("full" if step in (1, 5) else "delta"), step
+    for step in ck.steps():
+        man, loaded = ck.load(step)
+        assert tree_digest(loaded) == digests[step], step
+
+
+def test_file_ckpt_gc_keeps_chain_anchor(tmp_path):
+    ck = FileCheckpointer(str(tmp_path), keep=2, n_shards=1, delta_every=4)
+    state = {"w": np.arange(20000, dtype=np.float32)}
+    for step in range(1, 4):
+        state = {"w": np.array(state["w"])}
+        state["w"][step] += 1.0
+        ck.save(step, state)
+    # keep=2 would drop step 1, but 2..3 are deltas chained to base 1
+    assert ck.steps() == [1, 2, 3]
+    _, loaded = ck.load(3)
+    assert _bit_equal(loaded["w"], state["w"])
+
+
+def test_file_ckpt_delta_degrades_to_full_on_big_change(tmp_path):
+    ck = FileCheckpointer(str(tmp_path), delta_every=4)
+    state = {"w": np.arange(30000, dtype=np.float32)}
+    ck.save(1, state)
+    state = {"w": state["w"] * 2.0}                    # 100% dirty
+    ck.save(2, state)
+    assert ck._manifest(2).kind == "full"
+
+
+def test_file_ckpt_delta_corruption_detected(tmp_path):
+    """A byte flipped in a *delta* frame fails the composed-state verify."""
+    ck = FileCheckpointer(str(tmp_path), delta_every=4)
+    state = {"w": np.arange(30000, dtype=np.float32)}
+    ck.save(1, state)
+    state = {"w": np.array(state["w"])}
+    state["w"][7] += 1.0
+    ck.save(2, state)
+    assert ck._manifest(2).kind == "delta"
+    shard = os.path.join(str(tmp_path), "step_0000000002", "shard_00000.bin")
+    with open(shard, "r+b") as f:
+        f.seek(os.path.getsize(shard) - 1)             # last data byte
+        old = f.read(1)
+        f.seek(os.path.getsize(shard) - 1)
+        f.write(bytes([old[0] ^ 0x01]))
+    with pytest.raises(IOError, match="corrupt"):
+        ck.load(2)
+
+
+def test_file_ckpt_async_delta_bit_exact(tmp_path):
+    ck = FileCheckpointer(str(tmp_path), n_shards=2, delta_every=3)
+    s1 = {"w": jnp.arange(20000.0)}
+    ck.save(1, s1, async_=True)
+    s2 = {"w": jnp.arange(20000.0).at[77].set(-5.0)}
+    ck.save(2, s2, async_=True)
+    ck.wait()
+    assert ck._manifest(2).kind == "delta"
+    _, loaded = ck.load(2)
+    assert tree_digest(loaded) == tree_digest(jax.device_get(s2))
+
+
+# ------------------------------------------------------- BuddyStore tiering
+
+def test_buddy_store_spills_cold_steps(tmp_path):
+    s = BuddyStore(0, 4, retain=3, spill_dir=str(tmp_path), hot_steps=1)
+    for step in range(1, 8):
+        s.save(step, bytes([step]) * 256)
+    m = s.local_map()
+    assert sorted(m) == [4, 5, 6, 7]
+    assert all(m[k] == bytes([k]) * 256 for k in m)
+    assert s.spilled_bytes == 3 * 256           # 4,5,6 cold
+    assert s.resident_bytes() == 256            # only 7 hot
+    assert len(os.listdir(str(tmp_path))) == 3
+
+
+def test_buddy_store_spill_eviction_deletes_files(tmp_path):
+    s = BuddyStore(0, 2, retain=1, spill_dir=str(tmp_path), hot_steps=1)
+    s.hold(1, 1, b"a" * 64)
+    s.hold(1, 2, b"b" * 64)
+    s.hold(1, 9, b"c" * 64)                     # window slides past 1, 2
+    assert sorted(s.held_map(1)) == [9]
+    assert s.spilled_bytes == 0
+    assert os.listdir(str(tmp_path)) == []
+
+
+def test_buddy_store_spilled_delta_chain_stays_composable(tmp_path):
+    """The spill tier keeps a delta's whole chain alive and composable
+    even when the chain's base has slid out of the retention window."""
+    base = {"x": np.arange(3000, dtype=np.float32)}
+    s = BuddyStore(0, 4, retain=1, spill_dir=str(tmp_path), hot_steps=1)
+    s.save(1, serde.to_bytes(base, {"step": 1}))
+    tiles = serde.tile_digests(base)
+    cur = base
+    for step in range(2, 6):
+        cur = {"x": np.array(cur["x"])}
+        cur["x"][step] += 1.0
+        plan = serde.delta_plan(cur, tiles)
+        s.save(step, serde.to_delta_bytes(cur, plan, base_step=step - 1,
+                                          extra={"step": step}))
+        tiles = plan.new_tiles
+    m = s.local_map()
+    comp = serde.composable_steps(m)
+    assert 5 in comp and 4 in comp
+    extra, flat = serde.compose(m, 5)
+    assert extra == {"step": 5}
+    assert _bit_equal(flat["x"], cur["x"])
