@@ -17,6 +17,10 @@ import sys
 import traceback
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# make `python benchmarks/run.py` work from anywhere: the sibling bench
+# modules import as the `benchmarks` namespace package off the repo root
+if REPO_ROOT not in sys.path:
+    sys.path.insert(0, REPO_ROOT)
 BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_checkpoint.json")
 REGRESSION_TOLERANCE = 0.20
 

@@ -33,7 +33,40 @@ def _one(mode: str, kind: str, tmp: str) -> dict:
         return json.load(f)
 
 
+def bench_buddy_spill(report=print, *, n_steps: int = 24,
+                      payload_kb: int = 256, retain: int = 8,
+                      hot_steps: int = 2) -> dict:
+    """BuddyStore memory/file split under retention pressure (ROADMAP
+    item): a wide retention window with a small hot set forces the LRU
+    tier to spill, and the counters report where the bytes live.
+
+    Returns {spilled_bytes, resident_bytes, spill_frac} and prints the
+    usual CSV rows."""
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    from repro.checkpoint.memory_ckpt import BuddyStore
+
+    payload = os.urandom(payload_kb * 1024)
+    with tempfile.TemporaryDirectory() as spill:
+        store = BuddyStore(0, 4, retain=retain,
+                           spill_dir=spill, hot_steps=hot_steps)
+        for step in range(1, n_steps + 1):
+            store.save(step, payload)
+            store.hold(3, step, payload)      # buddy pushes held for rank 3
+        spilled = store.spilled_bytes
+        resident = store.resident_bytes()
+        total = spilled + resident
+        frac = spilled / total if total else 0.0
+        report(f"buddy_spilled_bytes,{spilled},retain={retain}_"
+               f"hot={hot_steps}")
+        report(f"buddy_resident_bytes,{resident},"
+               f"spill_frac={frac:.2f}")
+    return {"spilled_bytes": spilled, "resident_bytes": resident,
+            "spill_frac": frac}
+
+
 def run(report=print):
+    bench_buddy_spill(report)
     with tempfile.TemporaryDirectory() as tmp:
         results = {}
         for mode in ["reinit", "cr"]:

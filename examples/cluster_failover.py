@@ -1,52 +1,72 @@
 """Real-process cluster failover — the paper's runtime, live.
 
-Deploys a root → 2 daemons (+1 spare) → 4 workers tree of actual POSIX
-processes on this machine, SIGKILLs a node mid-run, and prints the
-measured recovery timeline (Algorithm 1 + 2 + buddy/file checkpoint
-restore + rejoin barrier with rollback consensus).
+Drives declarative failure scenarios (repro.scenarios) through the
+event-driven root -> daemons (+spare) -> workers tree of actual POSIX
+processes: SIGKILLs a rank behind the deterministic FENCE barrier, takes
+a whole node down, kills mid-checkpoint-write, and cascades a second
+failure into an in-flight recovery — then prints each measured recovery
+timeline (Algorithm 1 + 2, pipelined respawn/restore, rollback
+consensus) and checks the recovered state is bit-identical to the
+fault-free run.
 
     PYTHONPATH=src python examples/cluster_failover.py
+
+Set REPRO_DRYRUN=1 to replay the same scenario definitions through the
+calibrated discrete-event simulator instead of spawning processes.
 """
-import json
 import os
-import subprocess
 import sys
 import tempfile
 
 SRC = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
 
+from repro.scenarios import engine                      # noqa: E402
+from repro.scenarios.catalog import (fault_free,        # noqa: E402
+                                     get_scenario)
 
-def run(mode: str, kind: str, tmp: str) -> dict:
-    report = os.path.join(tmp, f"{mode}_{kind}.json")
-    ckpt = os.path.join(tmp, f"ck_{mode}_{kind}")
-    os.makedirs(ckpt, exist_ok=True)
-    cmd = [sys.executable, "-m", "repro.runtime.root",
-           "--nodes", "2", "--ranks-per-node", "2", "--spares", "1",
-           "--steps", "8", "--dim", "1024", "--ckpt-dir", ckpt,
-           "--mode", mode, "--fail-step", "4", "--fail-rank", "1",
-           "--fail-kind", kind, "--report", report]
-    env = dict(os.environ, PYTHONPATH=SRC)
-    subprocess.run(cmd, env=env, check=True, capture_output=True,
-                   timeout=120)
-    with open(report) as f:
-        return json.load(f)
+SHOWCASE = ["proc-sigkill-midstep", "node-sigkill", "ckpt-midwrite-kill",
+            "cascade-respawn-dies"]
+
+DRYRUN = os.environ.get("REPRO_DRYRUN", "") == "1"
 
 
 def main():
+    if DRYRUN:
+        print("== dry run: same scenarios, simulator substrate ==\n")
+        for name in SHOWCASE:
+            sc = get_scenario(name)
+            print(engine.describe(sc))
+            for strat in sc.strategies:
+                out = engine.run_sim(sc, strat)
+                print(f"    {strat:7s} recovery "
+                      f"{out.total_s * 1e3:8.1f} ms "
+                      f"({out.n_recoveries} recovery event(s))")
+            print()
+        return
+
     with tempfile.TemporaryDirectory() as tmp:
-        for mode in ["reinit", "cr"]:
-            for kind in ["process", "node"]:
-                rep = run(mode, kind, tmp)
-                ev = rep["events"][-1]
-                print(f"{mode:7s} {kind:8s} failure: "
-                      f"mpi_recovery={ev['mpi_recovery_s']:.2f}s "
-                      f"resume_step={ev.get('resume_step')} "
-                      f"total={rep['total_s']:.2f}s")
+        ref = engine.run_real(fault_free(get_scenario(SHOWCASE[0]).topology),
+                              "reinit", os.path.join(tmp, "ff"))
+        print(f"fault-free reference: total={ref.total_s:.2f}s\n")
+        for name in SHOWCASE:
+            sc = get_scenario(name)
+            strat = engine.real_strategies(sc)[0]
+            out = engine.run_real(sc, strat, os.path.join(tmp, name))
+            ev = out.detail["events"][-1] if out.detail["events"] else {}
+            bit = "bit-identical" if out.checksums == ref.checksums \
+                else "DIVERGED"
+            print(f"{name:22s} [{strat}] "
+                  f"recoveries={out.n_recoveries} "
+                  f"resume={out.resume_steps or ['-']} "
+                  f"mpi={ev.get('mpi_recovery_s', float('nan')):.2f}s "
+                  f"-> {bit}")
         print("\nReinit++ recovers in place (survivors roll back via "
               "SIGREINIT,\nfailed ranks re-spawn — on the spare node for "
-              "node failures);\nCR tears the whole tree down and "
-              "re-deploys from file checkpoints.")
+              "node failures);\nevery scenario's consistent cut matches "
+              "the schema's declarative oracle.")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,11 @@ recovery breakdown, and then shows the large-scale picture from the
 calibrated simulator (Figures 4/6 reproduction at 16-1024 ranks).
 
     PYTHONPATH=src python examples/compare_strategies.py
+
+Set REPRO_DRYRUN=1 to print only the calibrated-simulator comparison
+(no training).
 """
+import os
 import tempfile
 
 import jax
@@ -20,6 +24,15 @@ from repro.train import AdamWConfig, TokenPipeline, TrainConfig, Trainer
 
 
 def main():
+    if os.environ.get("REPRO_DRYRUN", "") == "1":
+        print("=== dry run: calibrated simulation only ===")
+        print(f"{'ranks':>6} {'CR':>8} {'Reinit++':>9} {'ULFM':>8}")
+        for n in [16, 64, 256, 1024]:
+            ts = [recovery_time(s, n, 'process')['mpi_recovery_s']
+                  for s in ('cr', 'reinit', 'ulfm')]
+            print(f"{n:>6} {ts[0]:>8.2f} {ts[1]:>9.2f} {ts[2]:>8.2f}")
+        return
+
     cfg = reduced(get_config("paper-demo"))
     model = Model(cfg)
     data = TokenPipeline(cfg.vocab_size, 4, 64, seed=0)

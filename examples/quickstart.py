@@ -6,7 +6,11 @@ from the buddy memory checkpoint, and verifies the final parameters are
 bit-identical to an uninterrupted run.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Set REPRO_DRYRUN=1 to print the run plan (config + drawn fault) without
+training.
 """
+import os
 import tempfile
 
 import jax
@@ -20,6 +24,15 @@ from repro.train import AdamWConfig, TokenPipeline, TrainConfig, Trainer
 
 def main():
     cfg = reduced(get_config("paper-demo"))
+    if os.environ.get("REPRO_DRYRUN", "") == "1":
+        inj = FaultInjector(n_ranks=8, n_steps=30,
+                            kind=FailureType.PROCESS, seed=42)
+        print(f"dry run: {cfg.name}, 30 steps, strategy=reinit")
+        print(f"drawn fault: rank {inj.fail_rank} SIGKILL @step "
+              f"{inj.fail_step} (scenario: "
+              f"{inj.scenario.faults[0].point}/"
+              f"{inj.scenario.faults[0].how})")
+        return
     model = Model(cfg)
     data = TokenPipeline(cfg.vocab_size, global_batch=4, seq_len=64, seed=0)
     opt = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=30)

@@ -5,7 +5,10 @@ engine mid-decode, restores from the last snapshot, and shows the resumed
 outputs match an uninterrupted run.
 
     PYTHONPATH=src python examples/serve_batch.py
+
+Set REPRO_DRYRUN=1 to print the serve plan without loading the model.
 """
+import os
 import time
 
 import jax
@@ -22,6 +25,11 @@ def mk_requests():
 
 def main():
     cfg = reduced(get_config("qwen2-7b"))
+    if os.environ.get("REPRO_DRYRUN", "") == "1":
+        reqs = mk_requests()
+        print(f"dry run: {cfg.name}, {len(reqs)} requests through a "
+              f"4-slot engine, snapshot/restore mid-decode")
+        return
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 

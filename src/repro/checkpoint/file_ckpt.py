@@ -53,6 +53,8 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
+from repro.scenarios import hooks
+
 from . import serde
 from .manifest import (Manifest, digest_from_checksum, flatten_leaves,
                        flatten_state, leaf_digest, unflatten_state)
@@ -314,6 +316,9 @@ class FileCheckpointer:
                             p, part, plan, base_step=base_step)
                     else:
                         nbytes[i] = serde.write_file(p, part)
+                    # crash-injection point: this shard's bytes are down,
+                    # the checkpoint is not yet COMMITTED
+                    hooks.fire("ckpt.file.shard", step=step, shard=i)
                     pre = digests or {}
                     return {k: pre.get(k) or leaf_digest(v)
                             for k, v in part.items()}
@@ -327,6 +332,10 @@ class FileCheckpointer:
                                      kind=kind, base_step=base_step)
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 f.write(man.to_json())
+            # crash-injection point: shards + manifest written, COMMITTED
+            # absent — a kill here must leave this step invisible and the
+            # orphaned tmp dir reapable by the next writer's GC
+            hooks.fire("ckpt.file.pre_commit", step=step)
             with open(os.path.join(tmp, "COMMITTED"), "w") as f:
                 f.write("ok")
             final = self._step_dir(step)
@@ -404,6 +413,8 @@ class FileCheckpointer:
             bad.extend(shard_bad)
         writable: set = set()            # each dirty leaf copies once
         for dman in chain[1:]:           # apply memmapped delta frames
+            # interruption point: mid delta-chain compose of a restore
+            hooks.fire("ckpt.file.compose", step=dman.step)
             dd = self._step_dir(dman.step)
             for i in range(dman.n_shards):
                 buf = np.memmap(os.path.join(dd, f"shard_{i:05d}.bin"),

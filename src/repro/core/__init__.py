@@ -14,7 +14,7 @@ from .events import (FailureEvent, FailureType, RankState, RecoveryReport,
 from .protocol import (ClusterView, DaemonActions, apply_recovery,
                        daemon_handle_reinit, root_handle_failure)
 from .failure import (ChannelMonitor, ChildMonitor, FaultInjector,
-                      HeartbeatModel, kill_process)
+                      HeartbeatModel, ScenarioInjector, kill_process)
 from .reinit import (ROLLBACK, RollbackSignal, SIGREINIT, install_sigreinit,
                      reinit_main)
 from .elastic import ElasticManager, MeshEpoch

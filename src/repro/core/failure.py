@@ -116,35 +116,81 @@ class HeartbeatModel:
 
 
 @dataclasses.dataclass
-class FaultInjector:
-    """Pre-draws (step, rank) so every strategy replays the same failure.
+class ScenarioInjector:
+    """Replays a declarative Scenario's step-triggered faults against an
+    in-process driver (the trainer / the simulator): `check(step, view)`
+    returns the FailureEvent of the first un-fired fault due at `step`.
+
+    This is the generalization of the original single-(step, rank)
+    FaultInjector: any number of faults, rank or node targets, each fired
+    exactly once — the scenario file, not code, decides the shape.
+    Phase-point faults (mid-checkpoint-write, mid-recovery) don't flow
+    through check(); they fire through repro.scenarios.hooks at the named
+    interruption points of the real runtime."""
+    scenario: "object"                 # scenarios.schema.Scenario
+    enabled: bool = True
+
+    def __post_init__(self):
+        self._fired: set = set()
+
+    def reset(self):
+        self._fired.clear()
+        self.enabled = True
+
+    def check(self, step: int, view=None) -> Optional[FailureEvent]:
+        if not self.enabled:
+            return None
+        for i, f in enumerate(self.scenario.faults):
+            if i in self._fired or f.point != "step" or f.step != step \
+                    or f.target == "root":
+                continue
+            self._fired.add(i)
+            if f.target == "node":
+                node = view.parent(f.rank) if view is not None else None
+                return FailureEvent(kind=FailureType.NODE, node=node,
+                                    rank=f.rank, at_step=step)
+            return FailureEvent(kind=FailureType.PROCESS, rank=f.rank,
+                                at_step=step)
+        return None
+
+
+@dataclasses.dataclass
+class FaultInjector(ScenarioInjector):
+    """Pre-draws (step, rank) so every strategy replays the same failure —
+    the paper's §4 methodology, kept as a thin shim over ScenarioInjector:
+    the drawn (step, rank) becomes a one-fault Scenario.
 
     kind=NODE kills the rank's whole node (the paper has the victim signal
     its parent daemon instead of itself).
     """
-    n_ranks: int
-    n_steps: int
+    scenario: "object" = None          # synthesized in __post_init__
+    n_ranks: int = 0
+    n_steps: int = 0
     kind: FailureType = FailureType.PROCESS
     seed: int = 0
-    enabled: bool = True
 
     def __post_init__(self):
+        from repro.scenarios.schema import Fault, Scenario, Topology
         rng = random.Random(self.seed)
         lo = max(1, self.n_steps // 4)
         hi = max(lo + 1, (3 * self.n_steps) // 4)
         self.fail_step = rng.randint(lo, hi)
         self.fail_rank = rng.randrange(self.n_ranks)
+        target = "node" if self.kind is FailureType.NODE else "rank"
+        self.scenario = Scenario(
+            name=f"drawn-seed{self.seed}",
+            topology=Topology(nodes=1, ranks_per_node=self.n_ranks,
+                              spares=0),
+            steps=max(self.n_steps, self.fail_step + 1),
+            faults=(Fault(target, self.fail_rank, self.fail_step),),
+        )
+        super().__post_init__()
 
     def check(self, step: int, view=None) -> Optional[FailureEvent]:
-        if not self.enabled or step != self.fail_step:
-            return None
-        self.enabled = False          # single failure per run (paper §4)
-        node = view.parent(self.fail_rank) if view is not None else None
-        if self.kind is FailureType.NODE:
-            return FailureEvent(kind=FailureType.NODE, node=node,
-                                rank=self.fail_rank, at_step=step)
-        return FailureEvent(kind=FailureType.PROCESS, rank=self.fail_rank,
-                            at_step=step)
+        ev = super().check(step, view)
+        if ev is not None:
+            self.enabled = False      # single failure per run (paper §4)
+        return ev
 
 
 def kill_process(pid: int):

@@ -14,6 +14,7 @@ from __future__ import annotations
 import argparse
 import os
 import signal
+import socket
 import subprocess
 import sys
 import threading
@@ -61,6 +62,7 @@ class Daemon:
                "--fail-step", str(a.fail_step),
                "--fail-rank", str(a.fail_rank),
                "--fail-kind", a.fail_kind,
+               "--scenario", a.scenario,
                "--ckpt-dir", a.ckpt_dir,
                "--epoch", str(epoch)]
         if restarted:
@@ -72,10 +74,13 @@ class Daemon:
         self.monitor.watch(rank, proc.pid)
 
     def _on_child_death(self, rank: int, pid: int, status: int):
-        # SIGCHLD: relay to root (paper: daemon notifies, root decides)
+        # SIGCHLD: relay to root (paper: daemon notifies, root decides).
+        # The pid lets the root drop stale reports — a death of an old
+        # incarnation must not be mistaken for the current one's.
         try:
             send_msg(self.root_sock, {"type": "CHILD_DEAD", "rank": rank,
-                                      "node": self.node, "status": status})
+                                      "pid": pid, "node": self.node,
+                                      "status": status})
         except OSError:
             pass
 
@@ -117,6 +122,17 @@ class Daemon:
                             pass
                 elif t == "KILL_NODE":
                     self._die_hard()
+                elif t == "BREAK_CHANNEL":
+                    # network-partition emulation: sever the root channel
+                    # only. The root sees an EOF (node failure), and the
+                    # shutdown wakes our own run loop blocked in recv —
+                    # the partitioned node then fences itself (children
+                    # first), exactly fail-stop semantics.
+                    try:
+                        self.root_sock.shutdown(socket.SHUT_RDWR)
+                        self.root_sock.close()
+                    except OSError:
+                        pass
                 else:      # BARRIER / DONE — relay up
                     send_msg(self.root_sock, msg)
         except OSError:
@@ -168,7 +184,10 @@ class Daemon:
 
     def run(self):
         while True:
-            msg = recv_msg(self.root_sock)
+            try:
+                msg = recv_msg(self.root_sock)
+            except OSError:           # channel broken (possibly injected)
+                msg = None
             if msg is None:
                 self._die_hard()      # root gone: tear everything down
             t = msg["type"]
@@ -192,6 +211,17 @@ class Daemon:
                 send_msg(self.root_sock, {"type": "REINIT_DONE",
                                           "node": self.node,
                                           "epoch": msg["epoch"]})
+            elif t == "KILL_RANK":
+                # root-side stall watchdog: a silent (hung) child cannot
+                # be detected by waitpid — the root orders the kill and
+                # the ensuing SIGCHLD drives the normal failure path
+                with self.lock:
+                    p = self.workers.get(msg["rank"])
+                if p is not None:
+                    try:
+                        os.kill(p.pid, signal.SIGKILL)
+                    except ProcessLookupError:
+                        pass
             elif t in ("RANK_TABLE", "BARRIER_RELEASE", "JOIN_RELEASE",
                        "FENCE_RELEASE", "SHUTDOWN"):
                 if t == "RANK_TABLE":
@@ -225,6 +255,7 @@ def main(argv=None):
     ap.add_argument("--fail-step", type=int, default=-1)
     ap.add_argument("--fail-rank", type=int, default=-1)
     ap.add_argument("--fail-kind", default="process")
+    ap.add_argument("--scenario", default="")
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--pythonpath", default="")
     Daemon(ap.parse_args(argv)).run()

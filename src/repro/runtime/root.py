@@ -29,6 +29,7 @@ import time
 
 from repro.core.events import FailureEvent, FailureType
 from repro.core.protocol import ClusterView, root_handle_failure
+from repro.scenarios.schema import ROOT_INJECTED_EXIT, Scenario
 
 from .transport import listener, recv_msg, send_msg
 
@@ -46,6 +47,7 @@ class Root:
         self.daemon_pids: dict[str, int] = {}
         self.daemon_procs: dict[str, subprocess.Popen] = {}
         self.rank_table: dict[int, tuple[str, int]] = {}
+        self._rank_pids: dict[int, int] = {}   # rank -> live incarnation
         self.barrier: dict[tuple[int, int], dict[int, float]] = {}
         self.fences: dict[tuple[int, int], int] = {}  # kill-barrier victims
         self.joins: dict[int, dict[int, int]] = {}   # epoch -> rank -> avail
@@ -56,6 +58,17 @@ class Root:
         self.timeline: list[dict] = []
         self.report: dict = {"mode": args.mode, "world": self.world,
                              "events": []}
+        # stall watchdog (armed by --stall-timeout > 0): first-arrival
+        # clocks per open barrier, and the set of ranks already ordered
+        # killed so a slow SIGCHLD doesn't double-fire
+        self.stall_timeout = getattr(args, "stall_timeout", 0.0)
+        self._barrier_seen: dict[tuple, float] = {}
+        self._stall_killed: set[int] = set()
+        # root-target scenario faults: {step: fault_index}
+        self._root_faults: dict[int, int] = {}
+        if getattr(args, "scenario", ""):
+            sc = Scenario.load(args.scenario)
+            self._root_faults = {f.step: i for i, f in sc.root_faults()}
         threading.Thread(target=self._accept_loop, daemon=True).start()
 
     # ------------------------------------------------------------ fabric
@@ -107,6 +120,7 @@ class Root:
                "--world", str(self.world), "--steps", str(a.steps),
                "--dim", str(a.dim), "--fail-step", str(a.fail_step),
                "--fail-rank", str(a.fail_rank), "--fail-kind", a.fail_kind,
+               "--scenario", getattr(a, "scenario", ""),
                "--ckpt-dir", a.ckpt_dir, "--pythonpath", a.pythonpath]
         env = dict(os.environ, PYTHONPATH=a.pythonpath)
         self.daemon_procs[node] = subprocess.Popen(cmd, env=env)
@@ -136,6 +150,7 @@ class Root:
         if msg["epoch"] != self.epoch:
             return                          # stale pre-recovery arrival
         d = self.barrier.setdefault(key, {})
+        self._barrier_seen.setdefault(key, time.monotonic())
         d[msg["rank"]] = msg["value"]
         if len(d) == self.world:
             # reduce in rank order: float addition is order-sensitive, and
@@ -146,6 +161,8 @@ class Root:
                              "epoch": key[0], "step": key[1],
                              "value": total})
             del self.barrier[key]
+            self._barrier_seen.pop(key, None)
+            self._maybe_die_as_root(key[1])
             if getattr(self, "_first_barrier_after_recovery", None) is not None:
                 t0 = self._first_barrier_after_recovery
                 self.report["events"][-1]["rejoin_barrier_s"] = \
@@ -199,7 +216,78 @@ class Root:
                     ev["join_release_s"] = \
                         time.monotonic() - ev["t_recover_start"]
 
+    # ------------------------------------------------- injection/watchdog
+
+    def _maybe_die_as_root(self, step: int):
+        """Root-target fault: die right after releasing this step's
+        barrier. The HNP is Reinit++'s single point of failure — only an
+        external job restart (the engine relaunching this command, the
+        sentinel stopping a re-fire) recovers from it."""
+        idx = self._root_faults.get(step)
+        if idx is None:
+            return
+        sentinel = os.path.join(self.args.ckpt_dir, f"INJECTED_root_f{idx}")
+        try:
+            fd = os.open(sentinel, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return
+        os.write(fd, f"root step={step}".encode())
+        os.close(fd)
+        os._exit(ROOT_INJECTED_EXIT)
+
+    def _check_stalls(self):
+        """Stall watchdog: a barrier stuck past --stall-timeout with a
+        subset of the world arrived means the missing ranks are silent
+        (hung or partitioned but undead) — order their daemons to SIGKILL
+        them; the resulting SIGCHLD drives the ordinary failure path."""
+        if (self.stall_timeout <= 0 or self.recovering
+                or self.shutting_down):
+            return
+        now = time.monotonic()
+        for key, t0 in list(self._barrier_seen.items()):
+            if key[0] != self.epoch or now - t0 < self.stall_timeout:
+                continue
+            arrived = set(self.barrier.get(key, {}))
+            missing = set(range(self.world)) - arrived - self.done
+            for rank in missing - self._stall_killed:
+                self._stall_killed.add(rank)
+                try:
+                    daemon = self.view.parent(rank)
+                except KeyError:
+                    continue
+                sock = self.daemon_socks.get(daemon)
+                if sock is not None:
+                    try:
+                        send_msg(sock, {"type": "KILL_RANK", "rank": rank})
+                    except OSError:
+                        pass
+
     # ---------------------------------------------------------- recovery
+
+    def _respawn_during_recovery(self, rank: int):
+        """Cascading failure: a rank died while a recovery is already in
+        flight (a replacement dying mid-restore, a survivor dying right
+        after rollback). Merge it into the current recovery — forget its
+        address and any stale consensus vote, re-spawn it at its current
+        daemon, and let it join the in-flight rejoin barrier."""
+        self.rank_table.pop(rank, None)
+        self.joins.get(self.epoch, {}).pop(rank, None)
+        self._pending_respawn.add(rank)
+        try:
+            daemon = self.view.parent(rank)
+        except KeyError:
+            return
+        sock = self.daemon_socks.get(daemon)
+        if sock is None:
+            return      # node recovery in flight; its respawn covers this
+        if self.report["events"]:
+            ev = self.report["events"][-1]
+            ev["cascades"] = ev.get("cascades", 0) + 1
+        try:
+            send_msg(sock, {"type": "SPAWN", "ranks": [rank],
+                            "restarted": True, "epoch": self.epoch})
+        except OSError:
+            pass
 
     def _handle_failure(self, failure: FailureEvent):
         if self.shutting_down:
@@ -227,6 +315,8 @@ class Root:
         cmd = root_handle_failure(self.view, failure)
         self.epoch = cmd.epoch
         self.barrier.clear()
+        self._barrier_seen.clear()
+        self._stall_killed.clear()
         self.fences.clear()
         self.joins.clear()
         # forget lost workers' addresses (and a lost node's daemon channel)
@@ -272,7 +362,11 @@ class Root:
         self.daemon_pids.clear()
         self.daemon_procs.clear()
         self.rank_table.clear()
+        self._rank_pids.clear()     # every old incarnation died with the
+                                    # teardown; their reports are stale
         self.barrier.clear()
+        self._barrier_seen.clear()
+        self._stall_killed.clear()
         self.fences.clear()
         self.joins.clear()
         self.done.clear()
@@ -314,11 +408,20 @@ class Root:
         t_start = time.monotonic()
         self._first_barrier_after_recovery = None
         self._pending_respawn = set()
+        # with the stall watchdog armed the event wait ticks so silent
+        # ranks are noticed; either way 120 s without any event at all is
+        # a dead cluster
+        tick = 0.5 if self.stall_timeout > 0 else 120.0
+        last_event = time.monotonic()
         while len(self.done) < self.world:
             try:
-                kind, payload = self.events.get(timeout=120)
+                kind, payload = self.events.get(timeout=tick)
             except queue.Empty:
-                raise TimeoutError("cluster stalled")
+                if time.monotonic() - last_event > 120:
+                    raise TimeoutError("cluster stalled")
+                self._check_stalls()
+                continue
+            last_event = time.monotonic()
             if kind == "channel_broken":
                 node, conn = payload
                 if (not self.shutting_down
@@ -332,13 +435,28 @@ class Root:
             if t == "REGISTER_WORKER":
                 self.rank_table[msg["rank"]] = ("127.0.0.1",
                                                 msg["peer_port"])
+                self._rank_pids[msg["rank"]] = msg.get("pid")
+                self._pending_respawn.discard(msg["rank"])
                 self._maybe_broadcast_table()
             elif t == "CHILD_DEAD":
-                if not self.recovering and not self.shutting_down:
-                    # re-registered ranks also produce CHILD_DEAD for their
-                    # old pid; only treat live cluster members as failures
+                # a death report for a pid that is not the rank's current
+                # incarnation is stale (old pid of a re-registered rank,
+                # or a straggler from a torn-down deployment) — drop it
+                pid, known = msg.get("pid"), self._rank_pids.get(msg["rank"])
+                stale = None not in (pid, known) and pid != known
+                if self.shutting_down or stale:
+                    pass
+                elif not self.recovering:
                     self._handle_failure(FailureEvent(
                         kind=FailureType.PROCESS, rank=msg["rank"]))
+                elif known is not None:
+                    # cascading failure mid-recovery: fold into the
+                    # in-flight recovery instead of dropping it (a
+                    # dropped death would stall the rejoin forever).
+                    # known=None means the rank never registered in this
+                    # world — a straggler report from a torn-down
+                    # deployment, not a cascade.
+                    self._respawn_during_recovery(msg["rank"])
             elif t == "BARRIER":
                 self._barrier_arrive(msg)
             elif t == "FENCE":
@@ -388,6 +506,12 @@ def main(argv=None):
     ap.add_argument("--fail-kind", default="process",
                     choices=["process", "node"])
     ap.add_argument("--mode", default="reinit", choices=["reinit", "cr"])
+    ap.add_argument("--scenario", default="",
+                    help="declarative Scenario JSON driving fault "
+                         "injection (supersedes the --fail-* flags)")
+    ap.add_argument("--stall-timeout", type=float, default=0.0,
+                    help="arm the stall watchdog: a barrier stuck this "
+                         "many seconds gets its missing ranks killed")
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--report", default="")
     ap.add_argument("--pythonpath", default=os.environ.get("PYTHONPATH", ""))

@@ -17,6 +17,7 @@ import argparse
 import os
 import shutil
 import signal
+import socket
 import sys
 import threading
 import time
@@ -29,8 +30,91 @@ from repro.core.reinit import ROLLBACK, RollbackSignal, install_sigreinit, \
     reinit_main
 from repro.checkpoint import serde
 from repro.checkpoint.memory_ckpt import BuddyStore
+from repro.scenarios import hooks
+from repro.scenarios.schema import Fault, Scenario
 
 from .transport import connect, listener, recv_msg, send_msg
+
+
+class WorkerInjector:
+    """Executes this rank's share of a Scenario at the named interruption
+    points (installed as the process-global hook target; see
+    repro.scenarios.hooks). Each fault fires exactly once per *run* — an
+    O_EXCL sentinel in the shared checkpoint dir survives respawns, so a
+    restarted incarnation never re-kills itself.
+
+    Faults at point="step" die behind the FENCE kill barrier (the root
+    releases it once every other rank has committed that step's
+    checkpoint), making the post-recovery consistent cut deterministic;
+    phase-point faults interrupt the checkpoint/recovery machinery at
+    their natural program point and rely on the rollback consensus."""
+
+    def __init__(self, worker, plan: list):
+        self.w = worker
+        self.plan = plan                      # [(fault_index, Fault)]
+
+    def __call__(self, point: str, step=None, **ctx):
+        for idx, f in self.plan:
+            if f.point != point:
+                continue
+            if f.step is not None and step is not None and f.step != step:
+                continue
+            if self._claim(idx, point, step):
+                self._execute(f, step)
+
+    def _claim(self, idx: int, point: str, step) -> bool:
+        sentinel = os.path.join(self.w.ckpt_dir, f"INJECTED_f{idx}")
+        try:
+            fd = os.open(sentinel, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            return False
+        os.write(fd, f"rank={self.w.rank} point={point} "
+                     f"step={step}".encode())
+        os.close(fd)
+        return True
+
+    def _fence(self, step):
+        if step is None:
+            return
+        w = self.w
+        try:
+            send_msg(w.daemon_sock, {"type": "FENCE", "rank": w.rank,
+                                     "epoch": w.epoch, "step": step})
+            w._wait_release(("fence", step), w.epoch, timeout=60.0)
+        except (RollbackSignal, TimeoutError, OSError):
+            pass          # recovery already racing us: die anyway
+
+    def _execute(self, f: Fault, step):
+        w = self.w
+        if f.point == "step":
+            self._fence(step)
+        if f.target == "node":
+            # the victim signals its parent daemon (paper §4): SIGKILL
+            # takes the node down silently, a channel break partitions it
+            # (the fail-stop node then fences itself)
+            msg = "BREAK_CHANNEL" if f.how == "channel_break" \
+                else "KILL_NODE"
+            try:
+                send_msg(w.daemon_sock, {"type": msg})
+            except OSError:
+                pass
+            time.sleep(10)
+            os.kill(os.getpid(), signal.SIGKILL)
+        if f.how == "hang":
+            threading.Event().wait()          # silent forever: no SIGCHLD,
+            return                            # channel intact — only the
+                                              # stall watchdog sees this
+        if f.how == "channel_break":
+            # shutdown (not just close): wakes the control loop blocked
+            # in recv with an EOF — it then exits the fail-stop rank
+            try:
+                w.daemon_sock.shutdown(socket.SHUT_RDWR)
+                w.daemon_sock.close()
+            except OSError:
+                pass
+            threading.Event().wait()
+            return
+        os.kill(os.getpid(), signal.SIGKILL)
 
 
 class Worker:
@@ -43,10 +127,8 @@ class Worker:
         self.world = args.world
         self.steps = args.steps
         self.dim = args.dim
-        self.fail_step = args.fail_step
-        self.fail_rank = args.fail_rank
-        self.fail_kind = args.fail_kind
         self.ckpt_dir = args.ckpt_dir
+        hooks.install(WorkerInjector(self, self._injection_plan(args)))
         self.initial_state = (RankState.RESTARTED if args.restarted
                               else RankState.NEW)
 
@@ -91,6 +173,17 @@ class Worker:
             "peer_port": self.peer_port, "pid": os.getpid(),
             "restarted": args.restarted})
         threading.Thread(target=self._control_loop, daemon=True).start()
+
+    def _injection_plan(self, args) -> list:
+        """This rank's (index, Fault) pairs — from a scenario file when
+        given, else synthesized from the legacy --fail-* flags (the
+        original single-kill-point injection, now one schema entry)."""
+        if args.scenario:
+            return Scenario.load(args.scenario).faults_for_rank(self.rank)
+        if args.fail_step >= 0 and args.fail_rank == self.rank:
+            target = "node" if args.fail_kind == "node" else "rank"
+            return [(0, Fault(target, self.rank, args.fail_step))]
+        return []
 
     # ------------------------------------------------------------ fabric
 
@@ -162,7 +255,10 @@ class Worker:
 
     def _control_loop(self):
         while True:
-            msg = recv_msg(self.daemon_sock)
+            try:
+                msg = recv_msg(self.daemon_sock)
+            except OSError:       # channel broken (possibly by injection)
+                msg = None
             if msg is None:
                 os._exit(3)       # daemon died under us: node is gone
             t = msg["type"]
@@ -267,6 +363,10 @@ class Worker:
         tmp = self._file_path(step) + ".tmp"
         with open(tmp, "wb") as f:
             f.write(payload)
+        # mid-checkpoint-write interruption point: the bytes are on disk
+        # but invisible — a kill here must leave step-1 the newest
+        # loadable checkpoint
+        hooks.fire("worker.ckpt.mid_write", step=step)
         os.replace(tmp, self._file_path(step))
         old = self._file_path(step - 3)
         if os.path.exists(old):
@@ -288,18 +388,24 @@ class Worker:
 
     def body(self, state: RankState) -> int:
         self.table_event.wait(30)     # need the rank table before buddy I/O
-        # --- application recovery (Table 2): gather restorable checkpoints
+        # --- application recovery (Table 2): gather restorable checkpoints.
+        # Maps merge file + memory tiers (identical frame bytes per step):
+        # a rank that committed its file but died before the buddy push
+        # still resumes from the committed step.
         if state is RankState.RESTARTED:
-            avail_map = self._pull_from_buddy()   # memory scheme (process)
-            if not avail_map:
-                avail_map = self._file_map()      # file scheme (node)
+            avail_map = {**self._file_map(),      # file scheme (node)
+                         **self._pull_from_buddy()}   # memory (process)
+            if avail_map:
+                hooks.fire("worker.recovery.pulled")
         elif state is RankState.REINITED:
-            avail_map = self.store.local_map()    # survivors: local memory
-            if not avail_map:
-                avail_map = self._file_map()
+            hooks.fire("worker.recovery.enter")   # survivor just rolled back
+            avail_map = {**self._file_map(),
+                         **self.store.local_map()}    # survivors: memory
         else:
             # NEW: resume from file if one exists — the CR re-deploy path
             avail_map = self._file_map()
+            if avail_map:
+                hooks.fire("worker.recovery.pulled")
         # --- consistent-cut consensus: resume at min over ranks; a step
         # counts as available only when its delta chain composes locally
         composable = serde.composable_steps(avail_map)
@@ -309,6 +415,7 @@ class Worker:
                 raise RuntimeError(
                     f"rank {self.rank}: no ckpt for agreed step {resume}; "
                     f"have {sorted(composable)}")
+            hooks.fire("worker.recovery.compose", step=resume)
             start, x = self._compose_state(avail_map, resume)
         else:
             start = 0
@@ -316,33 +423,17 @@ class Worker:
             x = rng.standard_normal(self.dim)
         w = np.eye(self.dim) * 0.999        # fixed "model"
 
-        sentinel = os.path.join(self.ckpt_dir, "INJECTED")
         for step in range(start, self.steps):
             ROLLBACK.check()
-            # fault injection — exactly once per run (paper §4: single
-            # failure); the sentinel stops re-spawned/restarted processes
-            # from re-killing themselves at the same step. The kill waits
-            # behind a FENCE (deterministic kill barrier): the root
-            # releases it once every other rank has arrived at this
+            # scenario injection — each fault fires exactly once per run
+            # (the injector's O_EXCL sentinel stops re-spawned/restarted
+            # processes from re-killing themselves). Step-point faults
+            # wait behind the FENCE (deterministic kill barrier): the
+            # root releases it once every other rank has arrived at this
             # step's barrier — i.e. has committed its checkpoint for this
             # step — so the post-recovery consistent cut is always
             # exactly `step`, independent of scheduling around SIGKILL.
-            if (step == self.fail_step and self.rank == self.fail_rank
-                    and not os.path.exists(sentinel)):
-                with open(sentinel, "w") as f:
-                    f.write(f"step={step} rank={self.rank}")
-                send_msg(self.daemon_sock, {
-                    "type": "FENCE", "rank": self.rank,
-                    "epoch": self.epoch, "step": step})
-                try:
-                    self._wait_release(("fence", step), self.epoch,
-                                       timeout=60.0)
-                except (RollbackSignal, TimeoutError):
-                    pass          # recovery already racing us: die anyway
-                if self.fail_kind == "node":
-                    send_msg(self.daemon_sock, {"type": "KILL_NODE"})
-                    time.sleep(10)
-                os.kill(os.getpid(), signal.SIGKILL)
+            hooks.fire("step", step=step)
             # BSP compute + collective
             x = w @ x + 1e-3
             total = self._allreduce(step, float(x.sum()))
@@ -352,6 +443,9 @@ class Worker:
             # disk instead of writing the same bytes twice
             payload = self._ckpt_payload(step + 1, x)
             self._save_file(step + 1, payload)
+            # mid-replication interruption point (ReStore): the file is
+            # committed but the buddy never receives this step
+            hooks.fire("worker.ckpt.pre_push", step=step + 1)
             self.store.save(step + 1, payload,
                             on_disk=self._file_path(step + 1))
         send_msg(self.daemon_sock, {
@@ -379,6 +473,7 @@ def main(argv=None):
     ap.add_argument("--fail-step", type=int, default=-1)
     ap.add_argument("--fail-rank", type=int, default=-1)
     ap.add_argument("--fail-kind", default="process")
+    ap.add_argument("--scenario", default="")
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--restarted", action="store_true")
     ap.add_argument("--epoch", type=int, default=0)

@@ -1,0 +1,173 @@
+"""The scenario catalog: every failure shape we assert recovery against.
+
+Each entry is one reproducible experiment (see schema.Scenario) that the
+parametrized harness in tests/test_scenarios.py drives through BOTH
+executors — the calibrated discrete-event simulator (all strategies,
+16-1024 ranks) and the real root/daemon/worker process tree on this host
+(reinit / cr). The breadth mirrors the related work: ReStore's
+failures-during-recovery-and-replication, and Shrink-or-Substitute's
+failure-mode × strategy matrix.
+
+Tags:
+  fast    the subset the default test run / CI `scenario_fast` job
+          executes on the real runtime (the full matrix is `scenario_slow`)
+  slow3   3-node topologies — opt-in in CI (ROADMAP: scale the real
+          runtime past 2 nodes)
+"""
+from __future__ import annotations
+
+from .schema import Fault, Scenario, Topology
+
+T22 = Topology(nodes=2, ranks_per_node=2, spares=1)      # world 4
+T32 = Topology(nodes=3, ranks_per_node=2, spares=1)      # world 6
+
+CATALOG: tuple[Scenario, ...] = (
+    # ------------------------------------------------ process failures
+    Scenario(
+        name="proc-sigkill-midstep",
+        description="The paper's §4 baseline: SIGKILL one rank behind the "
+                    "FENCE at mid-run.",
+        topology=T22, faults=(Fault("rank", 1, 3),),
+        strategies=("reinit", "cr", "ulfm")),
+    Scenario(
+        name="proc-sigkill-rank0",
+        description="Victim is rank 0 — exercises the buddy-ring wrap "
+                    "(rank 0 restores from rank 1, world-1 pushes to 0).",
+        topology=T22, faults=(Fault("rank", 0, 2),),
+        strategies=("reinit", "cr")),
+    Scenario(
+        name="proc-sigkill-early",
+        description="Failure at the first fence-able step: only one "
+                    "checkpoint exists anywhere.",
+        topology=T22, faults=(Fault("rank", 3, 1),),
+        strategies=("reinit", "cr", "ulfm")),
+    Scenario(
+        name="proc-sigkill-late",
+        description="Failure at the second-to-last step: recovery, one "
+                    "step, then straight into shutdown.",
+        topology=T22, faults=(Fault("rank", 2, 4),),
+        strategies=("reinit", "cr")),
+    # --------------------------------------------------- node failures
+    Scenario(
+        name="node-sigkill",
+        description="Whole-node loss (daemon + children): ranks re-hosted "
+                    "on the least-loaded node, restore from file tier.",
+        topology=T22, faults=(Fault("node", 1, 3),),
+        strategies=("reinit", "cr", "ulfm")),
+    Scenario(
+        name="node-sigkill-late",
+        description="Node loss on the other node, late in the run.",
+        topology=T22, faults=(Fault("node", 3, 4),),
+        strategies=("reinit", "cr")),
+    # ------------------------------------- silent / partition failures
+    Scenario(
+        name="proc-hang",
+        description="Rank goes silent (no SIGCHLD, channel intact): only "
+                    "the root's stall watchdog can detect it, then kills "
+                    "and recovers it like a process failure.",
+        topology=T22, faults=(Fault("rank", 1, 3, how="hang"),),
+        stall_timeout_s=6.0,
+        strategies=("reinit", "cr", "ulfm")),
+    Scenario(
+        name="proc-channel-break",
+        description="Rank's control channel to its daemon breaks; the "
+                    "fail-stop rank fences itself and dies, detection via "
+                    "the EOF/SIGCHLD path.",
+        topology=T22, faults=(Fault("rank", 1, 3, how="channel_break"),),
+        strategies=("reinit", "cr")),
+    Scenario(
+        name="node-channel-break",
+        description="Daemon-root channel breaks (network partition): the "
+                    "partitioned node self-fences, root sees a node loss "
+                    "via channel EOF instead of silence.",
+        topology=T22,
+        faults=(Fault("node", 2, 3, how="channel_break"),),
+        strategies=("reinit", "cr"), tags=("fast",)),
+    # --------------------------------- failures inside the ckpt machinery
+    Scenario(
+        name="ckpt-midwrite-kill",
+        description="SIGKILL between the tmp shard write and the atomic "
+                    "rename: the in-flight checkpoint must be invisible "
+                    "and the consensus lands one step back.",
+        topology=T22,
+        faults=(Fault("rank", 1, 3, point="worker.ckpt.mid_write"),),
+        strategies=("reinit", "cr"), tags=("fast",)),
+    Scenario(
+        name="ckpt-prepush-kill",
+        description="ReStore's mid-replication failure: the file commit "
+                    "landed but the buddy copy was never pushed; the "
+                    "merged buddy+file restore still reaches the step.",
+        topology=T22,
+        faults=(Fault("rank", 1, 3, point="worker.ckpt.pre_push"),),
+        strategies=("reinit", "cr"), tags=("fast",)),
+    # ------------------------------------ failures during recovery itself
+    Scenario(
+        name="cascade-respawn-dies",
+        description="The re-spawned replacement dies again right after "
+                    "pulling its frames — recovery of the recovery.",
+        topology=T22,
+        faults=(Fault("rank", 1, 3),
+                Fault("rank", 1, None, point="worker.recovery.pulled")),
+        strategies=("reinit",), tags=("fast",)),
+    Scenario(
+        name="cascade-survivor-dies",
+        description="A survivor dies immediately after its SIGREINIT "
+                    "rollback, while the first recovery is still in "
+                    "flight — the recoveries must merge.",
+        topology=T22,
+        faults=(Fault("rank", 1, 3),
+                Fault("rank", 2, None, point="worker.recovery.enter")),
+        strategies=("reinit",)),
+    Scenario(
+        name="cascade-compose-kill",
+        description="Kill mid delta-chain compose of the restore: the "
+                    "next incarnation re-pulls and re-composes the same "
+                    "frames.",
+        topology=T22,
+        faults=(Fault("rank", 1, 3),
+                Fault("rank", 1, None, point="worker.recovery.compose")),
+        strategies=("reinit",)),
+    # -------------------------------------------------------- root loss
+    Scenario(
+        name="root-restart",
+        description="The HNP itself dies (Reinit++'s single point of "
+                    "failure): only external job restart recovers; the "
+                    "resume step is timing-dependent but the state is "
+                    "still bit-identical.",
+        topology=T22, faults=(Fault("root", step=3),),
+        strategies=("cr",)),
+    # ---------------------------------------------- 3-node topologies
+    Scenario(
+        name="three-node-node-kill",
+        description="Node loss in a 3-node/6-rank tree: re-host on the "
+                    "least-loaded of two surviving nodes (+spare).",
+        topology=T32, faults=(Fault("node", 2, 3),),
+        strategies=("reinit", "cr"), tags=("slow3",)),
+    Scenario(
+        name="three-node-cascade",
+        description="6-rank tree, replacement dies again mid-restore.",
+        topology=T32,
+        faults=(Fault("rank", 4, 3),
+                Fault("rank", 4, None, point="worker.recovery.pulled")),
+        strategies=("reinit",), tags=("slow3",)),
+)
+
+BY_NAME = {s.name: s for s in CATALOG}
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return BY_NAME[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; "
+                       f"known: {sorted(BY_NAME)}") from None
+
+
+def fault_free(topology: Topology, steps: int = 6, dim: int = 64
+               ) -> Scenario:
+    """The reference run every expect_bit_identical scenario is compared
+    against — same topology/steps/dim, zero faults."""
+    return Scenario(name=f"fault-free-{topology.nodes}x"
+                         f"{topology.ranks_per_node}",
+                    faults=(), topology=topology, steps=steps, dim=dim,
+                    strategies=("reinit",))

@@ -1,0 +1,270 @@
+"""Declarative failure-scenario schema.
+
+A `Scenario` is a pure data description of one fault-injected execution:
+
+  who fails    Fault.target — an MPI "rank", its whole "node" (the parent
+               daemon and every child), or the "root" (HNP) itself;
+  when         Fault.step + Fault.point — at the top of iteration N
+               ("step", behind the FENCE kill barrier so the cut is a
+               deterministic consistent cut), mid-checkpoint-write
+               ("worker.ckpt.mid_write": the shard is on disk but not yet
+               renamed), mid-replication ("worker.ckpt.pre_push": the file
+               committed but the buddy copy never sent), or *during an
+               in-flight recovery* ("worker.recovery.*": the ReStore-style
+               cascading failures — a replacement dying mid-restore, a
+               survivor dying right after rollback, a kill mid
+               delta-chain-compose);
+  how          Fault.how — SIGKILL, a broken control channel, or a silent
+               hang (caught by the root's stall watchdog).
+
+The same Scenario object drives both executors (repro.scenarios.engine):
+the discrete-event simulator charges each phase its calibrated cost over
+the real Algorithm-1/2 protocol, and the real-process runtime replays the
+faults on live POSIX processes. The schema is stdlib-only on purpose — it
+is imported by repro.core.failure and by the worker subprocesses, neither
+of which should pull in jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+TARGETS = ("rank", "node", "root")
+HOWS = ("sigkill", "channel_break", "hang")
+
+# Named interruption points. "step" is the only fenced point (the victim
+# declares intent and dies only once every survivor has committed the
+# fence step's checkpoint); the others interrupt a specific phase of the
+# checkpoint or recovery machinery and rely on the rollback consensus
+# (resume = min over ranks) for a consistent cut.
+POINTS = (
+    "step",                      # top of the BSP loop at iteration `step`
+    "worker.ckpt.mid_write",     # rank file written to tmp, not renamed
+    "worker.ckpt.pre_push",      # rank file committed, buddy push not sent
+    "worker.recovery.enter",     # survivor just rolled back (REINITED)
+    "worker.recovery.pulled",    # restoring rank gathered its frames
+    "worker.recovery.compose",   # mid delta-chain compose of the restore
+    # FileCheckpointer-internal points (unit-level crash tests / trainer)
+    "ckpt.file.shard",           # one shard's bytes written
+    "ckpt.file.pre_commit",      # shards + manifest down, COMMITTED not
+    "ckpt.file.compose",         # applying a delta frame during load
+)
+
+CASCADE_POINTS = tuple(p for p in POINTS if p.startswith("worker.recovery."))
+
+#: exit code of an injected root self-kill: the runtime root exits with it
+#: (runtime.root) and the engine recognizes it as "relaunch me" (external
+#: job restart). Lives here so both sides share one definition.
+ROOT_INJECTED_EXIT = 42
+
+#: strategy keys a scenario may request; "ulfm" is sim-only (the measured
+#: runtime implements reinit and cr — see engine.real_strategies).
+STRATEGY_KEYS = ("reinit", "cr", "ulfm")
+STRATEGY_ALIASES = {"reinit++": "reinit", "reinitpp": "reinit",
+                    "restart": "cr", "ulfm-shrink": "ulfm"}
+
+
+def normalize_strategy(name: str) -> str:
+    k = STRATEGY_ALIASES.get(name.lower(), name.lower())
+    if k not in STRATEGY_KEYS:
+        raise ValueError(f"unknown strategy {name!r}; "
+                         f"known: {STRATEGY_KEYS + tuple(STRATEGY_ALIASES)}")
+    return k
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Deployment tree shape (paper Fig. 3)."""
+    nodes: int = 2
+    ranks_per_node: int = 2
+    spares: int = 1
+
+    @property
+    def world(self) -> int:
+        return self.nodes * self.ranks_per_node
+
+    def validate(self):
+        if self.nodes < 1 or self.ranks_per_node < 1 or self.spares < 0:
+            raise ValueError(f"bad topology {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injected failure. `rank` is the victim rank; for target="node"
+    it selects the node hosting that rank; for target="root" it is
+    ignored. `step` is the trigger iteration for point="step", the *save*
+    step for the worker.ckpt.* points, and None (wildcard) for the
+    recovery points, which fire at most once during the recovery that
+    follows the previous fault."""
+    target: str = "rank"
+    rank: int = 0
+    step: Optional[int] = None
+    point: str = "step"
+    how: str = "sigkill"
+
+    def validate(self, topo: Topology, position: int):
+        if self.target not in TARGETS:
+            raise ValueError(f"fault target {self.target!r} not in {TARGETS}")
+        if self.how not in HOWS:
+            raise ValueError(f"fault how {self.how!r} not in {HOWS}")
+        if self.point not in POINTS:
+            raise ValueError(f"fault point {self.point!r} not in {POINTS}")
+        if self.target == "root":
+            if self.how != "sigkill" or self.point != "step":
+                raise ValueError("root faults support only sigkill @step")
+        elif not (0 <= self.rank < topo.world):
+            raise ValueError(f"victim rank {self.rank} outside world "
+                             f"{topo.world}")
+        if self.how == "hang" and self.target != "rank":
+            raise ValueError("hang faults only defined for target='rank'")
+        if self.point in CASCADE_POINTS:
+            if position == 0:
+                raise ValueError(f"{self.point} is a cascade point: it "
+                                 "only fires during a recovery, so it "
+                                 "cannot be the first fault")
+            if self.step is not None:
+                raise ValueError("recovery-point faults take step=None")
+        elif self.step is None or self.step < 1:
+            raise ValueError(f"fault at {self.point} needs step >= 1")
+        if self.point.startswith(("worker.ckpt.", "ckpt.file.")) \
+                and self.target != "rank":
+            raise ValueError("checkpoint-phase faults target a rank")
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A complete, reproducible failure experiment."""
+    name: str
+    faults: tuple[Fault, ...]
+    topology: Topology = Topology()
+    steps: int = 6                      # application iterations
+    dim: int = 64                       # per-rank state size
+    strategies: tuple[str, ...] = ("reinit", "cr", "ulfm")
+    expect_bit_identical: bool = True   # recovered == fault-free state
+    stall_timeout_s: float = 0.0        # >0 arms the root stall watchdog
+    tags: tuple[str, ...] = ()
+    description: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+        object.__setattr__(self, "strategies",
+                           tuple(normalize_strategy(s)
+                                 for s in self.strategies))
+        object.__setattr__(self, "tags", tuple(self.tags))
+        self.validate()
+
+    # ------------------------------------------------------- validation
+
+    def validate(self):
+        self.topology.validate()
+        if not self.name:
+            raise ValueError("scenario needs a name")
+        if not self.faults and self.expect_bit_identical is False:
+            raise ValueError("fault-free scenario must expect identity")
+        for i, f in enumerate(self.faults):
+            f.validate(self.topology, i)
+            if f.step is not None and f.step >= self.steps:
+                raise ValueError(f"fault step {f.step} >= run steps "
+                                 f"{self.steps}")
+        if any(f.how == "hang" for f in self.faults) \
+                and self.stall_timeout_s <= 0:
+            raise ValueError("hang faults need stall_timeout_s > 0 "
+                             "(nothing else detects a silent rank)")
+        if not self.strategies:
+            raise ValueError("scenario needs at least one strategy")
+
+    # --------------------------------------------------------- queries
+
+    def faults_for_rank(self, rank: int) -> list[tuple[int, Fault]]:
+        """(index, fault) pairs whose injection is driven by `rank` —
+        rank faults on the rank itself, node faults by the victim rank
+        on that node (the paper has the victim signal its daemon)."""
+        return [(i, f) for i, f in enumerate(self.faults)
+                if f.target in ("rank", "node") and f.rank == rank]
+
+    def root_faults(self) -> list[tuple[int, Fault]]:
+        return [(i, f) for i, f in enumerate(self.faults)
+                if f.target == "root"]
+
+    @property
+    def is_cascading(self) -> bool:
+        return any(f.point in CASCADE_POINTS for f in self.faults)
+
+    # ----------------------------------------------------------- serde
+
+    def to_dict(self) -> dict:
+        return {
+            "name": self.name,
+            "description": self.description,
+            "topology": dataclasses.asdict(self.topology),
+            "steps": self.steps,
+            "dim": self.dim,
+            "strategies": list(self.strategies),
+            "expect_bit_identical": self.expect_bit_identical,
+            "stall_timeout_s": self.stall_timeout_s,
+            "tags": list(self.tags),
+            "faults": [dataclasses.asdict(f) for f in self.faults],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Scenario":
+        return cls(
+            name=d["name"],
+            description=d.get("description", ""),
+            topology=Topology(**d.get("topology", {})),
+            steps=d.get("steps", 6),
+            dim=d.get("dim", 64),
+            strategies=tuple(d.get("strategies", ("reinit", "cr", "ulfm"))),
+            expect_bit_identical=d.get("expect_bit_identical", True),
+            stall_timeout_s=d.get("stall_timeout_s", 0.0),
+            tags=tuple(d.get("tags", ())),
+            faults=tuple(Fault(**f) for f in d.get("faults", ())),
+        )
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Scenario":
+        return cls.from_dict(json.loads(s))
+
+    def dump(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @classmethod
+    def load(cls, path: str) -> "Scenario":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def expected_resume_step(scenario: Scenario) -> Optional[int]:
+    """The consistent cut the rollback consensus must land on, derived
+    declaratively from the *primary* fault — the shared oracle both
+    executors are checked against. None = the resume step is legitimately
+    timing-dependent (root faults), only bit-identity is asserted.
+
+      step                 victim dies behind the FENCE: every rank has
+                           committed checkpoint `step`  -> resume = step
+      worker.ckpt.mid_write  victim dies with save `step` un-renamed; its
+                           newest durable state is step-1 and min() over
+                           ranks rules                  -> resume = step-1
+      worker.ckpt.pre_push   the file committed before death, and the
+                           restore merges buddy + file  -> resume = step
+      cascades             a second failure during recovery replays the
+                           same consensus over the same frames — the
+                           primary fault's cut stands.
+    """
+    if not scenario.faults:
+        return None
+    f0 = scenario.faults[0]
+    if f0.target == "root":
+        return None
+    if f0.point == "step":
+        return f0.step
+    if f0.point == "worker.ckpt.mid_write":
+        return f0.step - 1
+    if f0.point == "worker.ckpt.pre_push":
+        return f0.step
+    return None

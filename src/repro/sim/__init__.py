@@ -1,2 +1,3 @@
 from .costs import ClusterCosts, AppProfile, APPS
-from .cluster import simulate_run, SimResult, recovery_time, recovery_e2e
+from .cluster import (simulate_run, SimResult, recovery_time, recovery_e2e,
+                      simulate_scenario, ScenarioSimResult)

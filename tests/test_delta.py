@@ -178,6 +178,139 @@ def test_broken_chain_not_composable():
         serde.compose({2: d}, 2)
 
 
+@st.composite
+def dirty_mask_edits(draw):
+    """A random sparse edit plan: (leaf_index, start_frac, run_len) runs
+    to dirty — exercises arbitrary tile masks, not just single elements."""
+    n_runs = draw(st.integers(0, 4))
+    return [(draw(st.integers(0, 7)),
+             draw(st.floats(0.0, 1.0)),
+             draw(st.integers(1, 600)))
+            for _ in range(n_runs)]
+
+
+def _apply_edits(flat, edits, rng):
+    out = {k: np.array(v) for k, v in flat.items()}
+    keys = sorted(out)
+    for leaf_i, start_frac, run in edits:
+        k = keys[leaf_i % len(keys)]
+        v = out[k].reshape(-1)
+        if not v.size:
+            continue
+        lo = int(start_frac * (v.size - 1))
+        hi = min(v.size, lo + run)
+        v[lo:hi] = rng.standard_normal(hi - lo).astype(v.dtype) \
+            if v.dtype != np.bool_ else ~v[lo:hi]
+    return out
+
+
+def _check_dirty_mask_chains(seed, retain, edit_plans):
+    """Random dirty masks x random chain lengths: every frame the
+    retention window keeps must compose bit-exactly, and the window's
+    chain walk must never reference a pruned (GC'd) base — the
+    BuddyStore-prune + composable_steps contract under arbitrary
+    dirtiness."""
+    rng = np.random.default_rng(seed)
+    flat = {"a": rng.standard_normal(2500).astype(np.float32),
+            "b": rng.standard_normal(700).astype(BF16),
+            "c": rng.integers(0, 255, 3 * TILE_BYTES + 7).astype(np.uint8)}
+    store = BuddyStore(0, 2, retain=retain)
+    store.save(1, serde.to_bytes(flat, {"step": 1}))
+    tiles = serde.tile_digests(flat)
+    oracle = {1: flat}
+    cur = flat
+    for i, edits in enumerate(edit_plans):
+        step = i + 2
+        cur = _apply_edits(cur, edits, rng)
+        plan = serde.delta_plan(cur, tiles)
+        if plan.feasible and i % 3 != 2:          # random-ish chain breaks
+            frame = serde.to_delta_bytes(cur, plan, base_step=step - 1,
+                                         extra={"step": step})
+        else:
+            frame = serde.to_bytes(cur, {"step": step})
+        store.save(step, frame)
+        tiles = plan.new_tiles
+        oracle[step] = cur
+        held = store.local_map()
+        comp = serde.composable_steps(held)
+        # the newest step always composes, and nothing composable chains
+        # through a pruned frame (chain_steps would KeyError -> excluded)
+        assert step in comp
+        for s in comp:
+            assert set(serde.chain_steps(held, s)) <= set(held)
+            extra, got = serde.compose(held, s)
+            assert extra["step"] == s
+            for k in oracle[s]:
+                assert _bit_equal(got[k], oracle[s][k]), (s, k)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6),
+       st.lists(dirty_mask_edits(), min_size=1, max_size=6))
+@settings(max_examples=20, deadline=None)
+def test_random_dirty_masks_compose_bit_exact(seed, retain, edit_plans):
+    _check_dirty_mask_chains(seed, retain, edit_plans)
+
+
+def test_random_dirty_masks_compose_bit_exact_seeded():
+    """Deterministic replay of the property above for environments
+    without hypothesis — same invariant, pre-drawn plans."""
+    for seed in (0, 7, 1234):
+        rng = np.random.default_rng(seed ^ 0x5EED)
+        plans = [[(int(rng.integers(0, 8)), float(rng.uniform()),
+                   int(rng.integers(1, 600)))
+                  for _ in range(rng.integers(0, 5))]
+                 for _ in range(rng.integers(1, 7))]
+        _check_dirty_mask_chains(seed, int(rng.integers(1, 7)), plans)
+
+
+def _check_file_ckpt_chains(seed, delta_every, keep, n_saves):
+    """FileCheckpointer under random dirtiness and chain lengths: every
+    committed step loads bit-exactly and the GC'd directory still
+    contains every base its surviving delta chains reference."""
+    import tempfile
+    from repro.checkpoint.manifest import tree_digest as td
+    rng = np.random.default_rng(seed)
+    d = tempfile.mkdtemp()
+    try:
+        ck = FileCheckpointer(d, keep=keep, n_shards=2,
+                              delta_every=delta_every)
+        state = {"w": rng.standard_normal(20000).astype(np.float32),
+                 "b": rng.standard_normal(300).astype(np.float32)}
+        digests = {}
+        for step in range(1, n_saves + 1):
+            state = {k: np.array(v) for k, v in state.items()}
+            frac = rng.uniform(0.001, 0.9)        # sometimes > max_dirty
+            n = max(1, int(frac * state["w"].size))
+            lo = rng.integers(0, state["w"].size - n + 1)
+            state["w"][lo:lo + n] += 1.0
+            ck.save(step, state)
+            digests[step] = td(state)
+        steps = ck.steps()
+        assert steps[-1] == n_saves
+        # chain closure of everything kept is fully on disk
+        assert ck._chain_closure(steps) <= set(steps)
+        for s in steps:
+            _, loaded = ck.load(s)
+            assert td(loaded) == digests[s], s
+    finally:
+        import shutil
+        shutil.rmtree(d, ignore_errors=True)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5), st.integers(2, 4),
+       st.integers(4, 9))
+@settings(max_examples=10, deadline=None)
+def test_file_ckpt_random_chains_never_lose_anchor(seed, delta_every,
+                                                   keep, n_saves):
+    _check_file_ckpt_chains(seed, delta_every, keep, n_saves)
+
+
+def test_file_ckpt_random_chains_never_lose_anchor_seeded():
+    for seed, de, keep, n in [(1, 2, 2, 6), (2, 3, 2, 8), (3, 4, 3, 9),
+                              (4, 5, 4, 7)]:
+        _check_file_ckpt_chains(seed, de, keep, n)
+
+
 # --------------------------------------------------------- FileCheckpointer
 
 def test_file_ckpt_delta_chain_roundtrip(tmp_path):

@@ -1,0 +1,36 @@
+"""Examples must stay runnable: import + execute every examples/ script
+in dry-run mode (REPRO_DRYRUN=1 — print the plan, skip the heavy work).
+
+Catches the classic rot mode where a runtime/trainer API moves and the
+examples silently stop matching it (the fate of the pre-PR-3
+cluster_failover.py).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+EXAMPLES_DIR = os.path.join(ROOT, "examples")
+EXAMPLES = sorted(n for n in os.listdir(EXAMPLES_DIR)
+                  if n.endswith(".py"))
+
+
+def test_every_example_is_covered():
+    """If a new example appears it must run under this smoke test."""
+    assert EXAMPLES, "examples/ is empty?"
+    assert len(EXAMPLES) >= 4
+
+
+@pytest.mark.parametrize("name", EXAMPLES)
+def test_example_dry_run(name):
+    proc = subprocess.run(
+        [sys.executable, os.path.join(EXAMPLES_DIR, name)],
+        env=dict(os.environ, PYTHONPATH=SRC, REPRO_DRYRUN="1"),
+        capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, \
+        f"{name} dry-run failed:\n{proc.stdout[-2000:]}" \
+        f"\n{proc.stderr[-2000:]}"
+    assert proc.stdout.strip(), f"{name} dry-run printed nothing"

@@ -1,0 +1,339 @@
+"""Deterministic failure-scenario matrix.
+
+Layers under test:
+  schema/catalog   the declarative Scenario vocabulary and the >=12-entry
+                   catalog (who fails x when x how x strategy)
+  injector/hooks   the generalized fault-injection engine (ScenarioInjector
+                   + the process-global interruption-point registry)
+  sim executor     every catalog scenario x strategy through the
+                   discrete-event simulator over the real Algorithm-1/2
+                   protocol (cheap: runs on every test invocation)
+  crash atomicity  FileCheckpointer killed (real SIGKILL, subprocess) at
+                   its named interruption points — previous step must
+                   stay loadable, orphan tmp reaped by the next GC
+  real runtime     the same scenario definitions on live root/daemon/
+                   worker process trees. The `scenario_fast` subset runs
+                   by default; the full matrix, 3-consecutive-run
+                   stability proof and 3-node topologies are opt-in via
+                   `-m scenario_slow` (CI's scheduled job).
+
+Recovered runs are asserted BIT-IDENTICAL to a fault-free run of the same
+topology wherever the strategy guarantees it, and the observed rollback
+consensus is checked against the schema's declarative consistent-cut
+oracle (expected_resume_step).
+"""
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core.events import FailureType
+from repro.core.failure import FaultInjector, ScenarioInjector
+from repro.scenarios import (Fault, Scenario, Topology,
+                             expected_resume_step, hooks)
+from repro.scenarios import engine
+from repro.scenarios.catalog import BY_NAME, CATALOG, T22, T32, fault_free
+from repro.sim.cluster import simulate_scenario
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+
+
+# --------------------------------------------------------------- schema
+
+def test_schema_roundtrip_all_catalog():
+    for sc in CATALOG:
+        back = Scenario.from_json(sc.to_json())
+        assert back == sc, sc.name
+
+
+@pytest.mark.parametrize("bad", [
+    dict(faults=(Fault("gpu", 0, 3),)),                  # unknown target
+    dict(faults=(Fault("rank", 9, 3),)),                 # rank >= world
+    dict(faults=(Fault("rank", 1, 9),)),                 # step >= steps
+    dict(faults=(Fault("rank", 1, None,                  # cascade first
+                       point="worker.recovery.pulled"),)),
+    dict(faults=(Fault("rank", 1, 3, how="hang"),)),     # hang, no watchdog
+    dict(faults=(Fault("node", 1, 3, how="hang"),),      # hang a node
+         stall_timeout_s=5.0),
+    dict(faults=(Fault("root", step=3, how="hang"),),    # hang the root
+         stall_timeout_s=5.0),
+    dict(faults=(Fault("node", 1, 3,                     # ckpt fault on node
+                       point="worker.ckpt.mid_write"),)),
+])
+def test_schema_rejects(bad):
+    with pytest.raises(ValueError):
+        Scenario(name="bad", topology=T22, steps=6, **bad)
+
+
+def test_expected_resume_oracle():
+    mk = lambda f: Scenario(name="x", topology=T22, steps=6, faults=(f,))
+    assert expected_resume_step(mk(Fault("rank", 1, 3))) == 3
+    assert expected_resume_step(
+        mk(Fault("rank", 1, 3, point="worker.ckpt.mid_write"))) == 2
+    assert expected_resume_step(
+        mk(Fault("rank", 1, 3, point="worker.ckpt.pre_push"))) == 3
+    assert expected_resume_step(mk(Fault("root", step=3))) is None
+    casc = Scenario(name="c", topology=T22, steps=6, faults=(
+        Fault("rank", 1, 3),
+        Fault("rank", 1, None, point="worker.recovery.pulled")))
+    assert expected_resume_step(casc) == 3       # primary fault's cut
+
+
+def test_catalog_breadth():
+    assert len(CATALOG) >= 12
+    assert len(BY_NAME) == len(CATALOG)          # unique names
+    targets = {f.target for s in CATALOG for f in s.faults}
+    hows = {f.how for s in CATALOG for f in s.faults}
+    points = {f.point for s in CATALOG for f in s.faults}
+    assert targets == {"rank", "node", "root"}
+    assert hows == {"sigkill", "channel_break", "hang"}
+    assert {"step", "worker.ckpt.mid_write", "worker.ckpt.pre_push",
+            "worker.recovery.pulled", "worker.recovery.enter",
+            "worker.recovery.compose"} <= points
+    assert any(s.topology.nodes >= 3 for s in CATALOG)   # 3-node coverage
+    assert any(s.is_cascading for s in CATALOG)
+    strategies = {st for s in CATALOG for st in s.strategies}
+    assert strategies == {"reinit", "cr", "ulfm"}
+    # every scenario is executable on the real runtime or sim-only by
+    # explicit choice (ulfm) — none is silently dead
+    for s in CATALOG:
+        assert engine.real_strategies(s) or s.strategies == ("ulfm",)
+
+
+# ------------------------------------------------------------- injector
+
+def test_scenario_injector_fires_each_fault_once():
+    sc = Scenario(name="two", topology=T22, steps=8,
+                  faults=(Fault("rank", 1, 3), Fault("node", 2, 5)),
+                  strategies=("reinit",))
+    from repro.core.protocol import ClusterView
+    view = ClusterView.build(2, 2, 1)
+    inj = ScenarioInjector(sc)
+    assert inj.check(2) is None
+    ev = inj.check(3, view)
+    assert ev.kind is FailureType.PROCESS and ev.rank == 1
+    assert inj.check(3, view) is None            # fired exactly once
+    ev = inj.check(5, view)
+    assert ev.kind is FailureType.NODE and ev.node == "node1"
+    assert inj.check(5, view) is None
+    inj.reset()
+    assert inj.check(3, view) is not None
+
+
+def test_fault_injector_is_scenario_backed_and_stable():
+    a = FaultInjector(n_ranks=64, n_steps=100, seed=9)
+    b = FaultInjector(n_ranks=64, n_steps=100, seed=9)
+    assert (a.fail_step, a.fail_rank) == (b.fail_step, b.fail_rank)
+    assert a.scenario.faults[0].rank == a.fail_rank
+    assert a.scenario.faults[0].step == a.fail_step
+    ev = a.check(a.fail_step)
+    assert ev is not None and ev.rank == a.fail_rank
+    assert a.check(a.fail_step) is None          # single failure (§4)
+
+
+def test_hooks_install_fire_clear():
+    seen = []
+    hooks.install(lambda point, **ctx: seen.append((point, ctx)))
+    try:
+        hooks.fire("step", step=4)
+    finally:
+        hooks.clear()
+    hooks.fire("step", step=5)                   # cleared: no-op
+    assert seen == [("step", {"step": 4})]
+
+
+# ----------------------------------------------------------- sim matrix
+
+SIM_MATRIX = [(s.name, st) for s in CATALOG for st in s.strategies]
+
+
+@pytest.mark.parametrize("name,strategy", SIM_MATRIX)
+def test_sim_matrix(name, strategy):
+    sc = BY_NAME[name]
+    out = engine.run_sim(sc, strategy)
+    assert out.n_recoveries == len(sc.faults)
+    assert out.total_s > 0
+    assert out.resume_consistent
+    rows = out.detail["rows"]
+    assert [r["cascade"] for r in rows] == \
+        [f.point.startswith("worker.recovery.") for f in sc.faults]
+    for r in rows:
+        assert r["detect_s"] > 0 and r["mpi_recovery_s"] > 0
+
+
+def test_sim_detection_mechanisms_ordered():
+    """Detection latency must reflect the mechanism: silent hangs pay the
+    stall timeout, SIGCHLD is fastest, ULFM's heartbeat beats the
+    watchdog on hangs (its fault-free tax is charged elsewhere)."""
+    hang = simulate_scenario(BY_NAME["proc-hang"], "reinit")
+    kill = simulate_scenario(BY_NAME["proc-sigkill-midstep"], "reinit")
+    node = simulate_scenario(BY_NAME["node-sigkill"], "reinit")
+    assert hang.rows[0]["detect_s"] > BY_NAME["proc-hang"].stall_timeout_s
+    assert kill.rows[0]["detect_s"] < node.rows[0]["detect_s"]
+    ulfm_hang = simulate_scenario(BY_NAME["proc-hang"], "ulfm")
+    assert ulfm_hang.rows[0]["detect_s"] < hang.rows[0]["detect_s"]
+
+
+def test_sim_reinit_beats_cr_on_process_failure():
+    sc = BY_NAME["proc-sigkill-midstep"]
+    r = simulate_scenario(sc, "reinit").rows[0]["mpi_recovery_s"]
+    c = simulate_scenario(sc, "cr").rows[0]["mpi_recovery_s"]
+    assert r < c
+
+
+def test_sim_cascade_charges_two_recoveries():
+    out = simulate_scenario(BY_NAME["cascade-respawn-dies"], "reinit")
+    assert len(out.rows) == 2 and out.rows[1]["cascade"]
+    single = simulate_scenario(BY_NAME["proc-sigkill-midstep"], "reinit")
+    assert out.total_recovery_s > single.total_recovery_s
+
+
+# ------------------------------------------------------ crash atomicity
+
+_CRASH_SCRIPT = textwrap.dedent("""
+    import os, sys
+    import numpy as np
+    from repro.checkpoint import FileCheckpointer
+    from repro.scenarios import hooks
+
+    d, point = sys.argv[1], sys.argv[2]
+    ck = FileCheckpointer(d, keep=4, n_shards=2)
+    rng = np.random.default_rng(0)
+    s1 = {"a": rng.standard_normal(4000).astype(np.float32),
+          "b": rng.standard_normal(500).astype(np.float32)}
+    ck.save(1, s1)
+
+    def killer(p, **ctx):
+        if p == point and ctx.get("step") == 2:
+            os.kill(os.getpid(), 9)
+    hooks.install(killer)
+    ck.save(2, {k: v * 2.0 for k, v in s1.items()})
+    print("UNREACHABLE")
+""")
+
+
+@pytest.mark.parametrize("point", ["ckpt.file.shard",
+                                   "ckpt.file.pre_commit"])
+def test_crash_atomicity_mid_write(tmp_path, point):
+    """SIGKILL (the real signal, in a subprocess) at a write-path
+    interruption point: step 1 must still load and manifest-verify, the
+    crashed step must be invisible, and the orphaned tmp dir must be
+    GC'd by the next writer."""
+    d = str(tmp_path / "ck")
+    proc = subprocess.run(
+        [sys.executable, "-c", _CRASH_SCRIPT, d, point],
+        env=dict(os.environ, PYTHONPATH=SRC), capture_output=True,
+        text=True, timeout=120)
+    assert proc.returncode == -signal.SIGKILL, proc.stdout + proc.stderr
+    assert "UNREACHABLE" not in proc.stdout
+
+    import numpy as np
+    from repro.checkpoint import FileCheckpointer
+    orphans = [n for n in os.listdir(d) if n.startswith("tmp_")]
+    assert orphans, "crash should have left a tmp dir behind"
+    ck = FileCheckpointer(d, keep=4, n_shards=2)
+    assert ck.steps() == [1]                     # step 2 never visible
+    man, loaded = ck.load(1)                     # verify=True: manifest OK
+    rng = np.random.default_rng(0)
+    assert np.array_equal(loaded["a"],
+                          rng.standard_normal(4000).astype(np.float32))
+    ck.save(3, loaded)                           # next save GCs the orphan
+    assert ck.steps() == [1, 3]
+    assert not [n for n in os.listdir(d) if n.startswith("tmp_")]
+
+
+def test_compose_hook_fires_on_delta_load(tmp_path):
+    import numpy as np
+    from repro.checkpoint import FileCheckpointer
+    ck = FileCheckpointer(str(tmp_path), delta_every=4)
+    state = {"w": np.arange(30000, dtype=np.float32)}
+    ck.save(1, state)
+    state = {"w": np.array(state["w"])}
+    state["w"][7] += 1.0
+    ck.save(2, state)
+    fired = []
+    hooks.install(lambda p, **ctx: fired.append((p, ctx.get("step"))))
+    try:
+        ck.load(2)
+    finally:
+        hooks.clear()
+    assert ("ckpt.file.compose", 2) in fired
+
+
+# ------------------------------------------------- bench: spill counters
+
+def test_runtime_bench_spill_counters_move():
+    """ROADMAP satellite: BuddyStore's spilled/resident counters must
+    move under retention pressure, and runtime_bench surfaces them."""
+    if ROOT not in sys.path:
+        sys.path.insert(0, ROOT)
+    from benchmarks.runtime_bench import bench_buddy_spill
+    rows = []
+    out = bench_buddy_spill(report=rows.append, n_steps=12, payload_kb=64,
+                            retain=6, hot_steps=2)
+    assert out["spilled_bytes"] > 0          # the cold tail hit disk
+    assert out["resident_bytes"] > 0         # the hot set stayed in memory
+    assert 0.0 < out["spill_frac"] < 1.0
+    assert any(r.startswith("buddy_spilled_bytes,") for r in rows)
+    assert any(r.startswith("buddy_resident_bytes,") for r in rows)
+
+
+# -------------------------------------------------- real-runtime matrix
+
+FAST = [s for s in CATALOG if "fast" in s.tags]
+SLOW_MATRIX = [(s.name, st) for s in CATALOG
+               for st in engine.real_strategies(s)]
+
+
+def _ff_checksums(cache, tmp_path_factory, topo):
+    """Fault-free reference checksums per topology (shared across the
+    module — one real run per distinct tree shape)."""
+    key = (topo.nodes, topo.ranks_per_node, topo.spares)
+    if key not in cache:
+        wd = str(tmp_path_factory.mktemp(f"ff{topo.nodes}"))
+        out = engine.run_real(fault_free(topo), "reinit", wd, timeout=240)
+        assert out.n_recoveries == 0
+        cache[key] = out.checksums
+    return cache[key]
+
+
+@pytest.fixture(scope="module")
+def ff_cache():
+    return {}
+
+
+def _assert_outcome(sc, out, ff):
+    assert out.n_recoveries >= 1, f"{sc.name}: no recovery happened"
+    assert out.resume_consistent, \
+        f"{sc.name}: resume {out.resume_steps} != {out.expected_resume}"
+    if sc.expect_bit_identical:
+        assert out.checksums == ff, \
+            f"{sc.name}/{out.strategy}: recovered state diverged"
+
+
+@pytest.mark.scenario_fast
+@pytest.mark.parametrize("name", [s.name for s in FAST])
+def test_real_scenario_fast(name, tmp_path, tmp_path_factory, ff_cache):
+    sc = BY_NAME[name]
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc.topology)
+    strategy = engine.real_strategies(sc)[0]
+    out = engine.run_real(sc, strategy, str(tmp_path), timeout=240)
+    _assert_outcome(sc, out, ff)
+
+
+@pytest.mark.scenario_slow
+@pytest.mark.parametrize("name,strategy", SLOW_MATRIX)
+def test_real_scenario_matrix_3x_stable(name, strategy, tmp_path,
+                                        tmp_path_factory, ff_cache):
+    """The no-flake proof: every real-runtime scenario x strategy passes
+    three consecutive runs with identical assertions."""
+    sc = BY_NAME[name]
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc.topology)
+    for attempt in range(3):
+        out = engine.run_real(sc, strategy,
+                              str(tmp_path / f"run{attempt}"), timeout=300)
+        _assert_outcome(sc, out, ff)
