@@ -65,8 +65,49 @@ def bench_buddy_spill(report=print, *, n_steps: int = 24,
             "spill_frac": frac}
 
 
+def bench_detection_latency(report=print, *, stall_timeout_s: float = 3.0,
+                            hb_period_s: float = 0.2,
+                            hb_timeout_s: float = 1.0) -> dict:
+    """Hang-detection latency, measured on the live process tree: the same
+    silent-rank fault detected by (a) the root's stall watchdog and (b)
+    the worker neighbour-heartbeat ring. The root clocks each from the
+    stuck barrier's first arrival to the kill order — the number the sim's
+    detection constants are calibrated against."""
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    from repro.scenarios import Fault, Scenario, Topology
+    from repro.scenarios.engine import run_real
+
+    topo = Topology(nodes=2, ranks_per_node=2, spares=1)
+    fault = (Fault("rank", 1, 3, how="hang"),)
+    cells = {
+        "watchdog": Scenario(
+            name="detect-watchdog", topology=topo, steps=6, dim=64,
+            faults=fault, stall_timeout_s=stall_timeout_s,
+            strategies=("reinit",)),
+        "heartbeat": Scenario(
+            name="detect-heartbeat", topology=topo, steps=6, dim=64,
+            faults=fault, heartbeat_period_s=hb_period_s,
+            heartbeat_timeout_s=hb_timeout_s, strategies=("reinit",)),
+    }
+    out = {}
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, sc in cells.items():
+            res = run_real(sc, "reinit", os.path.join(tmp, name),
+                           timeout=180)
+            ev = res.detail["events"][-1]
+            assert ev["detected_by"] == name, ev
+            t = ev["detect_latency_s"]
+            out[name] = t
+            report(f"detect_{name},{t * 1e6:.0f},latency_s={t:.3f}")
+    ratio = out["watchdog"] / out["heartbeat"]
+    report(f"detect_ratio_watchdog_over_heartbeat,0,x={ratio:.2f}")
+    return out
+
+
 def run(report=print):
     bench_buddy_spill(report)
+    bench_detection_latency(report)
     with tempfile.TemporaryDirectory() as tmp:
         results = {}
         for mode in ["reinit", "cr"]:

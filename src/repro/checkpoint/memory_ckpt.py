@@ -132,10 +132,30 @@ class BuddyStore:
         self.local: Dict[int, Any] = {}      # step -> bytes | _Spilled
         self._local_disk: Dict[int, str] = {}   # step -> durable path
         self.held: Dict[int, Dict[int, Any]] = {}  # origin -> step -> ...
+        # ring membership: None = the dense 0..world-1 ring; a shrinking
+        # recovery re-forms it over the (possibly non-contiguous)
+        # surviving rank ids
+        self._members: Optional[list] = None
 
     @property
     def buddy(self) -> int:
-        return (self.rank + 1) % self.world
+        if self._members is None:
+            return (self.rank + 1) % self.world
+        i = self._members.index(self.rank)
+        return self._members[(i + 1) % len(self._members)]
+
+    def reform_ring(self, members) -> None:
+        """Re-form the buddy ring over `members` (sorted surviving rank
+        ids) after an elastic shrink: the buddy becomes the next surviving
+        rank. Held frames for dropped origins are no longer needed but
+        are left to age out of the retention window."""
+        ms = sorted(members)
+        if self.rank not in ms:
+            return      # stale broadcast to a rank outside the new world;
+                        # its process is about to be reaped anyway
+        with self._lock:
+            self._members = ms
+            self.world = len(ms)
 
     # ----------------------------------------------------------- tiering
 

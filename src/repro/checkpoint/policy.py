@@ -19,6 +19,13 @@ TABLE2 = {
     ("node", "cr"): "file",
     ("node", "ulfm"): "file",
     ("node", "reinit"): "file",
+    # elastic shrinking recovery: like Reinit++ while spares absorb the
+    # loss (a node loss takes the buddy copies with it -> file). Once the
+    # pool is exhausted the recovery *shrinks* instead of respawning and
+    # survivors restore from their own local memory — that branch is
+    # modeled explicitly by the executors, not through this table.
+    ("process", "shrink"): "memory",
+    ("node", "shrink"): "file",
 }
 
 

@@ -10,12 +10,13 @@ Layers:
   recovery   CR / Reinit++ / ULFM strategy objects
 """
 from .events import (FailureEvent, FailureType, RankState, RecoveryReport,
-                     ReinitCommand, Respawn)
+                     ReinitCommand, Respawn, ShrinkCommand)
 from .protocol import (ClusterView, DaemonActions, apply_recovery,
-                       daemon_handle_reinit, root_handle_failure)
+                       daemon_handle_reinit, root_handle_failure,
+                       root_handle_failure_shrink)
 from .failure import (ChannelMonitor, ChildMonitor, FaultInjector,
                       HeartbeatModel, ScenarioInjector, kill_process)
 from .reinit import (ROLLBACK, RollbackSignal, SIGREINIT, install_sigreinit,
                      reinit_main)
 from .elastic import ElasticManager, MeshEpoch
-from .recovery import CR, REINIT, STRATEGIES, ULFM, get_strategy
+from .recovery import CR, REINIT, SHRINK, STRATEGIES, ULFM, get_strategy

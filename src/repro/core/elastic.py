@@ -38,11 +38,31 @@ class ElasticManager:
     min_data_parallel: int = 1
 
     def spares(self) -> list[str]:
-        return [d for d, cs in self.view.children.items() if not cs]
+        return self.view.spares()
 
     def grow(self, node: str):
         """Add a fresh (spare) node to the pool."""
         self.view.children.setdefault(node, set())
+
+    def decide(self, failure: FailureEvent) -> str:
+        """The spare-pool consultation of §3.2, extended past the paper:
+
+          "respawn"  a spare slot (or a surviving host, for process
+                     failures) can absorb the loss — global-restart
+                     recovery re-hosts the failed ranks (Algorithm 1);
+          "shrink"   the spare pool is exhausted by a node loss and the
+                     data axis can still legally contract — survivors
+                     re-balance and continue on a shrunk mesh.
+
+        Falls back to "respawn" (over-subscription) when shrinking would
+        cross the min_data_parallel floor."""
+        if failure.kind is not FailureType.NODE:
+            return "respawn"
+        if self.spares():
+            return "respawn"
+        if self.mesh.data_parallel > self.min_data_parallel:
+            return "shrink"
+        return "respawn"
 
     def nonshrink_plan(self, failure: FailureEvent):
         """Global-restart (paper): same mesh shape, failed shard re-hosted.

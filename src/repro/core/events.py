@@ -54,6 +54,15 @@ class ReinitCommand:
     epoch: int                       # recovery epoch (monotonically grows)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShrinkCommand:
+    """The broadcast of a shrinking recovery: no respawns — the dropped
+    ranks leave the world and survivors re-balance over what remains."""
+    dropped: tuple[int, ...]
+    epoch: int
+    world: tuple[int, ...]           # surviving rank ids (sorted)
+
+
 @dataclasses.dataclass
 class RecoveryReport:
     """Timings of one recovery, broken down the way the paper reports them
@@ -64,6 +73,7 @@ class RecoveryReport:
     mpi_recovery_s: float = 0.0
     ckpt_read_s: float = 0.0
     rollback_step: int = 0
+    world_after: Optional[int] = None   # set by a shrinking recovery
 
     @property
     def total_s(self) -> float:

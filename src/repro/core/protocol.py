@@ -12,7 +12,7 @@ import dataclasses
 from typing import Dict, Iterable, Set
 
 from .events import (FailureEvent, FailureType, RankState, ReinitCommand,
-                     Respawn)
+                     Respawn, ShrinkCommand)
 
 
 @dataclasses.dataclass
@@ -52,6 +52,10 @@ class ClusterView:
             out.extend(cs)
         return sorted(out)
 
+    def spares(self) -> list[str]:
+        """Empty (over-provisioned) daemons — the spare pool of §3.2."""
+        return sorted(d for d, cs in self.children.items() if not cs)
+
     def least_loaded(self, exclude: Iterable[str] = ()) -> str:
         """argmin over |Children(d)| (Algorithm 1), ties broken by name for
         determinism."""
@@ -84,6 +88,30 @@ def root_handle_failure(view: ClusterView, failure: FailureEvent
         parent = view.parent(failure.rank)
         respawns = (Respawn(daemon=parent, rank=failure.rank),)
     return ReinitCommand(respawns=respawns, epoch=view.epoch)
+
+
+def root_handle_failure_shrink(view: ClusterView, failure: FailureEvent
+                               ) -> ShrinkCommand:
+    """Shrinking recovery (the paper's deferred future work, ReStore-style):
+    instead of re-hosting the lost ranks, drop them from the world.
+
+    Mutates `view` (removing the failed daemon / rank, reassigning nothing)
+    and returns the SHRINK broadcast: the dropped ranks and the surviving
+    world. Survivors roll back to the consistent cut and re-balance the
+    batch over the contracted world — no respawn anywhere."""
+    view.epoch += 1
+    if failure.kind is FailureType.NODE:
+        dead = failure.node
+        assert dead is not None
+        dropped = tuple(sorted(view.children.pop(dead)))
+    else:
+        assert failure.rank is not None
+        parent = view.parent(failure.rank)
+        view.children[parent].discard(failure.rank)
+        dropped = (failure.rank,)
+    world = tuple(view.ranks())
+    assert world, "shrink removed the last rank"
+    return ShrinkCommand(dropped=dropped, epoch=view.epoch, world=world)
 
 
 @dataclasses.dataclass

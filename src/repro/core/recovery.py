@@ -45,7 +45,8 @@ class RecoveryStrategy:
 
     @property
     def key(self) -> str:
-        return {"CR": "cr", "Reinit++": "reinit", "ULFM": "ulfm"}[self.name]
+        return {"CR": "cr", "Reinit++": "reinit", "ULFM": "ulfm",
+                "Shrink": "shrink"}[self.name]
 
     def fault_free_overhead(self, n_ranks: int) -> float:
         return self.heartbeat.per_step_overhead(n_ranks) if self.heartbeat \
@@ -68,7 +69,17 @@ ULFM = RecoveryStrategy(
     # the agreement rounds serialize against the restore, no overlap
     allrank_collectives=4, tree_broadcasts=0, heartbeat=HeartbeatModel())
 
-STRATEGIES = {s.key: s for s in (CR, REINIT, ULFM)}
+# Elastic shrinking recovery (beyond the paper — its deferred future work,
+# made practical by ReStore-style replicated in-memory state): behaves like
+# Reinit++ while the spare pool holds, and contracts the data axis instead
+# of respawning once it is exhausted. Survivors keep process + device
+# state; a shrink bumps the mesh epoch, so compiled steps are dropped.
+SHRINK = RecoveryStrategy(
+    name="Shrink", redeploys=False, keeps_jit_cache=True,
+    allrank_collectives=0, tree_broadcasts=1, heartbeat=None,
+    overlap_restore=True)
+
+STRATEGIES = {s.key: s for s in (CR, REINIT, ULFM, SHRINK)}
 
 
 def get_strategy(name: str) -> RecoveryStrategy:

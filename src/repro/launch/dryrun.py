@@ -22,7 +22,8 @@ from repro.sharding.partition import (_divisible, constraint_scope,
                                       state_shardings)        # noqa: E402
 from repro.sharding.rules import PRESETS           # noqa: E402
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update  # noqa: E402
-from repro.launch.hlo_analysis import collective_summary, while_report  # noqa: E402
+from repro.launch.hlo_analysis import (  # noqa: E402
+    collective_summary, compiled_cost_analysis, while_report)
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
@@ -218,7 +219,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.monotonic() - t0
         mem = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = compiled_cost_analysis(compiled)
         hlo = compiled.as_text()
         colls = collective_summary(hlo)
         whiles = while_report(hlo)

@@ -86,17 +86,33 @@ def _split_computations(hlo: str) -> Dict[str, str]:
     return comps
 
 
+# The while operand list may itself contain tuple shapes (nested parens),
+# so match lazily up to the `condition=`/`body=` attributes on the line.
 _WHILE_RE = re.compile(
-    r"=\s*(\([^)]*\)|[^\s]+)\s+while\([^)]*\)\s*,\s*condition=%?([\w\.\-]+)"
-    r"\s*,\s*body=%?([\w\.\-]+)")
+    r"=\s*(\([^=]*?\)|\S+)\s+while\(.*?\)\s*,\s*condition=%?([\w\.\-]+)"
+    r"\s*,\s*body=%?([\w\.\-]+)(.*)$", re.M)
 _CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+_KTC_RE = re.compile(r"known_trip_count[^\d]*(\d+)")
 
 
-def _trip_count(cond_text: str) -> int:
-    """Largest integer literal in the condition — for XLA scan loops this
-    is the trip count (compare(iv, constant))."""
+def _trip_count(cond_text: str, while_line_rest: str = "") -> int:
+    """Trip count of a while: XLA's `known_trip_count` backend_config when
+    present, else the largest integer literal in the condition (XLA scan
+    conditions compare the induction variable against a literal)."""
+    m = _KTC_RE.search(while_line_rest)
+    if m:
+        return int(m.group(1))
     consts = [int(c) for c in _CONST_RE.findall(cond_text)]
     return max(consts) if consts else 1
+
+
+def compiled_cost_analysis(compiled) -> dict:
+    """Version-compat: `Compiled.cost_analysis()` returns a per-device list
+    of dicts on older jax and a plain dict on newer; normalize to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
 
 
 def analyze_collectives(hlo: str) -> List[CollectiveInfo]:
@@ -107,7 +123,7 @@ def analyze_collectives(hlo: str) -> List[CollectiveInfo]:
     for cname, ctext in comps.items():
         for m in _WHILE_RE.finditer(ctext):
             cond, body = m.group(2), m.group(3)
-            trip = _trip_count(comps.get(cond, ""))
+            trip = _trip_count(comps.get(cond, ""), m.group(4))
             body_info[body] = (trip, cname)
 
     def multiplier(comp: str) -> int:
@@ -172,5 +188,6 @@ def while_report(hlo: str) -> List[dict]:
     for cname, ctext in comps.items():
         for m in _WHILE_RE.finditer(ctext):
             out.append({"in": cname, "body": m.group(3),
-                        "trip": _trip_count(comps.get(m.group(2), ""))})
+                        "trip": _trip_count(comps.get(m.group(2), ""),
+                                            m.group(4))})
     return out

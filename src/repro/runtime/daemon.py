@@ -63,6 +63,8 @@ class Daemon:
                "--fail-rank", str(a.fail_rank),
                "--fail-kind", a.fail_kind,
                "--scenario", a.scenario,
+               "--hb-period", str(getattr(a, "hb_period", 0.0)),
+               "--hb-timeout", str(getattr(a, "hb_timeout", 0.0)),
                "--ckpt-dir", a.ckpt_dir,
                "--epoch", str(epoch)]
         if restarted:
@@ -211,6 +213,19 @@ class Daemon:
                 send_msg(self.root_sock, {"type": "REINIT_DONE",
                                           "node": self.node,
                                           "epoch": msg["epoch"]})
+            elif t == "SHRINK":
+                # shrinking recovery: no spawns anywhere — signal every
+                # live child to roll back, then relay the shrunk world so
+                # their control loops pick up the new membership/epoch
+                with self.lock:
+                    live = [r for r in self.workers
+                            if self.workers[r].poll() is None]
+                for r in live:
+                    try:
+                        os.kill(self.workers[r].pid, signal.SIGUSR1)
+                    except ProcessLookupError:
+                        pass
+                self._broadcast_workers(msg)
             elif t == "KILL_RANK":
                 # root-side stall watchdog: a silent (hung) child cannot
                 # be detected by waitpid — the root orders the kill and
@@ -256,6 +271,8 @@ def main(argv=None):
     ap.add_argument("--fail-rank", type=int, default=-1)
     ap.add_argument("--fail-kind", default="process")
     ap.add_argument("--scenario", default="")
+    ap.add_argument("--hb-period", type=float, default=0.0)
+    ap.add_argument("--hb-timeout", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--pythonpath", default="")
     Daemon(ap.parse_args(argv)).run()

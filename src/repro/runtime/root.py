@@ -1,6 +1,7 @@
 """Root (HNP): deployment, liveness, Algorithm 1, recovery orchestration.
 
-Two recovery modes, matching the paper's measured approaches:
+Three recovery modes — the paper's two measured approaches plus the
+elastic extension it defers as future work:
 
   reinit  Algorithm 1 + REINIT broadcast: survivors roll back in place,
           only failed ranks are re-spawned (on the least-loaded node for
@@ -9,6 +10,12 @@ Two recovery modes, matching the paper's measured approaches:
   cr      Checkpoint-Restart: tear the whole job down (SIGKILL every
           daemon) and re-deploy it from scratch; every rank restarts from
           the file checkpoint.
+  shrink  Elastic: node failures consult the spare pool (Algorithm 1's
+          least-loaded choice re-hosts onto a spare while one exists);
+          once the pool is exhausted, a SHRINK broadcast drops the lost
+          ranks — survivors re-balance over the contracted world and
+          resume from the consistent cut instead of aborting. Bumps the
+          mesh epoch (ElasticManager).
 
 The root measures, with wall clocks, the same phases the paper reports:
 detection→REINIT-broadcast, re-registration (MPI recovery), and the first
@@ -27,8 +34,10 @@ import sys
 import threading
 import time
 
+from repro.core.elastic import ElasticManager, MeshEpoch
 from repro.core.events import FailureEvent, FailureType
-from repro.core.protocol import ClusterView, root_handle_failure
+from repro.core.protocol import (ClusterView, root_handle_failure,
+                                 root_handle_failure_shrink)
 from repro.scenarios.schema import ROOT_INJECTED_EXIT, Scenario
 
 from .transport import listener, recv_msg, send_msg
@@ -40,6 +49,16 @@ class Root:
         self.world = args.nodes * args.ranks_per_node
         self.view = ClusterView.build(args.nodes, args.ranks_per_node,
                                       args.spares)
+        # live membership — a set, not a count: a shrinking recovery
+        # leaves non-contiguous rank ids behind
+        self.world_ranks: set[int] = set(self.view.ranks())
+        # elastic mode: one node = one data-parallel group; the spare
+        # pool + shrink decision live in the manager, mesh epochs key
+        # the survivors' compiled-step caches
+        self.elastic = ElasticManager(
+            self.view, MeshEpoch(epoch=0, data_parallel=args.nodes,
+                                 model_parallel=args.ranks_per_node)) \
+            if args.mode == "shrink" else None
         self.sock = listener()
         self.port = self.sock.getsockname()[1]
         self.events: "queue.Queue[tuple]" = queue.Queue()
@@ -64,6 +83,7 @@ class Root:
         self.stall_timeout = getattr(args, "stall_timeout", 0.0)
         self._barrier_seen: dict[tuple, float] = {}
         self._stall_killed: set[int] = set()
+        self._detect_mark: tuple | None = None  # (detector, latency, rank)
         # root-target scenario faults: {step: fault_index}
         self._root_faults: dict[int, int] = {}
         if getattr(args, "scenario", ""):
@@ -121,6 +141,8 @@ class Root:
                "--dim", str(a.dim), "--fail-step", str(a.fail_step),
                "--fail-rank", str(a.fail_rank), "--fail-kind", a.fail_kind,
                "--scenario", getattr(a, "scenario", ""),
+               "--hb-period", str(getattr(a, "hb_period", 0.0)),
+               "--hb-timeout", str(getattr(a, "hb_timeout", 0.0)),
                "--ckpt-dir", a.ckpt_dir, "--pythonpath", a.pythonpath]
         env = dict(os.environ, PYTHONPATH=a.pythonpath)
         self.daemon_procs[node] = subprocess.Popen(cmd, env=env)
@@ -152,7 +174,7 @@ class Root:
         d = self.barrier.setdefault(key, {})
         self._barrier_seen.setdefault(key, time.monotonic())
         d[msg["rank"]] = msg["value"]
-        if len(d) == self.world:
+        if len(d) == len(self.world_ranks):
             # reduce in rank order: float addition is order-sensitive, and
             # a deterministic reduction is what makes a recovered run
             # land on the bit-identical state of the fault-free run
@@ -191,7 +213,7 @@ class Root:
         if victim is None:
             return
         arrived = self.barrier.get(key, {})
-        if len(arrived) >= self.world - 1:
+        if len(arrived) >= len(self.world_ranks) - 1:
             self._broadcast({"type": "FENCE_RELEASE",
                              "epoch": key[0], "step": key[1]})
             del self.fences[key]
@@ -204,7 +226,7 @@ class Root:
             return
         d = self.joins.setdefault(msg["epoch"], {})
         d[msg["rank"]] = msg["avail"]
-        if len(d) == self.world:
+        if len(d) == len(self.world_ranks):
             resume = min(d.values())
             self._broadcast({"type": "JOIN_RELEASE", "epoch": msg["epoch"],
                              "resume": resume})
@@ -235,11 +257,36 @@ class Root:
         os.close(fd)
         os._exit(ROOT_INJECTED_EXIT)
 
+    def _order_kill(self, rank: int, by: str):
+        """Order a silent rank's daemon to SIGKILL it (stall watchdog or a
+        neighbour-heartbeat SUSPECT); the resulting SIGCHLD drives the
+        ordinary failure path. Records which detector fired and how long
+        after the stuck barrier's first arrival — the measured detection
+        latency the benchmark compares across detectors."""
+        if rank in self._stall_killed:
+            return
+        self._stall_killed.add(rank)
+        try:
+            daemon = self.view.parent(rank)
+        except KeyError:
+            return
+        sock = self.daemon_socks.get(daemon)
+        if sock is None:
+            return
+        now = time.monotonic()
+        t0 = min((t for k, t in self._barrier_seen.items()
+                  if k[0] == self.epoch), default=None)
+        try:
+            send_msg(sock, {"type": "KILL_RANK", "rank": rank})
+        except OSError:
+            return      # kill never delivered: claim no detection credit
+        self._detect_mark = (by, None if t0 is None else now - t0, rank)
+
     def _check_stalls(self):
         """Stall watchdog: a barrier stuck past --stall-timeout with a
         subset of the world arrived means the missing ranks are silent
         (hung or partitioned but undead) — order their daemons to SIGKILL
-        them; the resulting SIGCHLD drives the ordinary failure path."""
+        them."""
         if (self.stall_timeout <= 0 or self.recovering
                 or self.shutting_down):
             return
@@ -248,19 +295,20 @@ class Root:
             if key[0] != self.epoch or now - t0 < self.stall_timeout:
                 continue
             arrived = set(self.barrier.get(key, {}))
-            missing = set(range(self.world)) - arrived - self.done
+            missing = self.world_ranks - arrived - self.done
             for rank in missing - self._stall_killed:
-                self._stall_killed.add(rank)
-                try:
-                    daemon = self.view.parent(rank)
-                except KeyError:
-                    continue
-                sock = self.daemon_socks.get(daemon)
-                if sock is not None:
-                    try:
-                        send_msg(sock, {"type": "KILL_RANK", "rank": rank})
-                    except OSError:
-                        pass
+                self._order_kill(rank, "watchdog")
+
+    def _handle_suspect(self, msg):
+        """A worker's heartbeat observer timed out on its ring successor
+        and reported SUSPECT: kill the silent rank so SIGCHLD recovery
+        runs — detection without any watchdog timeout on the path."""
+        rank = msg["rank"]
+        if (self.recovering or self.shutting_down
+                or rank not in self.world_ranks or rank in self.done
+                or msg.get("epoch", self.epoch) != self.epoch):
+            return
+        self._order_kill(rank, "heartbeat")
 
     # ---------------------------------------------------------- recovery
 
@@ -304,21 +352,50 @@ class Root:
         t_detect = time.monotonic()
         ev = {"failure": str(failure), "kind": failure.kind.value,
               "detect_at_s": t_detect}
+        mark, self._detect_mark = self._detect_mark, None
+        if mark is not None and failure.kind is FailureType.PROCESS \
+                and failure.rank == mark[2]:
+            # this failure is the SIGCHLD of the kill we ordered: credit
+            # the detector that ordered it (watchdog vs heartbeat ring).
+            # A mismatched failure (e.g. the whole node died under the
+            # ordered kill) drops the mark — no misattributed credit.
+            by, latency, _ = mark
+            ev["detected_by"] = by
+            if latency is not None:
+                ev["detect_latency_s"] = latency
+        else:
+            ev["detected_by"] = "channel" \
+                if failure.kind is FailureType.NODE else "sigchld"
+        # append before dispatch: recovery helpers (and the table
+        # rebroadcast a shrink triggers synchronously) annotate
+        # report["events"][-1]
+        self.report["events"].append(ev)
         if self.args.mode == "cr":
             self._recover_cr(ev, failure)
+        elif self.elastic is not None \
+                and self.elastic.decide(failure) == "shrink":
+            self._recover_shrink(ev, failure)
         else:
+            if self.elastic is not None:
+                self.elastic.nonshrink_plan(failure)   # mesh bookkeeping
             self._recover_reinit(ev, failure)
-        self.report["events"].append(ev)
 
-    def _recover_reinit(self, ev, failure: FailureEvent):
-        t0 = time.monotonic()
-        cmd = root_handle_failure(self.view, failure)
-        self.epoch = cmd.epoch
+    def _reset_sync_state(self):
+        """Drop every pre-recovery synchronization artifact (open
+        barriers, watchdog clocks, ordered kills, fences, consensus
+        votes) — stale entries under a new epoch fire spurious
+        releases/kills. Every recovery path starts with this."""
         self.barrier.clear()
         self._barrier_seen.clear()
         self._stall_killed.clear()
         self.fences.clear()
         self.joins.clear()
+
+    def _recover_reinit(self, ev, failure: FailureEvent):
+        t0 = time.monotonic()
+        cmd = root_handle_failure(self.view, failure)
+        self.epoch = cmd.epoch
+        self._reset_sync_state()
         # forget lost workers' addresses (and a lost node's daemon channel)
         if failure.kind is FailureType.NODE:
             lost = [r.rank for r in cmd.respawns]
@@ -344,6 +421,41 @@ class Root:
         ev["reinit_broadcast_s"] = time.monotonic() - t0
         ev["t_recover_start"] = t0
 
+    def _recover_shrink(self, ev, failure: FailureEvent):
+        """Elastic shrinking recovery (spare pool exhausted by a node
+        loss): drop the lost ranks from the world instead of respawning.
+        Survivors get SIGREINIT + the SHRINK broadcast (shrunk rank
+        membership, bumped epoch and mesh epoch), re-balance the batch
+        over the contracted world, and resume from the consistent cut —
+        the run continues where a fixed-world deployment would abort."""
+        t0 = time.monotonic()
+        cmd = root_handle_failure_shrink(self.view, failure)
+        mesh = self.elastic.shrink_plan(failure)
+        self.epoch = cmd.epoch
+        self._reset_sync_state()
+        self.daemon_socks.pop(failure.node, None)
+        self.daemon_pids.pop(failure.node, None)
+        self.daemon_procs.pop(failure.node, None)
+        for r in cmd.dropped:
+            self.rank_table.pop(r, None)
+            self._rank_pids.pop(r, None)
+            self.done.discard(r)
+        self.world_ranks = set(cmd.world)
+        self._pending_respawn = set()
+        self._broadcast({"type": "SHRINK", "epoch": self.epoch,
+                         "world": sorted(cmd.world),
+                         "mesh_epoch": mesh.epoch if mesh else self.epoch})
+        ev["shrink"] = True
+        ev["dropped"] = sorted(cmd.dropped)
+        ev["world_after"] = len(cmd.world)
+        ev["mesh_epoch"] = mesh.epoch if mesh else None
+        ev["reinit_broadcast_s"] = time.monotonic() - t0
+        ev["t_recover_start"] = t0
+        # no respawns: every survivor's address is already known, so the
+        # full-table rebroadcast — and with it the recovery — completes
+        # immediately; the remaining cost is the survivors' rollback
+        self._maybe_broadcast_table()
+
     def _recover_cr(self, ev, failure: FailureEvent):
         t0 = time.monotonic()
         # teardown: SIGKILL every daemon (daemons take children with them
@@ -364,11 +476,7 @@ class Root:
         self.rank_table.clear()
         self._rank_pids.clear()     # every old incarnation died with the
                                     # teardown; their reports are stale
-        self.barrier.clear()
-        self._barrier_seen.clear()
-        self._stall_killed.clear()
-        self.fences.clear()
-        self.joins.clear()
+        self._reset_sync_state()
         self.done.clear()
         ev["teardown_s"] = time.monotonic() - t0
         # re-deploy the whole application
@@ -376,6 +484,7 @@ class Root:
         self.view = ClusterView.build(self.args.nodes,
                                       self.args.ranks_per_node,
                                       self.args.spares)
+        self.world_ranks = set(self.view.ranks())
         self._pending_respawn = set(range(self.world))
         self.deploy()
         ev["t_recover_start"] = t0
@@ -383,7 +492,7 @@ class Root:
     # --------------------------------------------------------------- run
 
     def _maybe_broadcast_table(self):
-        if len(self.rank_table) == self.world:
+        if len(self.rank_table) == len(self.world_ranks):
             self._broadcast({"type": "RANK_TABLE", "epoch": self.epoch,
                              "table": {str(k): list(v) for k, v in
                                        self.rank_table.items()}})
@@ -413,7 +522,7 @@ class Root:
         # a dead cluster
         tick = 0.5 if self.stall_timeout > 0 else 120.0
         last_event = time.monotonic()
-        while len(self.done) < self.world:
+        while len(self.done) < len(self.world_ranks):
             try:
                 kind, payload = self.events.get(timeout=tick)
             except queue.Empty:
@@ -469,6 +578,8 @@ class Root:
                     ev["respawn_done_s"] = time.monotonic() - t0
             elif t == "JOIN":
                 self._join_arrive(msg)
+            elif t == "SUSPECT":
+                self._handle_suspect(msg)
             elif t == "DONE":
                 self.done.add(msg["rank"])
                 self.report.setdefault("checksums", {})[str(msg["rank"])] \
@@ -505,13 +616,20 @@ def main(argv=None):
     ap.add_argument("--fail-rank", type=int, default=-1)
     ap.add_argument("--fail-kind", default="process",
                     choices=["process", "node"])
-    ap.add_argument("--mode", default="reinit", choices=["reinit", "cr"])
+    ap.add_argument("--mode", default="reinit",
+                    choices=["reinit", "cr", "shrink"])
     ap.add_argument("--scenario", default="",
                     help="declarative Scenario JSON driving fault "
                          "injection (supersedes the --fail-* flags)")
     ap.add_argument("--stall-timeout", type=float, default=0.0,
                     help="arm the stall watchdog: a barrier stuck this "
                          "many seconds gets its missing ranks killed")
+    ap.add_argument("--hb-period", type=float, default=0.0,
+                    help="arm the worker neighbour-heartbeat ring: each "
+                         "rank observes its ring successor this often")
+    ap.add_argument("--hb-timeout", type=float, default=0.0,
+                    help="consecutive heartbeat silence before the "
+                         "observer reports SUSPECT to the root")
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--report", default="")
     ap.add_argument("--pythonpath", default=os.environ.get("PYTHONPATH", ""))

@@ -78,8 +78,8 @@ class WorkerInjector:
             return
         w = self.w
         try:
-            send_msg(w.daemon_sock, {"type": "FENCE", "rank": w.rank,
-                                     "epoch": w.epoch, "step": step})
+            w._send_daemon({"type": "FENCE", "rank": w.rank,
+                            "epoch": w.epoch, "step": step})
             w._wait_release(("fence", step), w.epoch, timeout=60.0)
         except (RollbackSignal, TimeoutError, OSError):
             pass          # recovery already racing us: die anyway
@@ -95,15 +95,19 @@ class WorkerInjector:
             msg = "BREAK_CHANNEL" if f.how == "channel_break" \
                 else "KILL_NODE"
             try:
-                send_msg(w.daemon_sock, {"type": msg})
+                w._send_daemon({"type": msg})
             except OSError:
                 pass
             time.sleep(10)
             os.kill(os.getpid(), signal.SIGKILL)
         if f.how == "hang":
-            threading.Event().wait()          # silent forever: no SIGCHLD,
-            return                            # channel intact — only the
-                                              # stall watchdog sees this
+            # silent forever: no SIGCHLD, control channel intact. Going
+            # silent includes the peer fabric (heartbeat ACKs stop), so
+            # the neighbour ring — when armed — can SUSPECT us; without
+            # it only the stall watchdog sees this
+            w._silent.set()
+            threading.Event().wait()
+            return
         if f.how == "channel_break":
             # shutdown (not just close): wakes the control loop blocked
             # in recv with an EOF — it then exits the fail-stop rank
@@ -125,9 +129,15 @@ class Worker:
     def __init__(self, args):
         self.rank = args.rank
         self.world = args.world
+        # membership as rank ids, not a count: a shrinking recovery
+        # leaves a non-contiguous surviving set
+        self.world_ranks: list[int] = list(range(args.world))
         self.steps = args.steps
         self.dim = args.dim
         self.ckpt_dir = args.ckpt_dir
+        # armed by a hang injection: the rank stops answering everything
+        # (peer fabric included) while its channels stay open
+        self._silent = threading.Event()
         hooks.install(WorkerInjector(self, self._injection_plan(args)))
         self.initial_state = (RankState.RESTARTED if args.restarted
                               else RankState.NEW)
@@ -166,13 +176,28 @@ class Worker:
         self.peer_port = self.peer_sock.getsockname()[1]
         threading.Thread(target=self._peer_loop, daemon=True).start()
 
-        # control channel to parent daemon
+        # control channel to parent daemon; the send lock serializes the
+        # main loop's sends against the heartbeat observer thread's
+        # SUSPECT reports (two concurrent sendall()s would interleave)
         self.daemon_sock = connect("127.0.0.1", args.daemon_port)
-        send_msg(self.daemon_sock, {
+        self._daemon_send_lock = threading.Lock()
+        self._send_daemon({
             "type": "REGISTER_WORKER", "rank": self.rank,
             "peer_port": self.peer_port, "pid": os.getpid(),
             "restarted": args.restarted})
         threading.Thread(target=self._control_loop, daemon=True).start()
+
+        # neighbour-heartbeat ring (ULFM/FTHP-MPI-style): observe the ring
+        # successor every period; after `timeout` of consecutive silence
+        # report SUSPECT to the root — hang detection without a watchdog
+        self.hb_period = getattr(args, "hb_period", 0.0)
+        self.hb_timeout = getattr(args, "hb_timeout", 0.0)
+        if self.hb_period > 0 and self.hb_timeout > 0:
+            threading.Thread(target=self._hb_loop, daemon=True).start()
+
+    def _send_daemon(self, msg: dict):
+        with self._daemon_send_lock:
+            send_msg(self.daemon_sock, msg)
 
     def _injection_plan(self, args) -> list:
         """This rank's (index, Fault) pairs — from a scenario file when
@@ -202,7 +227,11 @@ class Worker:
                 msg = recv_msg(conn)
                 if msg is None:
                     return
-                if msg["type"] == "PUSH_CKPT":
+                if self._silent.is_set():
+                    return          # hung rank: answers nothing, to anyone
+                if msg["type"] == "HB_PING":
+                    send_msg(conn, {"type": "HB_ACK", "rank": self.rank})
+                elif msg["type"] == "PUSH_CKPT":
                     self.store.hold(msg["origin"], msg["step"],
                                     msg["_payload"])
                     send_msg(conn, {"type": "ACK"})
@@ -232,6 +261,50 @@ class Worker:
             s.close()
         except OSError:
             pass      # buddy died; the failure path will handle it
+
+    def _hb_loop(self):
+        """Heartbeat observer: ping the ring successor's peer listener
+        every period; `timeout` seconds of consecutive misses raise a
+        SUSPECT to the root (via the daemon relay). Misses during an
+        epoch transition are discarded — recovery re-forms the ring and
+        the table rebroadcast resets the observation."""
+        missed = 0.0
+        while True:
+            time.sleep(self.hb_period)
+            if self._silent.is_set():
+                return
+            ring = list(self.world_ranks)
+            if len(ring) < 2 or self.rank not in ring:
+                continue
+            succ = ring[(ring.index(self.rank) + 1) % len(ring)]
+            addr = self.rank_table.get(succ)
+            epoch0 = self.epoch
+            if addr is None:
+                missed = 0.0            # table in flux (deploy/recovery)
+                continue
+            ok = False
+            try:
+                s = connect(*addr, timeout=self.hb_period)
+                s.settimeout(max(self.hb_period, 0.05))
+                send_msg(s, {"type": "HB_PING", "from": self.rank})
+                ok = recv_msg(s) is not None
+                s.close()
+            except OSError:
+                ok = False
+            if ok:
+                missed = 0.0
+            elif self.epoch == epoch0:
+                missed += self.hb_period
+                if missed >= self.hb_timeout:
+                    try:
+                        self._send_daemon({"type": "SUSPECT", "rank": succ,
+                                           "by": self.rank,
+                                           "epoch": epoch0})
+                    except OSError:
+                        pass
+                    missed = 0.0
+            else:
+                missed = 0.0            # epoch moved: stale observation
 
     def _pull_from_buddy(self) -> dict[int, bytes]:
         """All retained checkpoints the buddy holds for this rank."""
@@ -283,6 +356,22 @@ class Worker:
                 with self.barrier_cv:
                     self.barrier_release[("fence", msg["step"])] = 1
                     self.barrier_cv.notify_all()
+            elif t == "SHRINK":
+                # elastic shrinking recovery: adopt the contracted world
+                # (membership + epoch), drop dead table entries, and
+                # re-form the buddy ring over survivors. The SIGREINIT
+                # the daemon delivered alongside unwinds the main loop;
+                # it rejoins under the new epoch and re-balances (the
+                # allreduce mean below runs over the shrunk world).
+                with self.barrier_cv:
+                    self.world_ranks = [int(r) for r in msg["world"]]
+                    self.world = len(self.world_ranks)
+                    self.epoch = msg["epoch"]
+                    for r in list(self.rank_table):
+                        if r not in self.world_ranks:
+                            self.rank_table.pop(r, None)
+                    self.barrier_cv.notify_all()
+                self.store.reform_ring(self.world_ranks)
             elif t == "SHUTDOWN":
                 os._exit(0)
 
@@ -320,7 +409,7 @@ class Worker:
     def _allreduce(self, step: int, value: float) -> float:
         """BSP collective: tree sum through daemon → root and back."""
         epoch = self.epoch
-        send_msg(self.daemon_sock, {
+        self._send_daemon({
             "type": "BARRIER", "rank": self.rank, "epoch": epoch,
             "step": step, "value": value})
         return self._wait_release((epoch, step), epoch)
@@ -331,7 +420,7 @@ class Worker:
         the newest checkpoint it can restore, the root answers with the
         minimum — the latest *consistent* global checkpoint."""
         epoch = self.epoch
-        send_msg(self.daemon_sock, {
+        self._send_daemon({
             "type": "JOIN", "rank": self.rank, "epoch": epoch,
             "avail": avail})
         return int(self._wait_release(("join", epoch), epoch))
@@ -448,7 +537,7 @@ class Worker:
             hooks.fire("worker.ckpt.pre_push", step=step + 1)
             self.store.save(step + 1, payload,
                             on_disk=self._file_path(step + 1))
-        send_msg(self.daemon_sock, {
+        self._send_daemon({
             "type": "DONE", "rank": self.rank,
             "checksum": float(np.sum(x))})
         # park until SHUTDOWN (control loop exits the process) — an event
@@ -474,6 +563,8 @@ def main(argv=None):
     ap.add_argument("--fail-rank", type=int, default=-1)
     ap.add_argument("--fail-kind", default="process")
     ap.add_argument("--scenario", default="")
+    ap.add_argument("--hb-period", type=float, default=0.0)
+    ap.add_argument("--hb-timeout", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--restarted", action="store_true")
     ap.add_argument("--epoch", type=int, default=0)

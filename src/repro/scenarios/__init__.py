@@ -12,10 +12,11 @@ consumers that need them.
 from . import hooks
 from .schema import (CASCADE_POINTS, Fault, HOWS, POINTS, Scenario,
                      STRATEGY_KEYS, TARGETS, Topology,
-                     expected_resume_step, normalize_strategy)
+                     expected_resume_step, expected_resume_steps,
+                     normalize_strategy)
 
 __all__ = [
     "CASCADE_POINTS", "Fault", "HOWS", "POINTS", "Scenario",
     "STRATEGY_KEYS", "TARGETS", "Topology", "expected_resume_step",
-    "normalize_strategy", "hooks",
+    "expected_resume_steps", "normalize_strategy", "hooks",
 ]

@@ -20,6 +20,7 @@ from .schema import Fault, Scenario, Topology
 
 T22 = Topology(nodes=2, ranks_per_node=2, spares=1)      # world 4
 T32 = Topology(nodes=3, ranks_per_node=2, spares=1)      # world 6
+T32S2 = Topology(nodes=3, ranks_per_node=2, spares=2)    # world 6, deep pool
 
 CATALOG: tuple[Scenario, ...] = (
     # ------------------------------------------------ process failures
@@ -68,6 +69,16 @@ CATALOG: tuple[Scenario, ...] = (
         topology=T22, faults=(Fault("rank", 1, 3, how="hang"),),
         stall_timeout_s=6.0,
         strategies=("reinit", "cr", "ulfm")),
+    Scenario(
+        name="proc-hang-heartbeat",
+        description="Rank goes silent with the stall watchdog DISARMED: "
+                    "only the neighbour-heartbeat ring (each rank observes "
+                    "its ring successor, SUSPECT to root on timeout) "
+                    "detects it — hang cells measure detection latency "
+                    "instead of charging the watchdog.",
+        topology=T22, faults=(Fault("rank", 1, 3, how="hang"),),
+        heartbeat_period_s=0.2, heartbeat_timeout_s=1.0,
+        strategies=("reinit", "ulfm"), tags=("fast",)),
     Scenario(
         name="proc-channel-break",
         description="Rank's control channel to its daemon breaks; the "
@@ -127,6 +138,42 @@ CATALOG: tuple[Scenario, ...] = (
         faults=(Fault("rank", 1, 3),
                 Fault("rank", 1, None, point="worker.recovery.compose")),
         strategies=("reinit",)),
+    # ------------------------------------- elastic / shrinking recovery
+    Scenario(
+        name="double-node-loss",
+        description="Two sequential whole-node losses absorbed by a "
+                    "two-deep spare pool: Algorithm 1's least-loaded "
+                    "choice re-hosts each onto a fresh spare and the "
+                    "world never shrinks (the paper's §3.2 deployment "
+                    "model at its provisioning limit).",
+        topology=T32S2,
+        faults=(Fault("node", 2, 2), Fault("node", 4, 4)),
+        strategies=("reinit", "cr", "ulfm", "shrink"), tags=("fast",)),
+    Scenario(
+        name="spare-pool-exhaustion",
+        description="Node losses outnumber the spare pool: the second "
+                    "loss finds it empty. Elastic recovery shrinks the "
+                    "world (survivors re-balance over a contracted data "
+                    "axis, bumped mesh epoch); non-elastic strategies "
+                    "over-subscribe a surviving host.",
+        topology=T32,
+        faults=(Fault("node", 2, 2), Fault("node", 4, 4)),
+        strategies=("shrink", "reinit", "cr", "ulfm"),
+        expect_bit_identical=False,      # a shrunk world sums fewer ranks
+        tags=("fast",)),
+    Scenario(
+        name="shrink-after-cascade",
+        description="The first node recovery suffers a cascading "
+                    "replacement death (ReStore's failure-during-"
+                    "recovery); a later node loss then exhausts the "
+                    "pool and the elastic path shrinks instead of "
+                    "aborting.",
+        topology=T32,
+        faults=(Fault("node", 2, 2),
+                Fault("rank", 2, None, point="worker.recovery.pulled"),
+                Fault("node", 4, 4)),
+        strategies=("shrink",),
+        expect_bit_identical=False),
     # -------------------------------------------------------- root loss
     Scenario(
         name="root-restart",

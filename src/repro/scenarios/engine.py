@@ -21,7 +21,7 @@ import subprocess
 import sys
 from typing import Optional
 
-from .schema import (ROOT_INJECTED_EXIT, Scenario, expected_resume_step,
+from .schema import (ROOT_INJECTED_EXIT, Scenario, expected_resume_steps,
                      normalize_strategy)
 
 SRC = os.path.dirname(os.path.dirname(os.path.dirname(
@@ -29,8 +29,9 @@ SRC = os.path.dirname(os.path.dirname(os.path.dirname(
 
 #: strategies the real-process runtime implements. ULFM exists only as a
 #: cost model (the paper measures its prototype; we charge its collectives
-#: and heartbeat in the sim).
-REAL_MODES = {"reinit": "reinit", "cr": "cr"}
+#: and heartbeat in the sim). "shrink" is elastic recovery: re-host onto
+#: spares while the pool lasts, contract the world once it is empty.
+REAL_MODES = {"reinit": "reinit", "cr": "cr", "shrink": "shrink"}
 
 
 def real_strategies(scenario: Scenario) -> list[str]:
@@ -46,18 +47,24 @@ class ScenarioOutcome:
     substrate: str                      # "sim" | "real"
     n_recoveries: int
     resume_steps: list
-    expected_resume: Optional[int]
+    expected_resume: list               # one cut per primary fault (None
+                                        # entries = timing-dependent)
     checksums: dict                     # real only: rank -> final checksum
     total_s: float
     detail: dict                        # substrate-specific extras
 
     @property
     def resume_consistent(self) -> bool:
-        """True when every observed resume matches the declarative
-        prediction (vacuously true when the cut is timing-dependent)."""
-        if self.expected_resume is None:
+        """True when the observed rollback consensuses match the
+        declarative per-fault predictions, in order (vacuously true when
+        every cut is timing-dependent)."""
+        exp = list(self.expected_resume or [])
+        if not any(e is not None for e in exp):
             return True
-        return all(r == self.expected_resume for r in self.resume_steps)
+        if len(self.resume_steps) != len(exp):
+            return False
+        return all(e is None or r == e
+                   for r, e in zip(self.resume_steps, exp))
 
 
 # ------------------------------------------------------------------- sim
@@ -70,16 +77,17 @@ def run_sim(scenario: Scenario, strategy: str, costs=None
     res = simulate_scenario(scenario, key, costs=costs)
     if not res.world_consistent:
         raise AssertionError(
-            f"scenario {scenario.name}/{key}: protocol shrank the world")
+            f"scenario {scenario.name}/{key}: world diverged from the "
+            f"intended membership (unplanned shrink or lost rank)")
     # resume_steps carries the sim's own consensus replay (modeled
-    # per-rank durable state, see sim.cluster._modeled_resume) — the
+    # per-rank durable state, see sim.cluster._modeled_resume_list) — the
     # harness checks it against the declarative oracle below, so the two
     # derivations guard each other
     return ScenarioOutcome(
         scenario=scenario.name, strategy=key, substrate="sim",
         n_recoveries=res.n_recoveries,
-        resume_steps=[] if res.resume_step is None else [res.resume_step],
-        expected_resume=expected_resume_step(scenario), checksums={},
+        resume_steps=list(res.resume_steps),
+        expected_resume=expected_resume_steps(scenario), checksums={},
         total_s=res.total_recovery_s,
         detail={"rows": res.rows})
 
@@ -96,7 +104,9 @@ def _root_cmd(scenario_path: str, scenario: Scenario, mode: str,
             "--steps", str(scenario.steps), "--dim", str(scenario.dim),
             "--mode", mode, "--ckpt-dir", ckpt_dir, "--report", report,
             "--scenario", scenario_path,
-            "--stall-timeout", str(scenario.stall_timeout_s)]
+            "--stall-timeout", str(scenario.stall_timeout_s),
+            "--hb-period", str(scenario.heartbeat_period_s),
+            "--hb-timeout", str(scenario.heartbeat_timeout_s)]
 
 
 def run_real(scenario: Scenario, strategy: str, workdir: str, *,
@@ -147,7 +157,7 @@ def run_real(scenario: Scenario, strategy: str, workdir: str, *,
         scenario=scenario.name, strategy=key, substrate="real",
         n_recoveries=len(events) + relaunches,
         resume_steps=resumes,
-        expected_resume=expected_resume_step(scenario),
+        expected_resume=expected_resume_steps(scenario),
         checksums=report.get("checksums", {}),
         total_s=report.get("total_s", 0.0),
         detail={"events": events, "relaunches": relaunches,
@@ -165,8 +175,9 @@ def describe(scenario: Scenario) -> str:
         when = f"@step {f.step}" if f.step is not None else "@recovery"
         lines.append(f"  fault {i}   {f.how} {f.target} {f.rank} "
                      f"{when} ({f.point})")
-    exp = expected_resume_step(scenario)
-    lines.append(f"  expected consistent cut: "
-                 f"{'timing-dependent' if exp is None else exp}; "
+    exp = expected_resume_steps(scenario)
+    cuts = ", ".join("timing-dependent" if e is None else str(e)
+                     for e in exp) or "none"
+    lines.append(f"  expected consistent cut(s): {cuts}; "
                  f"strategies: {', '.join(scenario.strategies)}")
     return "\n".join(lines)

@@ -59,10 +59,13 @@ CASCADE_POINTS = tuple(p for p in POINTS if p.startswith("worker.recovery."))
 ROOT_INJECTED_EXIT = 42
 
 #: strategy keys a scenario may request; "ulfm" is sim-only (the measured
-#: runtime implements reinit and cr — see engine.real_strategies).
-STRATEGY_KEYS = ("reinit", "cr", "ulfm")
+#: runtime implements reinit, cr and shrink — see engine.real_strategies).
+#: "shrink" is elastic recovery: spare-pool re-hosting while spares last,
+#: world contraction (no respawn) once the pool is exhausted.
+STRATEGY_KEYS = ("reinit", "cr", "ulfm", "shrink")
 STRATEGY_ALIASES = {"reinit++": "reinit", "reinitpp": "reinit",
-                    "restart": "cr", "ulfm-shrink": "ulfm"}
+                    "restart": "cr", "ulfm-shrink": "ulfm",
+                    "elastic": "shrink"}
 
 
 def normalize_strategy(name: str) -> str:
@@ -143,6 +146,12 @@ class Scenario:
     strategies: tuple[str, ...] = ("reinit", "cr", "ulfm")
     expect_bit_identical: bool = True   # recovered == fault-free state
     stall_timeout_s: float = 0.0        # >0 arms the root stall watchdog
+    # >0 arms the neighbour-heartbeat ring on the real runtime: each rank
+    # observes its ring successor every period and reports SUSPECT to the
+    # root after timeout seconds of consecutive silence — hang cells then
+    # measure detection instead of relying on the watchdog kill
+    heartbeat_period_s: float = 0.0
+    heartbeat_timeout_s: float = 0.0
     tags: tuple[str, ...] = ()
     description: str = ""
 
@@ -167,10 +176,14 @@ class Scenario:
             if f.step is not None and f.step >= self.steps:
                 raise ValueError(f"fault step {f.step} >= run steps "
                                  f"{self.steps}")
+        if (self.heartbeat_period_s > 0) != (self.heartbeat_timeout_s > 0):
+            raise ValueError("heartbeat needs both period and timeout > 0")
         if any(f.how == "hang" for f in self.faults) \
-                and self.stall_timeout_s <= 0:
-            raise ValueError("hang faults need stall_timeout_s > 0 "
-                             "(nothing else detects a silent rank)")
+                and self.stall_timeout_s <= 0 \
+                and self.heartbeat_period_s <= 0:
+            raise ValueError("hang faults need stall_timeout_s > 0 or an "
+                             "armed heartbeat ring (nothing else detects "
+                             "a silent rank)")
         if not self.strategies:
             raise ValueError("scenario needs at least one strategy")
 
@@ -203,6 +216,8 @@ class Scenario:
             "strategies": list(self.strategies),
             "expect_bit_identical": self.expect_bit_identical,
             "stall_timeout_s": self.stall_timeout_s,
+            "heartbeat_period_s": self.heartbeat_period_s,
+            "heartbeat_timeout_s": self.heartbeat_timeout_s,
             "tags": list(self.tags),
             "faults": [dataclasses.asdict(f) for f in self.faults],
         }
@@ -218,6 +233,8 @@ class Scenario:
             strategies=tuple(d.get("strategies", ("reinit", "cr", "ulfm"))),
             expect_bit_identical=d.get("expect_bit_identical", True),
             stall_timeout_s=d.get("stall_timeout_s", 0.0),
+            heartbeat_period_s=d.get("heartbeat_period_s", 0.0),
+            heartbeat_timeout_s=d.get("heartbeat_timeout_s", 0.0),
             tags=tuple(d.get("tags", ())),
             faults=tuple(Fault(**f) for f in d.get("faults", ())),
         )
@@ -239,11 +256,24 @@ class Scenario:
             return cls.from_json(f.read())
 
 
-def expected_resume_step(scenario: Scenario) -> Optional[int]:
-    """The consistent cut the rollback consensus must land on, derived
-    declaratively from the *primary* fault — the shared oracle both
-    executors are checked against. None = the resume step is legitimately
-    timing-dependent (root faults), only bit-identity is asserted.
+def _fault_resume(f: Fault) -> Optional[int]:
+    if f.target == "root":
+        return None
+    if f.point == "step":
+        return f.step
+    if f.point == "worker.ckpt.mid_write":
+        return f.step - 1
+    if f.point == "worker.ckpt.pre_push":
+        return f.step
+    return None
+
+
+def expected_resume_steps(scenario: Scenario) -> list:
+    """The consistent cuts the rollback consensus must land on — one entry
+    per *primary* (non-cascade) fault, in injection order; the shared
+    oracle both executors are checked against. A None entry means that
+    recovery's resume step is legitimately timing-dependent (root faults),
+    and only bit-identity is asserted for it.
 
       step                 victim dies behind the FENCE: every rank has
                            committed checkpoint `step`  -> resume = step
@@ -254,17 +284,16 @@ def expected_resume_step(scenario: Scenario) -> Optional[int]:
                            restore merges buddy + file  -> resume = step
       cascades             a second failure during recovery replays the
                            same consensus over the same frames — the
-                           primary fault's cut stands.
+                           primary fault's cut stands (no extra entry).
+
+    Sequential primary faults (double node loss, spare-pool exhaustion)
+    each trigger their own recovery and therefore their own entry.
     """
-    if not scenario.faults:
-        return None
-    f0 = scenario.faults[0]
-    if f0.target == "root":
-        return None
-    if f0.point == "step":
-        return f0.step
-    if f0.point == "worker.ckpt.mid_write":
-        return f0.step - 1
-    if f0.point == "worker.ckpt.pre_push":
-        return f0.step
-    return None
+    return [_fault_resume(f) for f in scenario.faults
+            if f.point not in CASCADE_POINTS]
+
+
+def expected_resume_step(scenario: Scenario) -> Optional[int]:
+    """Back-compat single-fault view: the first primary fault's cut."""
+    steps = expected_resume_steps(scenario)
+    return steps[0] if steps else None

@@ -51,6 +51,13 @@ class ClusterCosts:
     ulfm_rounds: int = 4                    # revoke, shrink, agree, merge
     heartbeat_detect_s: float = 0.05        # observation period / 2
 
+    # --- elastic shrinking recovery: no respawn anywhere — a SHRINK
+    # broadcast, SIGREINIT to survivors, then the batch re-balance
+    # (re-partitioning the step's work over the contracted data axis:
+    # a metadata exchange plus per-survivor reassignment, not bulk state
+    # movement — survivors restore from their own local copies)
+    shrink_rebalance_s: float = 0.05
+
     # --- storage
     lustre_agg_bw_MBps: float = 50_000.0    # shared parallel-FS aggregate
     lustre_latency_s: float = 0.02
@@ -81,6 +88,17 @@ class ClusterCosts:
         """Local snapshot + buddy push overlap; pairs are parallel."""
         return mb_per_rank / self.mem_copy_bw_MBps + \
             mb_per_rank / self.nic_bw_MBps
+
+    def shrink_recovery_s(self, n_ranks: int, ranks_per_node: int) -> float:
+        """SHRINK broadcast over the root->daemon tree + survivor signals
+        + batch re-balance + the rejoin barrier. No spawn term at all —
+        that absence is the mechanism's whole advantage."""
+        n_nodes = max(1, n_ranks // max(ranks_per_node, 1))
+        bcast = self.msg_latency_s * (1 + math.ceil(
+            math.log2(max(n_nodes, 2))))
+        return bcast + self.signal_s * ranks_per_node \
+            + self.shrink_rebalance_s \
+            + self.tree_barrier_s(n_ranks, ranks_per_node)
 
     def ulfm_recovery_collectives_s(self, n_ranks: int) -> float:
         per_round = self.ulfm_round_alpha_s * math.log2(max(n_ranks, 2)) \

@@ -31,10 +31,11 @@ import jax.numpy as jnp
 from repro.checkpoint import FileCheckpointer, buddy_exchange, \
     restore_from_buddy
 from repro.checkpoint.policy import CheckpointPolicy
-from repro.core import (ClusterView, FailureEvent, FailureType, FaultInjector,
-                        RankState, RecoveryReport, ROLLBACK, RollbackSignal,
+from repro.core import (ClusterView, ElasticManager, FailureEvent,
+                        FailureType, FaultInjector, MeshEpoch, RankState,
+                        RecoveryReport, ROLLBACK, RollbackSignal,
                         apply_recovery, get_strategy, reinit_main,
-                        root_handle_failure)
+                        root_handle_failure, root_handle_failure_shrink)
 from repro.models.model import Model
 from repro.sharding.partition import constraint_scope, state_shardings
 from repro.sharding.rules import ShardingRules, PRESETS
@@ -86,6 +87,13 @@ class Trainer:
         self.view = ClusterView.build(tc.n_nodes, tc.ranks_per_node,
                                       tc.spare_nodes)
         self.n_ranks = tc.n_nodes * tc.ranks_per_node
+        # elastic strategy: spare-pool consultation + shrink decision;
+        # one node = one data-parallel group, the mesh epoch keys the
+        # compiled-step cache across shrinks
+        self.elastic = ElasticManager(
+            self.view, MeshEpoch(epoch=0, data_parallel=tc.n_nodes,
+                                 model_parallel=tc.ranks_per_node)) \
+            if self.strategy.key == "shrink" else None
         self.policy = CheckpointPolicy(every_steps=tc.ckpt_every,
                                        async_file=tc.async_file_ckpt)
         self.file_ckpt = FileCheckpointer(tc.ckpt_dir,
@@ -160,12 +168,17 @@ class Trainer:
 
     def _handle_failure(self, failure: FailureEvent) -> RecoveryReport:
         rep = RecoveryReport(strategy=self.strategy.name, failure=failure)
+        if self.elastic is not None \
+                and self.elastic.decide(failure) == "shrink":
+            return self._handle_failure_shrink(rep, failure)
 
         # --- detection (child monitor / channel break at the root)
         t0 = time.monotonic()
         cmd = root_handle_failure(self.view, failure)
         states = apply_recovery(self.view, cmd)
         assert len(states) == self.n_ranks      # non-shrinking invariant
+        if self.elastic is not None:
+            self.elastic.nonshrink_plan(failure)     # mesh bookkeeping
         rep.detect_s = time.monotonic() - t0
 
         # --- MPI recovery: what each strategy actually does
@@ -213,6 +226,45 @@ class Trainer:
                 rollback_step = step
         rep.ckpt_read_s = time.monotonic() - t0
         rep.rollback_step = rollback_step
+        self.reports.append(rep)
+        return rep
+
+    def _handle_failure_shrink(self, rep: RecoveryReport,
+                               failure: FailureEvent) -> RecoveryReport:
+        """Elastic shrinking recovery in the in-process SPMD driver: the
+        spare pool is exhausted by a node loss, so the data axis contracts
+        instead of re-hosting. Survivors keep process + device state; the
+        mesh epoch bump invalidates the compiled step (its logical world
+        changed), and the batch re-balances over the survivors — the
+        step-indexed TokenPipeline keeps the *global* batch, so the run
+        stays on the same data trajectory through the shrink."""
+        t0 = time.monotonic()
+        cmd = root_handle_failure_shrink(self.view, failure)
+        self.elastic.shrink_plan(failure)
+        self.n_ranks = len(cmd.world)
+        rep.detect_s = time.monotonic() - t0
+
+        t0 = time.monotonic()
+        self._build_step()           # mesh epoch bumped: re-lower the step
+        self.mem_ckpt = None         # the lost node took its buddy-held
+                                     # copies with it (decide() only
+                                     # shrinks on node failures)
+        rep.mpi_recovery_s = time.monotonic() - t0
+
+        # survivors roll back to their newest durable state; with the
+        # buddy copies gone that is the file checkpoint at the cut
+        t0 = time.monotonic()
+        self.file_ckpt.wait()
+        step, state = self.file_ckpt.load_latest()
+        if step is None:
+            self.state = self.init_state()
+            rollback_step = 0
+        else:
+            self.state = jax.tree.map(jnp.asarray, state)
+            rollback_step = step
+        rep.ckpt_read_s = time.monotonic() - t0
+        rep.rollback_step = rollback_step
+        rep.world_after = self.n_ranks
         self.reports.append(rep)
         return rep
 

@@ -85,3 +85,64 @@ def test_no_survivors_raises():
     with pytest.raises(RuntimeError):
         root_handle_failure(
             view, FailureEvent(kind=FailureType.NODE, node="node0"))
+
+
+# ------------------------------------------------ elastic / shrink path
+
+@given(clusters(), st.data())
+@settings(max_examples=50, deadline=None)
+def test_shrink_node_failure_invariants(cluster, data):
+    from repro.core import root_handle_failure_shrink
+    view, n_nodes, rpn = cluster
+    if n_nodes < 2:
+        return                        # shrinking away the last node is
+                                      # illegal by construction
+    ranks = view.ranks()
+    victim = data.draw(st.sampled_from(ranks))
+    dead = view.parent(victim)
+    lost = set(view.children[dead])
+    before = set(ranks)
+    e0 = view.epoch
+    cmd = root_handle_failure_shrink(
+        view, FailureEvent(kind=FailureType.NODE, rank=victim, node=dead))
+    # the world shrinks by exactly the dead node's ranks, nothing respawns
+    assert set(cmd.dropped) == lost
+    assert set(cmd.world) == before - lost
+    assert set(view.ranks()) == before - lost
+    assert dead not in view.children
+    assert cmd.epoch == view.epoch > e0
+
+
+def test_elastic_decide_consults_spare_pool():
+    from repro.core import ElasticManager, MeshEpoch
+    view = ClusterView.build(2, 2, 1)
+    em = ElasticManager(view, MeshEpoch(epoch=0, data_parallel=2,
+                                        model_parallel=2))
+    node_f = FailureEvent(kind=FailureType.NODE, rank=2, node="node1")
+    proc_f = FailureEvent(kind=FailureType.PROCESS, rank=1)
+    # process failures never shrink; node failures respawn while a spare
+    # slot remains
+    assert em.decide(proc_f) == "respawn"
+    assert em.decide(node_f) == "respawn"
+    # Algorithm 1 re-hosts onto the spare, emptying the pool
+    root_handle_failure(view, node_f)
+    assert em.spares() == []
+    assert em.decide(node_f) == "shrink"
+    # ...but never below the data-parallel floor
+    em.mesh = MeshEpoch(epoch=1, data_parallel=1, model_parallel=2)
+    assert em.decide(node_f) == "respawn"
+
+
+def test_shrink_plan_contracts_and_bumps_epoch():
+    from repro.core import ElasticManager, MeshEpoch
+    view = ClusterView.build(3, 2, 0)
+    em = ElasticManager(view, MeshEpoch(epoch=0, data_parallel=3,
+                                        model_parallel=2))
+    node_f = FailureEvent(kind=FailureType.NODE, rank=4, node="node2")
+    mesh = em.shrink_plan(node_f)
+    assert mesh is not None
+    assert mesh.data_parallel == 2 and mesh.epoch == 1
+    mesh = em.shrink_plan(node_f)
+    assert mesh.data_parallel == 1 and mesh.epoch == 2
+    # at the floor: shrink refused, caller falls back to global restart
+    assert em.shrink_plan(node_f) is None

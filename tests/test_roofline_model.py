@@ -48,7 +48,8 @@ def test_analytic_flops_vs_cost_analysis(arch):
             return model.loss_fn(p, b)[0]
         params = model.abstract_params()
         comp = jax.jit(fwd).lower(params, batch).compile()
-        measured = comp.cost_analysis()["flops"]
+        from repro.launch.hlo_analysis import compiled_cost_analysis
+        measured = compiled_cost_analysis(comp)["flops"]
         analytic = forward_flops(cfg, B, S, flash=False)
         ratio = analytic / measured
         print("RATIO", ratio)
@@ -66,9 +67,9 @@ def test_while_trip_count_extraction():
         import jax, jax.numpy as jnp
         from repro.launch.hlo_analysis import while_report, \\
             collective_summary
+        from repro.launch.mesh import make_host_mesh
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((2,2), ("data","model"),
-            axis_types=(jax.sharding.AxisType.Auto,)*2)
+        mesh = make_host_mesh((2,2), ("data","model"))
         def fn(params, x):
             def body(h, w):
                 return jnp.tanh(h @ w), None

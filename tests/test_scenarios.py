@@ -33,7 +33,8 @@ import pytest
 from repro.core.events import FailureType
 from repro.core.failure import FaultInjector, ScenarioInjector
 from repro.scenarios import (Fault, Scenario, Topology,
-                             expected_resume_step, hooks)
+                             expected_resume_step, expected_resume_steps,
+                             hooks)
 from repro.scenarios import engine
 from repro.scenarios.catalog import BY_NAME, CATALOG, T22, T32, fault_free
 from repro.sim.cluster import simulate_scenario
@@ -81,6 +82,12 @@ def test_expected_resume_oracle():
         Fault("rank", 1, 3),
         Fault("rank", 1, None, point="worker.recovery.pulled")))
     assert expected_resume_step(casc) == 3       # primary fault's cut
+    # cascades add no entry of their own
+    assert expected_resume_steps(casc) == [3]
+    # sequential primary faults each get their own consensus entry
+    seq = Scenario(name="s", topology=T32, steps=6, faults=(
+        Fault("node", 2, 2), Fault("node", 4, 4)))
+    assert expected_resume_steps(seq) == [2, 4]
 
 
 def test_catalog_breadth():
@@ -97,7 +104,17 @@ def test_catalog_breadth():
     assert any(s.topology.nodes >= 3 for s in CATALOG)   # 3-node coverage
     assert any(s.is_cascading for s in CATALOG)
     strategies = {st for s in CATALOG for st in s.strategies}
-    assert strategies == {"reinit", "cr", "ulfm"}
+    assert strategies == {"reinit", "cr", "ulfm", "shrink"}
+    # elastic coverage: multi-node-loss cells exist, and at least one
+    # exhausts the spare pool (more node faults than spares)
+    multi = [s for s in CATALOG
+             if sum(1 for f in s.faults if f.target == "node") >= 2]
+    assert multi
+    assert any(sum(1 for f in s.faults if f.target == "node")
+               > s.topology.spares for s in multi)
+    # a hang cell detected by the heartbeat ring, not the watchdog
+    assert any(s.heartbeat_period_s > 0 and s.stall_timeout_s == 0
+               and any(f.how == "hang" for f in s.faults) for s in CATALOG)
     # every scenario is executable on the real runtime or sim-only by
     # explicit choice (ulfm) — none is silently dead
     for s in CATALOG:
@@ -190,6 +207,58 @@ def test_sim_cascade_charges_two_recoveries():
     assert len(out.rows) == 2 and out.rows[1]["cascade"]
     single = simulate_scenario(BY_NAME["proc-sigkill-midstep"], "reinit")
     assert out.total_recovery_s > single.total_recovery_s
+
+
+# ------------------------------------------------- elastic / shrink sim
+
+ELASTIC_CELLS = ["double-node-loss", "spare-pool-exhaustion",
+                 "shrink-after-cascade"]
+
+
+@pytest.mark.parametrize("name", ELASTIC_CELLS)
+@pytest.mark.parametrize("strategy", ["reinit", "cr", "ulfm", "shrink"])
+def test_sim_elastic_matrix(name, strategy):
+    """Every elastic cell through every strategy — including the ones the
+    cell itself does not list, so the sim coverage is the full x4 grid."""
+    sc = BY_NAME[name]
+    out = engine.run_sim(sc, strategy)
+    assert out.n_recoveries == len(sc.faults)
+    assert out.resume_consistent, \
+        f"{name}/{strategy}: {out.resume_steps} != {out.expected_resume}"
+    rows = out.detail["rows"]
+    if strategy == "shrink":
+        # the world contracts exactly when a node loss finds the pool
+        # empty — never earlier, never for non-elastic strategies
+        spares = sc.topology.spares
+        node_faults = 0
+        for r, f in zip(rows, sc.faults):
+            expect_shrink = (f.target == "node" and node_faults >= spares)
+            node_faults += f.target == "node"
+            assert r["shrink"] == expect_shrink, (name, r)
+    else:
+        assert not any(r["shrink"] for r in rows)
+
+
+def test_sim_shrink_cheaper_than_node_respawn():
+    """The mechanism's point: no spawn term on the shrink path. The
+    exhausted-pool recovery must be cheaper than the spare-respawn one
+    in the same scenario, and it restores from survivor memory, not
+    the shared filesystem."""
+    out = simulate_scenario(BY_NAME["spare-pool-exhaustion"], "shrink")
+    respawned, shrunk = out.rows
+    assert not respawned["shrink"] and shrunk["shrink"]
+    assert shrunk["mpi_recovery_s"] < respawned["mpi_recovery_s"]
+    assert shrunk["ckpt_read_s"] < respawned["ckpt_read_s"]
+
+
+def test_sim_heartbeat_ring_beats_watchdog_on_hangs():
+    """The ring pays its timeout, the watchdog its stall window — the
+    ring's window is chosen far tighter, and both exceed one period."""
+    ring = simulate_scenario(BY_NAME["proc-hang-heartbeat"], "reinit")
+    watchdog = simulate_scenario(BY_NAME["proc-hang"], "reinit")
+    hb = BY_NAME["proc-hang-heartbeat"]
+    assert ring.rows[0]["detect_s"] > hb.heartbeat_timeout_s
+    assert ring.rows[0]["detect_s"] < watchdog.rows[0]["detect_s"]
 
 
 # ------------------------------------------------------ crash atomicity
@@ -313,6 +382,46 @@ def _assert_outcome(sc, out, ff):
     if sc.expect_bit_identical:
         assert out.checksums == ff, \
             f"{sc.name}/{out.strategy}: recovered state diverged"
+
+
+def test_heartbeat_detects_hung_neighbour(tmp_path):
+    """Tentpole unit check, on the live process tree: a hung rank is
+    SUSPECTed by its ring observer within the heartbeat window — the
+    stall watchdog is DISARMED (stall_timeout_s == 0), so nothing else
+    could have detected it."""
+    sc = BY_NAME["proc-hang-heartbeat"]
+    assert sc.stall_timeout_s == 0
+    out = engine.run_real(sc, "reinit", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    assert len(events) == 1
+    ev = events[0]
+    assert ev["detected_by"] == "heartbeat"
+    # detection within k periods past the timeout (scheduling slack on a
+    # loaded host included) — nowhere near any watchdog-scale constant
+    k = 5
+    assert ev["detect_latency_s"] <= \
+        sc.heartbeat_timeout_s + k * sc.heartbeat_period_s + 1.0
+    assert out.resume_consistent
+    assert out.resume_steps == [sc.faults[0].step]
+
+
+@pytest.mark.scenario_fast
+def test_real_shrink_world_contracts(tmp_path):
+    """The scenario_fast shrink cell, checked in mechanism detail: the
+    first node loss is absorbed by the spare (no shrink), the second
+    finds the pool empty and drops that node's ranks — survivors
+    re-balance, resume at the oracle cut, and only they report DONE."""
+    sc = BY_NAME["spare-pool-exhaustion"]
+    out = engine.run_real(sc, "shrink", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    assert [bool(ev.get("shrink")) for ev in events] == [False, True]
+    shrunk = events[1]
+    assert shrunk["world_after"] == 4
+    assert len(shrunk["dropped"]) == sc.topology.ranks_per_node
+    assert shrunk["mesh_epoch"] is not None
+    assert len(out.checksums) == 4          # survivors only
+    assert out.resume_consistent, \
+        (out.resume_steps, out.expected_resume)
 
 
 @pytest.mark.scenario_fast

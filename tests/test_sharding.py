@@ -57,10 +57,9 @@ def test_every_param_leaf_gets_a_spec():
 
 
 def test_divisible_drops_nondividing_axes():
+    from repro.launch.mesh import make_host_mesh
     from repro.sharding.partition import _divisible
-    mesh = jax.make_mesh(
-        (1,), ("model",),
-        axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_host_mesh((1,), ("model",))
     # 1-way axis always divides
     assert _divisible(P("model"), (7,), mesh) == P("model")
 
@@ -73,11 +72,11 @@ def test_buddy_exchange_multidevice():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
         from repro.checkpoint import buddy_exchange, restore_from_buddy
+        from repro.launch.mesh import make_host_mesh
         from repro.sharding.rules import ShardingRules
         # vocab axis (dim 0 of the table) carries the data sharding here
         rules = ShardingRules(batch="data", vocab="data")
-        mesh = jax.make_mesh((8,), ("data",),
-            axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_host_mesh((8,), ("data",))
         from jax.sharding import NamedSharding, PartitionSpec as P
         x = jnp.arange(32.0).reshape(8, 4)
         state = {"embedding": {"table": jax.device_put(

@@ -107,6 +107,67 @@ def test_resume_from_disk(tmp_path):
         tree_digest(jax.device_get(tr3.state["params"]))
 
 
+def _shrink_scenario(n_nodes, rpn, spares, fail_rank, fail_step):
+    from repro.scenarios import Fault, Scenario, Topology
+    return Scenario(
+        name="trainer-node-loss", steps=STEPS,
+        topology=Topology(nodes=n_nodes, ranks_per_node=rpn,
+                          spares=spares),
+        faults=(Fault("node", fail_rank, fail_step),),
+        strategies=("shrink",), expect_bit_identical=False)
+
+
+def test_elastic_shrink_trainer_continues(tmp_path, reference):
+    """ScenarioInjector routes a shrink cell through the in-process SPMD
+    trainer: with zero spares, a node loss contracts the world instead of
+    re-hosting — the run finishes on the shrunk mesh, resumes from the
+    checkpointed cut, and (global batch unchanged) still lands on the
+    bit-identical final state."""
+    from repro.core import ScenarioInjector
+    ref_digest, _ = reference
+    inj = ScenarioInjector(_shrink_scenario(2, 4, 0, fail_rank=2,
+                                            fail_step=4))
+    model = Model(CFG)
+    data = TokenPipeline(CFG.vocab_size, 4, 32, seed=7)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=STEPS)
+    tc = TrainConfig(total_steps=STEPS, ckpt_dir=str(tmp_path),
+                     strategy="shrink", n_nodes=2, ranks_per_node=4,
+                     spare_nodes=0)
+    tr = Trainer(model, data, opt, tc, injector=inj)
+    res = tr.run()
+    assert res["final_step"] == STEPS
+    rep = res["reports"][0]
+    assert rep.world_after == 4 and tr.n_ranks == 4
+    assert rep.rollback_step == 4
+    assert sorted(tr.view.ranks()) == [4, 5, 6, 7]
+    assert tr.elastic.mesh.data_parallel == 1 \
+        and tr.elastic.mesh.epoch == 1
+    assert tree_digest(jax.device_get(tr.state["params"])) == ref_digest
+
+
+def test_elastic_trainer_spare_absorbs_first_node_loss(tmp_path,
+                                                       reference):
+    """With a spare in the pool, the same node loss under the elastic
+    strategy re-hosts (Algorithm 1) instead of shrinking."""
+    from repro.core import ScenarioInjector
+    ref_digest, _ = reference
+    inj = ScenarioInjector(_shrink_scenario(2, 4, 1, fail_rank=2,
+                                            fail_step=4))
+    model = Model(CFG)
+    data = TokenPipeline(CFG.vocab_size, 4, 32, seed=7)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=STEPS)
+    tc = TrainConfig(total_steps=STEPS, ckpt_dir=str(tmp_path),
+                     strategy="shrink", n_nodes=2, ranks_per_node=4,
+                     spare_nodes=1)
+    tr = Trainer(model, data, opt, tc, injector=inj)
+    res = tr.run()
+    assert res["final_step"] == STEPS
+    rep = res["reports"][0]
+    assert rep.world_after is None and tr.n_ranks == 8
+    assert tr.elastic.spares() == []        # the spare absorbed the loss
+    assert tree_digest(jax.device_get(tr.state["params"])) == ref_digest
+
+
 def test_ulfm_charges_heartbeat_overhead(tmp_path):
     _, res_u = _run(tmp_path, "ulfm", tag="u")
     model = Model(CFG)

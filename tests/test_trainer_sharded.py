@@ -26,8 +26,8 @@ CODE = """
     from repro.sharding.rules import ShardingRules
     from repro.train import AdamWConfig, TokenPipeline, TrainConfig, Trainer
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh((8,), ("data",))
     rules = ShardingRules(batch="data", embed="data")
     cfg = reduced(get_config("paper-demo"))
     model = Model(cfg)
