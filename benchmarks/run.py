@@ -26,6 +26,7 @@ REGRESSION_TOLERANCE = 0.20
 
 
 def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
+                     growback: dict | None = None,
                      path: str = BENCH_JSON) -> bool:
     """Returns True only when the file was actually (re)written."""
     if not ckpt_io:
@@ -51,6 +52,18 @@ def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
         doc["new"]["recovery_e2e_s"] = e2e["recovery_e2e_new_s"]
         doc["speedup"]["recovery"] = e2e["recovery_speedup"]
         doc["recovery_ranks"] = e2e["ranks"]
+    if growback:
+        # elastic lifecycle on the live runtime: shrink -> grow-back
+        doc["growback"] = {"shrink_s": growback.get("shrink_s"),
+                           "grow_s": growback.get("grow_s"),
+                           "e2e_s": growback.get("growback_e2e_s")}
+    elif os.path.exists(path):
+        # --fast runs skip the real-process growback: carry the
+        # committed numbers forward instead of dropping the row
+        with open(path) as f:
+            prior = json.load(f).get("growback")
+        if prior:
+            doc["growback"] = prior
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -68,12 +81,16 @@ def check_regression(path: str = BENCH_JSON,
         return 0
     with open(path) as f:
         committed = json.load(f)
-    from benchmarks import checkpoint_bench, recovery_time
+    from benchmarks import checkpoint_bench, recovery_time, runtime_bench
+
+    # the growback row only gates when the committed baseline has one
+    # (the real-process lifecycle is ~15 s per pass — skip it otherwise)
+    gate_growback = bool(committed.get("growback", {}).get("e2e_s"))
 
     def measure() -> dict:
         ckpt_io = checkpoint_bench.bench_file_io()
         e2e = recovery_time.e2e_rows(ckpt_io)
-        return {
+        out = {
             ("new", "write_s"): ckpt_io.get("bin_write_s"),
             ("new", "read_s"): ckpt_io.get("bin_read_s"),
             ("new", "recovery_e2e_s"): e2e["recovery_e2e_new_s"],
@@ -81,6 +98,10 @@ def check_regression(path: str = BENCH_JSON,
             ("delta", "read_s"): ckpt_io.get("bin_delta_read_s"),
             ("delta", "bytes_frac"): ckpt_io.get("delta_bytes_frac"),
         }
+        if gate_growback:
+            gb = runtime_bench.bench_growback(report=lambda *_: None)
+            out[("growback", "e2e_s")] = gb.get("growback_e2e_s")
+        return out
 
     # best of three full passes: container CPU/disk contention makes a
     # single wall-time sample far too noisy to gate on (observed >2x
@@ -131,8 +152,17 @@ def main() -> None:
         failures += 1
         print("fig6/fig7_recovery_FAILED,0,error")
         traceback.print_exc()
+    growback = None
+    if not fast:
+        from benchmarks import runtime_bench
+        try:
+            growback = runtime_bench.bench_growback(report=print)
+        except Exception:                 # noqa: BLE001
+            failures += 1
+            print("bench_growback_FAILED,0,error")
+            traceback.print_exc()
     try:
-        if write_bench_json(ckpt_io, e2e):
+        if write_bench_json(ckpt_io, e2e, growback):
             print(f"bench_json_written,0,{BENCH_JSON}")
         else:
             print("bench_json_skipped,0,checkpoint_bench_failed")
@@ -148,7 +178,10 @@ def main() -> None:
     ]
     if not fast:
         from benchmarks import runtime_bench
-        suites.append(("real-process runtime", runtime_bench.run))
+        # growback already measured above (feeds the bench json)
+        suites.append(("real-process runtime",
+                       lambda report: runtime_bench.run(report,
+                                                        growback=False)))
 
     for label, fn in suites:
         try:

@@ -105,9 +105,42 @@ def bench_detection_latency(report=print, *, stall_timeout_s: float = 3.0,
     return out
 
 
-def run(report=print):
+def bench_growback(report=print) -> dict:
+    """Shrink -> grow end-to-end on the live process tree: the
+    `shrink-then-growback` cell measured from the node loss to the
+    grow's consensus release. Reports the two recovery times and the
+    whole-lifecycle wall clock; the growback number lands in
+    BENCH_checkpoint.json behind the --check-regression gate."""
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    from repro.scenarios.catalog import get_scenario
+    from repro.scenarios.engine import run_real
+
+    sc = get_scenario("shrink-then-growback")
+    with tempfile.TemporaryDirectory() as tmp:
+        res = run_real(sc, "shrink", tmp, timeout=180)
+    events = res.detail["events"]
+    shrink_ev = next(ev for ev in events if ev.get("shrink"))
+    grow_ev = next(ev for ev in events if ev.get("grow"))
+    shrink_s = shrink_ev.get("mpi_recovery_s", 0.0)
+    # grow e2e: REJOIN admission -> GROW broadcast -> re-admitted ranks
+    # respawned/registered -> consensus released
+    grow_s = grow_ev.get("mpi_recovery_s", 0.0)
+    e2e = grow_ev.get("join_release_s", grow_s)
+    out = {"shrink_s": shrink_s, "grow_s": grow_s, "growback_e2e_s": e2e,
+           "world_restored": grow_ev.get("world_after")}
+    report(f"growback_shrink,{shrink_s * 1e6:.0f},recovery_s={shrink_s:.3f}")
+    report(f"growback_grow,{grow_s * 1e6:.0f},recovery_s={grow_s:.3f}")
+    report(f"growback_e2e,{e2e * 1e6:.0f},"
+           f"world_restored={out['world_restored']}")
+    return out
+
+
+def run(report=print, growback=True):
     bench_buddy_spill(report)
     bench_detection_latency(report)
+    if growback:       # run.py measures it separately for the bench json
+        bench_growback(report)
     with tempfile.TemporaryDirectory() as tmp:
         results = {}
         for mode in ["reinit", "cr"]:

@@ -29,7 +29,17 @@ TABLE2 = {
 }
 
 
+#: restore scheme of a grow-back (elastic re-admission): the rejoining
+#: ranks were *out of the world* — nobody held buddy copies for them, so
+#: their last durable state is the file tier (the checkpoints they
+#: committed before being dropped, which survivors keep pinned as the
+#: grow anchor). Survivors roll back from their own local copies.
+GROW_RESTORE_KIND = "file"
+
+
 def checkpoint_kind_for(failure: str, strategy: str) -> str:
+    if failure == "grow":
+        return GROW_RESTORE_KIND
     return TABLE2[(failure, strategy)]
 
 

@@ -1,88 +1,36 @@
-"""Elastic mesh management: spare capacity, re-meshing, shrink option.
+"""Elastic mesh management: spare capacity, re-meshing, shrink + grow.
 
 The paper's deployment requires over-provisioned slots to survive node
-failures (§3.2 "Application Deployment"). Here that is a SparePool of empty
-nodes in the ClusterView; Algorithm 1's least-loaded choice naturally picks
-them first. Beyond the paper, `shrink_plan` implements shrinking recovery
-for data-parallel groups (the paper's future work): instead of re-spawning,
-the data axis contracts and the batch is re-balanced over survivors.
+failures (§3.2 "Application Deployment"); `shrink`/`grow` go beyond the
+paper (its deferred future work): when the pool is exhausted the data
+axis contracts instead of re-spawning, and a repaired node's REJOIN
+re-expands it back toward the initial world.
+
+All the actual state lives in `repro.core.membership.MembershipMachine`
+— this module keeps the historical `ElasticManager` name plus the
+mesh-only `nonshrink_plan` helper the global-restart recovery paths use
+(they run Algorithm 1 themselves and only need the mesh bookkeeping).
+Shrinks and grows go through the machine's audited transitions
+(`shrink`/`grow`/`grant_spare`) exclusively.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from .events import FailureEvent, FailureType
-from .protocol import ClusterView
+from .membership import MembershipMachine, MeshEpoch, RankMembership, \
+    Transition
+
+__all__ = ["ElasticManager", "MeshEpoch", "RankMembership", "Transition"]
 
 
-@dataclasses.dataclass
-class MeshEpoch:
-    """One incarnation of the device mesh. The epoch is the compiled-step
-    cache key: recovery that re-forms the mesh bumps the epoch, anything
-    that keeps it (Reinit++ process recovery) reuses compiled artifacts."""
-    epoch: int
-    data_parallel: int
-    model_parallel: int
-    pods: int = 1
+class ElasticManager(MembershipMachine):
+    """The membership machine under its original name."""
 
-    @property
-    def n_shards(self) -> int:
-        return self.pods * self.data_parallel * self.model_parallel
-
-
-@dataclasses.dataclass
-class ElasticManager:
-    view: ClusterView
-    mesh: MeshEpoch
-    min_data_parallel: int = 1
-
-    def spares(self) -> list[str]:
-        return self.view.spares()
-
-    def grow(self, node: str):
-        """Add a fresh (spare) node to the pool."""
-        self.view.children.setdefault(node, set())
-
-    def decide(self, failure: FailureEvent) -> str:
-        """The spare-pool consultation of §3.2, extended past the paper:
-
-          "respawn"  a spare slot (or a surviving host, for process
-                     failures) can absorb the loss — global-restart
-                     recovery re-hosts the failed ranks (Algorithm 1);
-          "shrink"   the spare pool is exhausted by a node loss and the
-                     data axis can still legally contract — survivors
-                     re-balance and continue on a shrunk mesh.
-
-        Falls back to "respawn" (over-subscription) when shrinking would
-        cross the min_data_parallel floor."""
-        if failure.kind is not FailureType.NODE:
-            return "respawn"
-        if self.spares():
-            return "respawn"
-        if self.mesh.data_parallel > self.min_data_parallel:
-            return "shrink"
-        return "respawn"
-
-    def nonshrink_plan(self, failure: FailureEvent):
+    def nonshrink_plan(self, failure: FailureEvent) -> MeshEpoch:
         """Global-restart (paper): same mesh shape, failed shard re-hosted.
         Mesh epoch only bumps for node failures (device set changed)."""
         if failure.kind is FailureType.NODE:
             self.mesh = dataclasses.replace(self.mesh,
                                             epoch=self.mesh.epoch + 1)
-        return self.mesh
-
-    def shrink_plan(self, failure: FailureEvent) -> Optional[MeshEpoch]:
-        """Beyond-paper shrinking recovery: drop one data-parallel group.
-
-        Only legal when the lost ranks map onto a whole DP slice and the
-        remaining DP degree stays above the floor; returns None when
-        shrinking is not possible (caller falls back to global-restart)."""
-        if self.mesh.data_parallel <= self.min_data_parallel:
-            return None
-        self.mesh = MeshEpoch(
-            epoch=self.mesh.epoch + 1,
-            data_parallel=self.mesh.data_parallel - 1,
-            model_parallel=self.mesh.model_parallel,
-            pods=self.mesh.pods)
         return self.mesh

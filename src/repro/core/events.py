@@ -63,6 +63,20 @@ class ShrinkCommand:
     world: tuple[int, ...]           # surviving rank ids (sorted)
 
 
+@dataclasses.dataclass(frozen=True)
+class GrowCommand:
+    """The broadcast of a grow-back: a repaired node re-registered
+    (REJOIN) and the admission policy re-admits previously dropped ranks
+    onto it. Survivors roll back to the pinned pre-shrink cut and the
+    re-admitted ranks restore from their last durable checkpoints; the
+    world re-expands and the mesh epoch bumps (new logical shape)."""
+    added: tuple[int, ...]           # ranks re-entering the world
+    epoch: int
+    world: tuple[int, ...]           # full rank membership after the grow
+    node: str                        # the rejoined daemon hosting `added`
+    mesh_epoch: int = 0
+
+
 @dataclasses.dataclass
 class RecoveryReport:
     """Timings of one recovery, broken down the way the paper reports them

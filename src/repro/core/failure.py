@@ -132,25 +132,62 @@ class ScenarioInjector:
 
     def __post_init__(self):
         self._fired: set = set()
+        self._fired_repairs: set = set()
 
     def reset(self):
         self._fired.clear()
+        self._fired_repairs.clear()
         self.enabled = True
 
+    def _to_event(self, f, step, view) -> FailureEvent:
+        if f.target == "node":
+            node = view.parent(f.rank) if view is not None else None
+            return FailureEvent(kind=FailureType.NODE, node=node,
+                                rank=f.rank, at_step=step)
+        return FailureEvent(kind=FailureType.PROCESS, rank=f.rank,
+                            at_step=step)
+
     def check(self, step: int, view=None) -> Optional[FailureEvent]:
+        return self.check_point("step", step=step, view=view)
+
+    def check_point(self, point: str, step: Optional[int] = None,
+                    view=None, eligible=None) -> Optional[FailureEvent]:
+        """First un-fired fault due at the named interruption point —
+        `step` faults at the top of iteration N, checkpoint-phase faults
+        at the matching save step, cascade faults (step=None wildcard) at
+        their first firing opportunity during a recovery. This is how the
+        in-process trainer reaches the same injection points the real
+        runtime fires through repro.scenarios.hooks.
+
+        `eligible(fault) -> bool` defers a matching fault without
+        claiming it (e.g. a cascade whose victim rank is currently
+        dropped from the world: its next incarnation only exists at the
+        grow that re-admits it, where the next check fires it)."""
         if not self.enabled:
             return None
         for i, f in enumerate(self.scenario.faults):
-            if i in self._fired or f.point != "step" or f.step != step \
+            if i in self._fired or f.point != point \
                     or f.target == "root":
                 continue
+            if f.step is not None and step is not None and f.step != step:
+                continue
+            if eligible is not None and not eligible(f):
+                continue
             self._fired.add(i)
-            if f.target == "node":
-                node = view.parent(f.rank) if view is not None else None
-                return FailureEvent(kind=FailureType.NODE, node=node,
-                                    rank=f.rank, at_step=step)
-            return FailureEvent(kind=FailureType.PROCESS, rank=f.rank,
-                                at_step=step)
+            return self._to_event(f, step, view)
+        return None
+
+    def check_repair(self, step: int):
+        """The node repair (if any) due at `step`'s checkpoint boundary —
+        fired exactly once; the elastic driver turns it into a REJOIN ->
+        GROW / spare-grant transition."""
+        if not self.enabled:
+            return None
+        for i, r in enumerate(getattr(self.scenario, "repairs", ())):
+            if i in self._fired_repairs or r.step != step:
+                continue
+            self._fired_repairs.add(i)
+            return r
         return None
 
 

@@ -11,8 +11,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterable, Set
 
-from .events import (FailureEvent, FailureType, RankState, ReinitCommand,
-                     Respawn, ShrinkCommand)
+from .events import (FailureEvent, FailureType, GrowCommand, RankState,
+                     ReinitCommand, Respawn, ShrinkCommand)
 
 
 @dataclasses.dataclass
@@ -112,6 +112,25 @@ def root_handle_failure_shrink(view: ClusterView, failure: FailureEvent
     world = tuple(view.ranks())
     assert world, "shrink removed the last rank"
     return ShrinkCommand(dropped=dropped, epoch=view.epoch, world=world)
+
+
+def root_handle_rejoin(view: ClusterView, node: str,
+                       ranks: Iterable[int]) -> GrowCommand:
+    """Grow-back (the inverse of shrinking recovery): a repaired node's
+    daemon re-registered and the admission policy re-admits `ranks` onto
+    it. Mutates `view` (the node reappears owning the re-admitted ranks)
+    and returns the GROW broadcast. The re-admitted ranks must be outside
+    the current world — a rejoin never steals live ranks."""
+    added = tuple(sorted(int(r) for r in ranks))
+    assert added, "rejoin with no ranks to re-admit"
+    live = set(view.ranks())
+    assert live.isdisjoint(added), f"rejoin of live ranks {added}"
+    assert node not in view.children or not view.children[node], \
+        f"rejoined node {node!r} already owns ranks"
+    view.epoch += 1
+    view.children[node] = set(added)
+    return GrowCommand(added=added, epoch=view.epoch,
+                       world=tuple(view.ranks()), node=node)
 
 
 @dataclasses.dataclass

@@ -18,6 +18,7 @@ import socket
 import subprocess
 import sys
 import threading
+import time
 
 from repro.core.failure import ChildMonitor
 
@@ -36,11 +37,18 @@ class Daemon:
         # while per-connection threads replay the cached table — two
         # concurrent sendall()s on one socket could interleave frames
         self.send_lock = threading.Lock()
+        # armed by a node-hang injection: the daemon answers nothing
+        # (worker relays, root messages, ring pings) while every channel
+        # stays open — only daemon-level observation can see it
+        self._silent = threading.Event()
+        # daemon-ring observation (node-level heartbeat): node -> wport
+        # of every live daemon, from the root's DAEMON_TABLE broadcasts
+        self.daemon_table: dict[str, int] = {}
 
         self.monitor = ChildMonitor(self._on_child_death)
         self.monitor.start()
 
-        # listener for workers
+        # listener for workers (and for neighbour daemons' ring pings)
         self.wsock = listener()
         self.wport = self.wsock.getsockname()[1]
         threading.Thread(target=self._worker_accept_loop,
@@ -48,8 +56,24 @@ class Daemon:
 
         # control channel to root
         self.root_sock = connect("127.0.0.1", args.root_port)
-        send_msg(self.root_sock, {"type": "REGISTER_DAEMON",
-                                  "node": self.node, "pid": os.getpid()})
+        self.root_send_lock = threading.Lock()
+        self._send_root({"type": "REGISTER_DAEMON", "node": self.node,
+                         "pid": os.getpid(), "port": self.wport})
+
+        # neighbour-heartbeat ring over *daemons*: observe the successor
+        # daemon's listener every period; `timeout` of consecutive
+        # silence reports SUSPECT_NODE to the root — a hung daemon (node
+        # loss) is detected even though its control channel stays open
+        self.hb_period = getattr(args, "hb_period", 0.0)
+        self.hb_timeout = getattr(args, "hb_timeout", 0.0)
+        if self.hb_period > 0 and self.hb_timeout > 0:
+            threading.Thread(target=self._hb_loop, daemon=True).start()
+
+    def _send_root(self, msg: dict):
+        # serializes run-loop relays against the heartbeat observer's
+        # SUSPECT_NODE reports (two concurrent sendall()s interleave)
+        with self.root_send_lock:
+            send_msg(self.root_sock, msg)
 
     # ------------------------------------------------------------ workers
 
@@ -79,12 +103,62 @@ class Daemon:
         # SIGCHLD: relay to root (paper: daemon notifies, root decides).
         # The pid lets the root drop stale reports — a death of an old
         # incarnation must not be mistaken for the current one's.
+        if self._silent.is_set():
+            return
         try:
-            send_msg(self.root_sock, {"type": "CHILD_DEAD", "rank": rank,
-                                      "pid": pid, "node": self.node,
-                                      "status": status})
+            self._send_root({"type": "CHILD_DEAD", "rank": rank,
+                             "pid": pid, "node": self.node,
+                             "status": status})
         except OSError:
             pass
+
+    def _hb_loop(self):
+        """Daemon-ring observer: ping the successor daemon's listener
+        every period; `timeout` seconds of consecutive silence raise a
+        SUSPECT_NODE to the root. This is what catches a hung *daemon* —
+        from outside, a panicked node: its control channel stays open
+        but nothing (worker relays, CHILD_DEADs, ring ACKs) comes out."""
+        missed = 0.0
+        last_succ = None
+        while True:
+            time.sleep(self.hb_period)
+            if self._silent.is_set():
+                return
+            table = dict(self.daemon_table)
+            ring = sorted(table)
+            if len(ring) < 2 or self.node not in ring:
+                continue
+            succ = ring[(ring.index(self.node) + 1) % len(ring)]
+            if succ != last_succ:
+                # ring moved (recovery, grow, spare admission): misses
+                # accumulated against the old successor must not count
+                # against the new one
+                missed = 0.0
+                last_succ = succ
+            ok = False
+            try:
+                s = connect("127.0.0.1", table[succ],
+                            timeout=self.hb_period)
+                s.settimeout(max(self.hb_period, 0.05))
+                send_msg(s, {"type": "DAEMON_HB_PING", "from": self.node})
+                ok = recv_msg(s) is not None
+                s.close()
+            except OSError:
+                ok = False
+            if ok:
+                missed = 0.0
+                continue
+            if succ not in self.daemon_table:
+                missed = 0.0        # table moved: stale observation
+                continue
+            missed += self.hb_period
+            if missed >= self.hb_timeout:
+                try:
+                    self._send_root({"type": "SUSPECT_NODE", "node": succ,
+                                     "by": self.node})
+                except OSError:
+                    pass
+                missed = 0.0
 
     def _worker_accept_loop(self):
         while True:
@@ -102,13 +176,20 @@ class Daemon:
                 msg = recv_msg(conn)
                 if msg is None:
                     return
+                if self._silent.is_set():
+                    return          # hung daemon: answers nothing, to anyone
                 t = msg["type"]
-                if t == "REGISTER_WORKER":
+                if t == "DAEMON_HB_PING":
+                    # a neighbour daemon's ring observation
+                    send_msg(conn, {"type": "HB_ACK", "node": self.node})
+                elif t == "HANG_NODE":
+                    self._hang_node()
+                elif t == "REGISTER_WORKER":
                     rank = msg["rank"]
                     with self.lock:
                         self.worker_socks[rank] = conn
                         table = self.last_table
-                    send_msg(self.root_sock, {**msg, "node": self.node})
+                    self._send_root({**msg, "node": self.node})
                     # replay the newest rank table to the late joiner so a
                     # re-spawned rank starts its buddy pull immediately —
                     # overlapping the restore with the rest of the
@@ -136,15 +217,13 @@ class Daemon:
                     except OSError:
                         pass
                 else:      # BARRIER / DONE — relay up
-                    send_msg(self.root_sock, msg)
+                    self._send_root(msg)
         except OSError:
             return
 
-    def _die_hard(self):
-        """Node-failure emulation: children first, then ourselves.
-
-        The monitor is stopped first so the children's deaths are not
-        relayed as process failures — a real dead node sends nothing."""
+    def _kill_children_silently(self):
+        """SIGKILL every child with the monitor stopped first, so their
+        deaths are never relayed — the way a dead or hung node looks."""
         self.monitor._stop.set()
         with self.lock:
             procs = list(self.workers.values())
@@ -153,7 +232,20 @@ class Daemon:
                 os.kill(p.pid, signal.SIGKILL)
             except ProcessLookupError:
                 pass
+
+    def _die_hard(self):
+        """Node-failure emulation: children first, then ourselves — a
+        real dead node sends nothing."""
+        self._kill_children_silently()
         os.kill(os.getpid(), signal.SIGKILL)
+
+    def _hang_node(self):
+        """Node-hang emulation: the node panics — its processes stop
+        responding but nothing exits, so every channel stays open and no
+        SIGCHLD/EOF fires anywhere. Children are SIGKILLed silently and
+        the daemon goes mute; only the daemon-ring heartbeat sees it."""
+        self._kill_children_silently()
+        self._silent.set()
 
     # --------------------------------------------------------------- root
 
@@ -190,14 +282,22 @@ class Daemon:
                 msg = recv_msg(self.root_sock)
             except OSError:           # channel broken (possibly injected)
                 msg = None
+            if self._silent.is_set():
+                threading.Event().wait()     # hung node: mute forever
             if msg is None:
                 self._die_hard()      # root gone: tear everything down
             t = msg["type"]
             if t == "SPAWN":          # initial deployment or Algorithm 2
                 self._spawn_many(msg["ranks"], restarted=msg["restarted"],
                                  epoch=msg["epoch"])
-            elif t == "REINIT":
-                # Algorithm 2: signal survivors, spawn assigned ranks
+            elif t in ("REINIT", "GROW"):
+                # Algorithm 2: signal survivors, spawn assigned ranks.
+                # GROW is the same daemon-side motion over an *expanding*
+                # world: the rejoined daemon spawns the re-admitted ranks
+                # (restarted=True: they restore from their last durable
+                # checkpoints), survivors roll back to the pinned cut —
+                # plus the membership relay so control loops adopt the
+                # re-expanded world and mesh epoch
                 mine = [r for d, r in msg["respawns"] if d == self.node]
                 with self.lock:
                     survivors = [r for r in self.workers if r not in mine
@@ -209,10 +309,12 @@ class Daemon:
                         pass
                 for r in mine:
                     self.monitor.unwatch(r)
+                if t == "GROW":
+                    self._broadcast_workers(msg)
                 self._spawn_many(mine, restarted=True, epoch=msg["epoch"])
-                send_msg(self.root_sock, {"type": "REINIT_DONE",
-                                          "node": self.node,
-                                          "epoch": msg["epoch"]})
+                self._send_root({"type": "REINIT_DONE",
+                                 "node": self.node,
+                                 "epoch": msg["epoch"]})
             elif t == "SHRINK":
                 # shrinking recovery: no spawns anywhere — signal every
                 # live child to roll back, then relay the shrunk world so
@@ -237,6 +339,10 @@ class Daemon:
                         os.kill(p.pid, signal.SIGKILL)
                     except ProcessLookupError:
                         pass
+            elif t == "DAEMON_TABLE":
+                # ring membership for the daemon-level heartbeat; not
+                # relayed to workers (node-level concern only)
+                self.daemon_table = dict(msg["table"])
             elif t in ("RANK_TABLE", "BARRIER_RELEASE", "JOIN_RELEASE",
                        "FENCE_RELEASE", "SHUTDOWN"):
                 if t == "RANK_TABLE":

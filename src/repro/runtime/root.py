@@ -10,12 +10,19 @@ elastic extension it defers as future work:
   cr      Checkpoint-Restart: tear the whole job down (SIGKILL every
           daemon) and re-deploy it from scratch; every rank restarts from
           the file checkpoint.
-  shrink  Elastic: node failures consult the spare pool (Algorithm 1's
+  shrink  Elastic: failures consult the spare pool (Algorithm 1's
           least-loaded choice re-hosts onto a spare while one exists);
           once the pool is exhausted, a SHRINK broadcast drops the lost
-          ranks — survivors re-balance over the contracted world and
-          resume from the consistent cut instead of aborting. Bumps the
-          mesh epoch (ElasticManager).
+          ranks (a node's whole group, or a single rank — leaving uneven
+          groups) down to the --min-data-parallel world floor — survivors
+          re-balance over the contracted world and resume from the
+          consistent cut instead of aborting. The membership machine
+          (repro.core.membership) makes every decision and bumps the mesh
+          epoch. Bidirectional: a repaired node's daemon re-registers
+          (REJOIN) and the admission policy either re-admits the dropped
+          ranks at the next checkpoint boundary (GROW broadcast: expanded
+          world, bumped mesh epoch, re-admitted ranks restore from the
+          pinned pre-shrink cut) or adds the node to the spare pool.
 
 The root measures, with wall clocks, the same phases the paper reports:
 detection→REINIT-broadcast, re-registration (MPI recovery), and the first
@@ -36,8 +43,7 @@ import time
 
 from repro.core.elastic import ElasticManager, MeshEpoch
 from repro.core.events import FailureEvent, FailureType
-from repro.core.protocol import (ClusterView, root_handle_failure,
-                                 root_handle_failure_shrink)
+from repro.core.protocol import ClusterView, root_handle_failure
 from repro.scenarios.schema import ROOT_INJECTED_EXIT, Scenario
 
 from .transport import listener, recv_msg, send_msg
@@ -52,12 +58,14 @@ class Root:
         # live membership — a set, not a count: a shrinking recovery
         # leaves non-contiguous rank ids behind
         self.world_ranks: set[int] = set(self.view.ranks())
-        # elastic mode: one node = one data-parallel group; the spare
-        # pool + shrink decision live in the manager, mesh epochs key
-        # the survivors' compiled-step caches
+        # elastic mode: one node = one data-parallel group; the
+        # membership machine owns the spare pool, the shrink/grow
+        # decisions, the dropped-rank ledger and the mesh epochs that
+        # key the survivors' compiled-step caches
         self.elastic = ElasticManager(
             self.view, MeshEpoch(epoch=0, data_parallel=args.nodes,
-                                 model_parallel=args.ranks_per_node)) \
+                                 model_parallel=args.ranks_per_node),
+            min_data_parallel=getattr(args, "min_data_parallel", 1)) \
             if args.mode == "shrink" else None
         self.sock = listener()
         self.port = self.sock.getsockname()[1]
@@ -70,6 +78,12 @@ class Root:
         self.barrier: dict[tuple[int, int], dict[int, float]] = {}
         self.fences: dict[tuple[int, int], int] = {}  # kill-barrier victims
         self.joins: dict[int, dict[int, int]] = {}   # epoch -> rank -> avail
+        # True while the current epoch's rejoin consensus has not yet
+        # released: a rank dying inside this window is a cascade of the
+        # recovery in flight (it must merge — survivors are still blocked
+        # on its vote), never a fresh failure, even when the rank table
+        # already rebroadcast (recovering == False)
+        self._join_open = True              # initial deploy consensus
         self.epoch = 0
         self.done: set[int] = set()
         self.recovering = False
@@ -84,11 +98,30 @@ class Root:
         self._barrier_seen: dict[tuple, float] = {}
         self._stall_killed: set[int] = set()
         self._detect_mark: tuple | None = None  # (detector, latency, rank)
+        self._detect_mark_node: tuple | None = None  # (by, latency, node)
+        # daemon-level heartbeat ring: wport of each live daemon's
+        # listener, broadcast as DAEMON_TABLE so daemons observe their
+        # ring successor (hung-*daemon* detection)
+        self.daemon_ports: dict[str, int] = {}
+        # grow-back: initial rank->node map (repairs name the node that
+        # originally hosted a rank), repairs due per step, nodes whose
+        # next REGISTER_DAEMON is a REJOIN, and admitted nodes queued for
+        # the GROW at the next checkpoint boundary
+        self._initial_parent = {r: self.view.parent(r)
+                                for r in range(self.world)}
+        self._repairs: dict[int, list[str]] = {}
+        self._rejoining: set[str] = set()
+        self._pending_grow: list[str] = []
+        self._held_release: tuple | None = None   # barrier paused for a
+                                                  # rejoin in flight
         # root-target scenario faults: {step: fault_index}
         self._root_faults: dict[int, int] = {}
         if getattr(args, "scenario", ""):
             sc = Scenario.load(args.scenario)
             self._root_faults = {f.step: i for i, f in sc.root_faults()}
+            for r in sc.repairs:
+                node = self._initial_parent[r.rank]
+                self._repairs.setdefault(r.step, []).append(node)
         threading.Thread(target=self._accept_loop, daemon=True).start()
 
     # ------------------------------------------------------------ fabric
@@ -113,6 +146,7 @@ class Root:
                     node = msg["node"]
                     self.daemon_socks[node] = conn
                     self.daemon_pids[node] = msg["pid"]
+                    self.daemon_ports[node] = msg.get("port", 0)
                 self.events.put(("msg", msg))
         except OSError:
             pass
@@ -175,6 +209,17 @@ class Root:
         self._barrier_seen.setdefault(key, time.monotonic())
         d[msg["rank"]] = msg["value"]
         if len(d) == len(self.world_ranks):
+            # a completed barrier is a checkpoint boundary. A due node
+            # repair restarts the repaired node's daemon here and HOLDS
+            # this release until its REJOIN is admitted: the world is
+            # paused at the boundary, so the grow (or spare grant) lands
+            # deterministically between steps, never racing the run to
+            # completion
+            if self._check_repairs(key[1]):
+                self._held_release = (key, d)
+                del self.barrier[key]
+                self._barrier_seen.pop(key, None)
+                return
             # reduce in rank order: float addition is order-sensitive, and
             # a deterministic reduction is what makes a recovered run
             # land on the bit-identical state of the fault-free run
@@ -231,6 +276,7 @@ class Root:
             self._broadcast({"type": "JOIN_RELEASE", "epoch": msg["epoch"],
                              "resume": resume})
             del self.joins[msg["epoch"]]
+            self._join_open = False
             if self.report["events"]:
                 ev = self.report["events"][-1]
                 if "resume_step" not in ev and ev.get("t_recover_start"):
@@ -310,6 +356,125 @@ class Root:
             return
         self._order_kill(rank, "heartbeat")
 
+    def _handle_suspect_node(self, msg):
+        """A daemon's ring observer timed out on its successor *daemon*:
+        the whole node is silent (a hung daemon relays nothing — its
+        children's barrier traffic, CHILD_DEADs and heartbeat ACKs all
+        stop). SIGKILL the hung daemon: the channel EOF then drives the
+        ordinary node-failure path, credited to the heartbeat ring."""
+        node = msg["node"]
+        if (self.recovering or self.shutting_down
+                or node not in self.view.children):
+            return
+        pid = self.daemon_pids.get(node)
+        if pid is None:
+            return
+        now = time.monotonic()
+        t0 = min((t for k, t in self._barrier_seen.items()
+                  if k[0] == self.epoch), default=None)
+        try:
+            os.kill(pid, signal.SIGKILL)
+        except ProcessLookupError:
+            return
+        self._detect_mark_node = \
+            ("heartbeat", None if t0 is None else now - t0, node)
+
+    # --------------------------------------------------------- grow-back
+
+    def _check_repairs(self, step: int) -> bool:
+        """Scenario-driven node repair: at the step's checkpoint boundary
+        the repaired node's daemon restarts and re-registers. Returns
+        True when a daemon was (re)started — the caller then holds the
+        boundary's barrier release until the REJOIN is admitted. Only the
+        elastic mode acts on repairs; the other modes never shrank, so a
+        repair is meaningless there (and CR resurrects dead nodes
+        wholesale on its own)."""
+        if self.elastic is None or self.shutting_down:
+            self._repairs.pop(step, None)
+            return False
+        started = False
+        for node in self._repairs.pop(step, []):
+            if node in self.daemon_socks or node in self.view.children:
+                continue            # never left / already back
+            self._rejoining.add(node)
+            self._spawn_daemon(node)
+            started = True
+        return started
+
+    def _release_held(self):
+        """Release the barrier held for a rejoin that did not re-shape
+        the world (spare admission): the paused boundary resumes exactly
+        where it stopped. A grow never gets here — its epoch bump voids
+        the held barrier and the rollback consensus takes over."""
+        held, self._held_release = self._held_release, None
+        if held is None:
+            return
+        key, d = held
+        if key[0] != self.epoch:
+            return
+        total = sum(d[r] for r in sorted(d))
+        self._broadcast({"type": "BARRIER_RELEASE", "epoch": key[0],
+                         "step": key[1], "value": total})
+        self._maybe_die_as_root(key[1])
+
+    def _handle_rejoin(self, node: str):
+        """REJOIN: a repaired node's daemon re-registered while the world
+        is paused at the repair step's boundary. Root-side admission
+        policy (the membership machine): re-admit the dropped ranks
+        (GROW) when the world is shrunk, else grant the node into the
+        spare pool and resume the paused boundary."""
+        if self.elastic.admit(node) == "spare":
+            self.elastic.grant_spare(node)
+            self.report["events"].append(
+                {"rejoin": node, "admitted": "spare",
+                 "spares": self.elastic.spares()})
+            self._release_held()
+            return
+        if self.recovering:
+            self._pending_grow.append(node)    # folded in after recovery
+            return
+        self._execute_grow(node)
+
+    def _execute_grow(self, node: str):
+        """GROW broadcast at a checkpoint boundary: re-admit the most
+        recently dropped rank group onto the rejoined node. Survivors get
+        SIGREINIT + the expanded membership (bumped epoch and mesh
+        epoch); the rejoined daemon spawns the re-admitted ranks, which
+        restore from the durable checkpoints they committed before being
+        dropped — the consensus therefore lands exactly on the pinned
+        pre-shrink cut, and the re-expanded world replays from it."""
+        if node not in self.daemon_socks:
+            return                  # the repaired node died again already
+        t0 = time.monotonic()
+        cmd = self.elastic.grow(node)
+        self.epoch = cmd.epoch
+        self.recovering = True
+        self._reset_sync_state()
+        for r in cmd.added:
+            self.rank_table.pop(r, None)
+            self._rank_pids.pop(r, None)
+        self.world_ranks = set(cmd.world)
+        self._pending_respawn = set(cmd.added)
+        ev = {"grow": True, "node": node, "added": sorted(cmd.added),
+              "world_after": len(cmd.world),
+              "mesh_epoch": cmd.mesh_epoch,
+              "detect_at_s": t0, "detected_by": "rejoin"}
+        self.report["events"].append(ev)
+        self._broadcast({"type": "GROW", "epoch": self.epoch,
+                         "world": sorted(cmd.world),
+                         "mesh_epoch": cmd.mesh_epoch,
+                         "respawns": [[node, r] for r in cmd.added]})
+        # pipeline the restore with the spawn, like REINIT: survivors'
+        # addresses go out immediately so the re-admitted ranks can try
+        # buddy pulls while the rest of the world re-registers
+        self._broadcast({"type": "RANK_TABLE", "epoch": self.epoch,
+                         "partial": True,
+                         "world": sorted(self.world_ranks),
+                         "table": {str(k): list(v) for k, v in
+                                   self.rank_table.items()}})
+        ev["reinit_broadcast_s"] = time.monotonic() - t0
+        ev["t_recover_start"] = t0
+
     # ---------------------------------------------------------- recovery
 
     def _respawn_during_recovery(self, rank: int):
@@ -353,6 +518,7 @@ class Root:
         ev = {"failure": str(failure), "kind": failure.kind.value,
               "detect_at_s": t_detect}
         mark, self._detect_mark = self._detect_mark, None
+        nmark, self._detect_mark_node = self._detect_mark_node, None
         if mark is not None and failure.kind is FailureType.PROCESS \
                 and failure.rank == mark[2]:
             # this failure is the SIGCHLD of the kill we ordered: credit
@@ -360,6 +526,14 @@ class Root:
             # A mismatched failure (e.g. the whole node died under the
             # ordered kill) drops the mark — no misattributed credit.
             by, latency, _ = mark
+            ev["detected_by"] = by
+            if latency is not None:
+                ev["detect_latency_s"] = latency
+        elif nmark is not None and failure.kind is FailureType.NODE \
+                and failure.node == nmark[2]:
+            # the channel EOF of the daemon we SIGKILLed on the daemon
+            # ring's SUSPECT_NODE: the heartbeat detected a hung *node*
+            by, latency, _ = nmark
             ev["detected_by"] = by
             if latency is not None:
                 ev["detect_latency_s"] = latency
@@ -390,6 +564,8 @@ class Root:
         self._stall_killed.clear()
         self.fences.clear()
         self.joins.clear()
+        self._held_release = None
+        self._join_open = True     # every recovery re-runs the consensus
 
     def _recover_reinit(self, ev, failure: FailureEvent):
         t0 = time.monotonic()
@@ -401,6 +577,7 @@ class Root:
             lost = [r.rank for r in cmd.respawns]
             self.daemon_socks.pop(failure.node, None)
             self.daemon_pids.pop(failure.node, None)
+            self.daemon_ports.pop(failure.node, None)
         else:
             lost = [failure.rank]
         for r in lost:
@@ -416,26 +593,32 @@ class Root:
         # rebroadcast happens when all lost ranks are back
         self._broadcast({"type": "RANK_TABLE", "epoch": self.epoch,
                          "partial": True,
+                         "world": sorted(self.world_ranks),
                          "table": {str(k): list(v) for k, v in
                                    self.rank_table.items()}})
         ev["reinit_broadcast_s"] = time.monotonic() - t0
         ev["t_recover_start"] = t0
 
     def _recover_shrink(self, ev, failure: FailureEvent):
-        """Elastic shrinking recovery (spare pool exhausted by a node
-        loss): drop the lost ranks from the world instead of respawning.
-        Survivors get SIGREINIT + the SHRINK broadcast (shrunk rank
-        membership, bumped epoch and mesh epoch), re-balance the batch
-        over the contracted world, and resume from the consistent cut —
-        the run continues where a fixed-world deployment would abort."""
+        """Elastic shrinking recovery (spare pool exhausted): drop the
+        lost ranks from the world instead of respawning — a whole node's
+        group on a node loss, or a single rank on a process loss (the
+        surviving groups then being uneven). Survivors get SIGREINIT +
+        the SHRINK broadcast (shrunk rank membership, bumped epoch and
+        mesh epoch), re-balance the batch over the contracted world, and
+        resume from the consistent cut — which they keep pinned on disk
+        as the grow-back anchor until a repaired node re-expands the
+        world."""
         t0 = time.monotonic()
-        cmd = root_handle_failure_shrink(self.view, failure)
-        mesh = self.elastic.shrink_plan(failure)
+        cmd = self.elastic.shrink(failure)     # view+mesh+dropped ledger
+        mesh_epoch = self.elastic.mesh.epoch
         self.epoch = cmd.epoch
         self._reset_sync_state()
-        self.daemon_socks.pop(failure.node, None)
-        self.daemon_pids.pop(failure.node, None)
-        self.daemon_procs.pop(failure.node, None)
+        if failure.kind is FailureType.NODE:
+            self.daemon_socks.pop(failure.node, None)
+            self.daemon_pids.pop(failure.node, None)
+            self.daemon_procs.pop(failure.node, None)
+            self.daemon_ports.pop(failure.node, None)
         for r in cmd.dropped:
             self.rank_table.pop(r, None)
             self._rank_pids.pop(r, None)
@@ -444,11 +627,11 @@ class Root:
         self._pending_respawn = set()
         self._broadcast({"type": "SHRINK", "epoch": self.epoch,
                          "world": sorted(cmd.world),
-                         "mesh_epoch": mesh.epoch if mesh else self.epoch})
+                         "mesh_epoch": mesh_epoch})
         ev["shrink"] = True
         ev["dropped"] = sorted(cmd.dropped)
         ev["world_after"] = len(cmd.world)
-        ev["mesh_epoch"] = mesh.epoch if mesh else None
+        ev["mesh_epoch"] = mesh_epoch
         ev["reinit_broadcast_s"] = time.monotonic() - t0
         ev["t_recover_start"] = t0
         # no respawns: every survivor's address is already known, so the
@@ -473,6 +656,9 @@ class Root:
         self.daemon_socks.clear()
         self.daemon_pids.clear()
         self.daemon_procs.clear()
+        self.daemon_ports.clear()
+        self._rejoining.clear()
+        self._pending_grow.clear()
         self.rank_table.clear()
         self._rank_pids.clear()     # every old incarnation died with the
                                     # teardown; their reports are stale
@@ -494,8 +680,15 @@ class Root:
     def _maybe_broadcast_table(self):
         if len(self.rank_table) == len(self.world_ranks):
             self._broadcast({"type": "RANK_TABLE", "epoch": self.epoch,
+                             "world": sorted(self.world_ranks),
                              "table": {str(k): list(v) for k, v in
                                        self.rank_table.items()}})
+            # daemon ring membership for hung-daemon observation: every
+            # live daemon (spares included) observes its ring successor
+            self._broadcast({"type": "DAEMON_TABLE", "epoch": self.epoch,
+                             "table": {d: self.daemon_ports[d]
+                                       for d in self.view.daemons()
+                                       if d in self.daemon_ports}})
             if self.recovering:
                 ev = self.report["events"][-1] if self.report["events"] \
                     else None
@@ -504,6 +697,10 @@ class Root:
                     ev["mpi_recovery_s"] = time.monotonic() - t0
                 self.recovering = False
                 self._first_barrier_after_recovery = time.monotonic()
+                if self._pending_grow and not self.shutting_down:
+                    # a rejoin admitted while the recovery was in flight:
+                    # the world is consistent again, grow now
+                    self._execute_grow(self._pending_grow.pop(0))
             elif "deploy_s" not in self.report:
                 self.report["deploy_s"] = \
                     time.monotonic() - self.report.pop("deploy_start_s")
@@ -541,7 +738,15 @@ class Root:
                 continue
             msg = payload
             t = msg["type"]
-            if t == "REGISTER_WORKER":
+            if t == "REGISTER_DAEMON":
+                # post-deployment registration = REJOIN of a repaired
+                # node (the initial deployment consumes its
+                # registrations inside deploy())
+                node = msg["node"]
+                if self.elastic is not None and node in self._rejoining:
+                    self._rejoining.discard(node)
+                    self._handle_rejoin(node)
+            elif t == "REGISTER_WORKER":
                 self.rank_table[msg["rank"]] = ("127.0.0.1",
                                                 msg["peer_port"])
                 self._rank_pids[msg["rank"]] = msg.get("pid")
@@ -556,8 +761,19 @@ class Root:
                 if self.shutting_down or stale:
                     pass
                 elif not self.recovering:
-                    self._handle_failure(FailureEvent(
-                        kind=FailureType.PROCESS, rank=msg["rank"]))
+                    if self._join_open and known is not None \
+                            and msg["rank"] in self.world_ranks:
+                        # died inside the open rejoin window (after the
+                        # table rebroadcast, before the consensus
+                        # released): a cascade of the recovery still in
+                        # flight — merge it, don't open a new recovery
+                        # (the elastic path would otherwise drop a
+                        # replacement that survivors are blocked waiting
+                        # on)
+                        self._respawn_during_recovery(msg["rank"])
+                    else:
+                        self._handle_failure(FailureEvent(
+                            kind=FailureType.PROCESS, rank=msg["rank"]))
                 elif known is not None:
                     # cascading failure mid-recovery: fold into the
                     # in-flight recovery instead of dropping it (a
@@ -580,6 +796,8 @@ class Root:
                 self._join_arrive(msg)
             elif t == "SUSPECT":
                 self._handle_suspect(msg)
+            elif t == "SUSPECT_NODE":
+                self._handle_suspect_node(msg)
             elif t == "DONE":
                 self.done.add(msg["rank"])
                 self.report.setdefault("checksums", {})[str(msg["rank"])] \
@@ -618,6 +836,10 @@ def main(argv=None):
                     choices=["process", "node"])
     ap.add_argument("--mode", default="reinit",
                     choices=["reinit", "cr", "shrink"])
+    ap.add_argument("--min-data-parallel", type=int, default=1,
+                    help="elastic world floor, in whole node groups: "
+                         "shrink refuses to drop below "
+                         "min_data_parallel * ranks_per_node ranks")
     ap.add_argument("--scenario", default="",
                     help="declarative Scenario JSON driving fault "
                          "injection (supersedes the --fail-* flags)")

@@ -26,6 +26,7 @@ from typing import Optional
 import numpy as np
 
 from repro.core.events import RankState
+from repro.core.membership import RankMembership
 from repro.core.reinit import ROLLBACK, RollbackSignal, install_sigreinit, \
     reinit_main
 from repro.checkpoint import serde
@@ -90,10 +91,12 @@ class WorkerInjector:
             self._fence(step)
         if f.target == "node":
             # the victim signals its parent daemon (paper §4): SIGKILL
-            # takes the node down silently, a channel break partitions it
-            # (the fail-stop node then fences itself)
-            msg = "BREAK_CHANNEL" if f.how == "channel_break" \
-                else "KILL_NODE"
+            # takes the node down silently, a channel break partitions
+            # it (the fail-stop node then fences itself), and a hang
+            # mutes the whole node — daemon and children — while every
+            # channel stays open (only daemon-ring observation sees it)
+            msg = {"channel_break": "BREAK_CHANNEL",
+                   "hang": "HANG_NODE"}.get(f.how, "KILL_NODE")
             try:
                 w._send_daemon({"type": msg})
             except OSError:
@@ -128,10 +131,21 @@ class Worker:
 
     def __init__(self, args):
         self.rank = args.rank
-        self.world = args.world
-        # membership as rank ids, not a count: a shrinking recovery
-        # leaves a non-contiguous surviving set
-        self.world_ranks: list[int] = list(range(args.world))
+        # membership as rank ids, not a count (a shrinking recovery
+        # leaves a non-contiguous surviving set), adopted only from the
+        # root's broadcasts — centralized in core.membership
+        self.member = RankMembership(rank=args.rank,
+                                     world_ranks=list(range(args.world)),
+                                     epoch=args.epoch,
+                                     initial_world=args.world)
+        # steps this rank keeps exempt from checkpoint retention while
+        # the world is shrunk: the consistent cut a grow-back resumes
+        # from (re-written as a composable full frame at pin time).
+        # Released pins (world fully re-expanded) are reaped once they
+        # age past the retention window — never before the post-grow
+        # restore that reads them.
+        self._pinned: set[int] = set()
+        self._released_pins: set[int] = set()
         self.steps = args.steps
         self.dim = args.dim
         self.ckpt_dir = args.ckpt_dir
@@ -169,7 +183,6 @@ class Worker:
         self.table_event = threading.Event()
         self.barrier_release: dict[tuple[int, int], float] = {}
         self.barrier_cv = threading.Condition()
-        self.epoch = args.epoch
 
         # peer listener (buddy checkpoint fabric)
         self.peer_sock = listener()
@@ -194,6 +207,28 @@ class Worker:
         self.hb_timeout = getattr(args, "hb_timeout", 0.0)
         if self.hb_period > 0 and self.hb_timeout > 0:
             threading.Thread(target=self._hb_loop, daemon=True).start()
+
+    # ------------------------------------------------- membership facade
+
+    @property
+    def world_ranks(self) -> list:
+        return self.member.world_ranks
+
+    @world_ranks.setter
+    def world_ranks(self, ranks):
+        self.member.adopt(world=ranks)
+
+    @property
+    def world(self) -> int:
+        return self.member.size
+
+    @property
+    def epoch(self) -> int:
+        return self.member.epoch
+
+    @epoch.setter
+    def epoch(self, value: int):
+        self.member.adopt(epoch=value)
 
     def _send_daemon(self, msg: dict):
         with self._daemon_send_lock:
@@ -338,10 +373,14 @@ class Worker:
             if t == "RANK_TABLE":
                 self.rank_table = {int(k): tuple(v)
                                    for k, v in msg["table"].items()}
-                self.epoch = msg["epoch"]
-                self.table_event.set()
                 with self.barrier_cv:     # epoch bump unblocks stale waits
+                    # the table carries the authoritative membership: a
+                    # rank spawned into a shrunk/grown world learns its
+                    # actual world here, not from its static --world arg
+                    self.member.adopt(world=msg.get("world"),
+                                      epoch=msg["epoch"])
                     self.barrier_cv.notify_all()
+                self.table_event.set()
             elif t == "BARRIER_RELEASE":
                 with self.barrier_cv:
                     self.barrier_release[(msg["epoch"], msg["step"])] = \
@@ -364,12 +403,32 @@ class Worker:
                 # it rejoins under the new epoch and re-balances (the
                 # allreduce mean below runs over the shrunk world).
                 with self.barrier_cv:
-                    self.world_ranks = [int(r) for r in msg["world"]]
-                    self.world = len(self.world_ranks)
-                    self.epoch = msg["epoch"]
+                    self.member.adopt(world=msg["world"],
+                                      epoch=msg["epoch"])
                     for r in list(self.rank_table):
                         if r not in self.world_ranks:
                             self.rank_table.pop(r, None)
+                    self.barrier_cv.notify_all()
+                self.store.reform_ring(self.world_ranks)
+            elif t == "GROW":
+                # grow-back: a repaired node rejoined and the root
+                # re-admitted the dropped ranks. Adopt the re-expanded
+                # membership (bumped epoch + mesh epoch), release the
+                # pinned grow anchors (the consensus about to run
+                # supersedes them), and re-form the buddy ring over the
+                # full world — the SIGREINIT alongside unwinds the main
+                # loop back to the pinned pre-shrink cut.
+                with self.barrier_cv:
+                    self.member.adopt(world=msg["world"],
+                                      epoch=msg["epoch"])
+                    if not self.member.shrunk:
+                        # fully re-expanded: the anchors are consumed
+                        # (a partially-grown world keeps them — older
+                        # drops still need their cuts durable). Reaped
+                        # by retention once they age out, not here: the
+                        # post-grow restore still reads them.
+                        self._released_pins |= self._pinned
+                        self._pinned.clear()
                     self.barrier_cv.notify_all()
                 self.store.reform_ring(self.world_ranks)
             elif t == "SHUTDOWN":
@@ -457,9 +516,34 @@ class Worker:
         # loadable checkpoint
         hooks.fire("worker.ckpt.mid_write", step=step)
         os.replace(tmp, self._file_path(step))
-        old = self._file_path(step - 3)
-        if os.path.exists(old):
+        # retention: drop the aged-out step — unless it is a pinned grow
+        # anchor (the consistent cut a shrunk world must keep durable so
+        # a grow-back can resume from it)
+        old_step = step - 3
+        old = self._file_path(old_step)
+        if old_step not in self._pinned and os.path.exists(old):
             os.unlink(old)
+        # reap released anchors once they age out of the window (they
+        # were consumed by the grow's restore; leaving them would grow
+        # the dir and every later recovery's restore scan unboundedly)
+        for s in [p for p in self._released_pins if p <= step - 3]:
+            self._released_pins.discard(s)
+            stale = self._file_path(s)
+            if os.path.exists(stale):
+                os.unlink(stale)
+
+    def _pin_anchor(self, step: int, x: np.ndarray):
+        """While the world is shrunk, keep the consensus cut durable as
+        the grow-back anchor: re-write it as a self-contained full frame
+        (a delta frame's chain parents would age out of retention) and
+        exempt it from the retention unlink until a GROW releases it."""
+        if step in self._pinned:
+            return
+        tmp = self._file_path(step) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(serde.to_bytes({"x": x}, extra={"step": step}))
+        os.replace(tmp, self._file_path(step))
+        self._pinned.add(step)
 
     def _file_map(self) -> dict[int, bytes]:
         out = {}
@@ -510,6 +594,11 @@ class Worker:
             start = 0
             rng = np.random.default_rng(self.rank)
             x = rng.standard_normal(self.dim)
+        # a shrunk world pins its cut: the dropped ranks' newest durable
+        # checkpoints are at this step, so a future grow-back's consensus
+        # lands exactly here — keep it composable and retention-proof
+        if self.member.shrunk and resume > 0:
+            self._pin_anchor(resume, x)
         w = np.eye(self.dim) * 0.999        # fixed "model"
 
         for step in range(start, self.steps):

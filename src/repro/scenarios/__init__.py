@@ -10,13 +10,14 @@ docs/scenarios.md for the schema and catalog.
 consumers that need them.
 """
 from . import hooks
-from .schema import (CASCADE_POINTS, Fault, HOWS, POINTS, Scenario,
-                     STRATEGY_KEYS, TARGETS, Topology,
+from .schema import (CASCADE_POINTS, Fault, HOWS, POINTS, Repair, Scenario,
+                     STRATEGY_KEYS, TARGETS, Topology, elastic_transitions,
                      expected_resume_step, expected_resume_steps,
                      normalize_strategy)
 
 __all__ = [
-    "CASCADE_POINTS", "Fault", "HOWS", "POINTS", "Scenario",
-    "STRATEGY_KEYS", "TARGETS", "Topology", "expected_resume_step",
-    "expected_resume_steps", "normalize_strategy", "hooks",
+    "CASCADE_POINTS", "Fault", "HOWS", "POINTS", "Repair", "Scenario",
+    "STRATEGY_KEYS", "TARGETS", "Topology", "elastic_transitions",
+    "expected_resume_step", "expected_resume_steps", "normalize_strategy",
+    "hooks",
 ]

@@ -16,9 +16,10 @@ Tags:
 """
 from __future__ import annotations
 
-from .schema import Fault, Scenario, Topology
+from .schema import Fault, Repair, Scenario, Topology
 
 T22 = Topology(nodes=2, ranks_per_node=2, spares=1)      # world 4
+T22S0 = Topology(nodes=2, ranks_per_node=2, spares=0)    # world 4, no pool
 T32 = Topology(nodes=3, ranks_per_node=2, spares=1)      # world 6
 T32S2 = Topology(nodes=3, ranks_per_node=2, spares=2)    # world 6, deep pool
 
@@ -161,6 +162,67 @@ CATALOG: tuple[Scenario, ...] = (
         strategies=("shrink", "reinit", "cr", "ulfm"),
         expect_bit_identical=False,      # a shrunk world sums fewer ranks
         tags=("fast",)),
+    Scenario(
+        name="proc-loss-shrink",
+        description="Process-level shrink: a single-rank loss with the "
+                    "spare pool empty drops that rank instead of "
+                    "respawning — the surviving groups are uneven (one "
+                    "node keeps 2 ranks, the victim's keeps 1) and the "
+                    "world stays above the min_data_parallel floor. "
+                    "Non-elastic strategies respawn in place.",
+        topology=T22S0, faults=(Fault("rank", 1, 3),),
+        strategies=("shrink", "reinit", "cr", "ulfm"),
+        expect_bit_identical=False,      # a shrunk world sums fewer ranks
+        tags=("fast",)),
+    Scenario(
+        name="shrink-then-growback",
+        description="The full elastic lifecycle: a node loss with no "
+                    "spares shrinks the world 4->2 (survivors pin the "
+                    "cut); the repaired node's daemon re-registers at a "
+                    "later checkpoint boundary (REJOIN) and the root "
+                    "grows the world back 2->4 (GROW broadcast, bumped "
+                    "mesh epoch) — the consensus lands on the pinned "
+                    "pre-shrink cut and the re-expanded run finishes "
+                    "bit-identically to fault-free.",
+        topology=T22S0, steps=7,
+        faults=(Fault("node", 2, 2),),
+        repairs=(Repair(2, 4),),
+        strategies=("shrink", "reinit", "cr", "ulfm"),
+        tags=("fast",)),
+    Scenario(
+        name="growback-mid-cascade",
+        description="A cascading failure during the grow-back itself: "
+                    "one of the re-admitted ranks dies again right after "
+                    "pulling its frames — the cascade merges into the "
+                    "in-flight grow recovery and the world still ends "
+                    "re-expanded and bit-identical.",
+        topology=T22S0, steps=7,
+        faults=(Fault("node", 2, 2),
+                Fault("rank", 2, None, point="worker.recovery.pulled")),
+        repairs=(Repair(2, 4),),
+        strategies=("shrink", "reinit"), tags=("fast",)),
+    Scenario(
+        name="shrink-then-growback-3node",
+        description="3-node lifecycle: the first node loss is absorbed "
+                    "by the spare, the second shrinks 6->4, then the "
+                    "repaired node rejoins and the world grows back to "
+                    "6 at a checkpoint boundary.",
+        topology=T32, steps=9,
+        faults=(Fault("node", 2, 2), Fault("node", 4, 4)),
+        repairs=(Repair(4, 6),),
+        strategies=("shrink", "reinit", "cr", "ulfm"),
+        tags=("slow3",)),
+    Scenario(
+        name="node-hang-heartbeat",
+        description="The whole node goes silent (hung daemon: children "
+                    "muted, control channel open, nothing relayed): only "
+                    "the daemon-level heartbeat ring can see it — the "
+                    "observer daemon SUSPECT_NODEs its successor, the "
+                    "root kills the hung daemon and the channel EOF "
+                    "drives the ordinary node-failure path.",
+        topology=T22, faults=(Fault("node", 2, 3, how="hang"),),
+        heartbeat_period_s=0.25, heartbeat_timeout_s=1.0,
+        strategies=("reinit", "ulfm"), tags=("fast",)),
     Scenario(
         name="shrink-after-cascade",
         description="The first node recovery suffers a cascading "

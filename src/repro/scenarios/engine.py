@@ -80,14 +80,14 @@ def run_sim(scenario: Scenario, strategy: str, costs=None
             f"scenario {scenario.name}/{key}: world diverged from the "
             f"intended membership (unplanned shrink or lost rank)")
     # resume_steps carries the sim's own consensus replay (modeled
-    # per-rank durable state, see sim.cluster._modeled_resume_list) — the
+    # per-rank durable state, see sim.cluster._mech_resume) — the
     # harness checks it against the declarative oracle below, so the two
     # derivations guard each other
     return ScenarioOutcome(
         scenario=scenario.name, strategy=key, substrate="sim",
         n_recoveries=res.n_recoveries,
         resume_steps=list(res.resume_steps),
-        expected_resume=expected_resume_steps(scenario), checksums={},
+        expected_resume=expected_resume_steps(scenario, key), checksums={},
         total_s=res.total_recovery_s,
         detail={"rows": res.rows})
 
@@ -102,6 +102,7 @@ def _root_cmd(scenario_path: str, scenario: Scenario, mode: str,
             "--ranks-per-node", str(t.ranks_per_node),
             "--spares", str(t.spares),
             "--steps", str(scenario.steps), "--dim", str(scenario.dim),
+            "--min-data-parallel", str(scenario.min_data_parallel),
             "--mode", mode, "--ckpt-dir", ckpt_dir, "--report", report,
             "--scenario", scenario_path,
             "--stall-timeout", str(scenario.stall_timeout_s),
@@ -157,7 +158,7 @@ def run_real(scenario: Scenario, strategy: str, workdir: str, *,
         scenario=scenario.name, strategy=key, substrate="real",
         n_recoveries=len(events) + relaunches,
         resume_steps=resumes,
-        expected_resume=expected_resume_steps(scenario),
+        expected_resume=expected_resume_steps(scenario, key),
         checksums=report.get("checksums", {}),
         total_s=report.get("total_s", 0.0),
         detail={"events": events, "relaunches": relaunches,
@@ -175,6 +176,9 @@ def describe(scenario: Scenario) -> str:
         when = f"@step {f.step}" if f.step is not None else "@recovery"
         lines.append(f"  fault {i}   {f.how} {f.target} {f.rank} "
                      f"{when} ({f.point})")
+    for i, r in enumerate(scenario.repairs):
+        lines.append(f"  repair {i}  node of rank {r.rank} rejoins "
+                     f"@step {r.step} (elastic grow-back)")
     exp = expected_resume_steps(scenario)
     cuts = ", ".join("timing-dependent" if e is None else str(e)
                      for e in exp) or "none"

@@ -119,8 +119,8 @@ class Fault:
         elif not (0 <= self.rank < topo.world):
             raise ValueError(f"victim rank {self.rank} outside world "
                              f"{topo.world}")
-        if self.how == "hang" and self.target != "rank":
-            raise ValueError("hang faults only defined for target='rank'")
+        if self.how == "hang" and self.target == "root":
+            raise ValueError("hang faults only defined for rank/node")
         if self.point in CASCADE_POINTS:
             if position == 0:
                 raise ValueError(f"{self.point} is a cascade point: it "
@@ -136,13 +136,39 @@ class Fault:
 
 
 @dataclasses.dataclass(frozen=True)
+class Repair:
+    """One node repair: the node that originally hosted `rank` (and has
+    since died or been dropped) comes back — its daemon restarts at the
+    `step` checkpoint boundary and re-registers with the root (REJOIN).
+
+    Only the elastic runtime acts on it: the admission policy re-admits
+    dropped ranks (GROW, at the next checkpoint boundary) when the world
+    is shrunk, and otherwise adds the node to the spare pool. Non-elastic
+    strategies ignore repairs — their world never shrank."""
+    rank: int
+    step: int
+
+    def validate(self, topo: "Topology", steps: int):
+        if not (0 <= self.rank < topo.world):
+            raise ValueError(f"repair rank {self.rank} outside world "
+                             f"{topo.world}")
+        if not (1 <= self.step < steps):
+            raise ValueError(f"repair step {self.step} outside run "
+                             f"[1, {steps})")
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     """A complete, reproducible failure experiment."""
     name: str
     faults: tuple[Fault, ...]
     topology: Topology = Topology()
+    repairs: tuple[Repair, ...] = ()    # node repairs (elastic grow-back)
     steps: int = 6                      # application iterations
     dim: int = 64                       # per-rank state size
+    # smallest legal world, in whole data-parallel groups: the elastic
+    # strategy refuses to shrink below min_data_parallel * ranks_per_node
+    min_data_parallel: int = 1
     strategies: tuple[str, ...] = ("reinit", "cr", "ulfm")
     expect_bit_identical: bool = True   # recovered == fault-free state
     stall_timeout_s: float = 0.0        # >0 arms the root stall watchdog
@@ -157,6 +183,7 @@ class Scenario:
 
     def __post_init__(self):
         object.__setattr__(self, "faults", tuple(self.faults))
+        object.__setattr__(self, "repairs", tuple(self.repairs))
         object.__setattr__(self, "strategies",
                            tuple(normalize_strategy(s)
                                  for s in self.strategies))
@@ -176,6 +203,13 @@ class Scenario:
             if f.step is not None and f.step >= self.steps:
                 raise ValueError(f"fault step {f.step} >= run steps "
                                  f"{self.steps}")
+        for r in self.repairs:
+            r.validate(self.topology, self.steps)
+        if self.min_data_parallel < 1:
+            raise ValueError("min_data_parallel must be >= 1")
+        if self.min_data_parallel > self.topology.nodes:
+            raise ValueError(f"min_data_parallel {self.min_data_parallel} "
+                             f"exceeds {self.topology.nodes} nodes")
         if (self.heartbeat_period_s > 0) != (self.heartbeat_timeout_s > 0):
             raise ValueError("heartbeat needs both period and timeout > 0")
         if any(f.how == "hang" for f in self.faults) \
@@ -184,6 +218,12 @@ class Scenario:
             raise ValueError("hang faults need stall_timeout_s > 0 or an "
                              "armed heartbeat ring (nothing else detects "
                              "a silent rank)")
+        if any(f.how == "hang" and f.target == "node"
+               for f in self.faults) and self.heartbeat_period_s <= 0:
+            raise ValueError("node-hang faults need the heartbeat ring: "
+                             "the watchdog's KILL_RANK order goes through "
+                             "the hung daemon and dies there — only the "
+                             "daemon-level ring observation detects it")
         if not self.strategies:
             raise ValueError("scenario needs at least one strategy")
 
@@ -211,8 +251,10 @@ class Scenario:
             "name": self.name,
             "description": self.description,
             "topology": dataclasses.asdict(self.topology),
+            "repairs": [dataclasses.asdict(r) for r in self.repairs],
             "steps": self.steps,
             "dim": self.dim,
+            "min_data_parallel": self.min_data_parallel,
             "strategies": list(self.strategies),
             "expect_bit_identical": self.expect_bit_identical,
             "stall_timeout_s": self.stall_timeout_s,
@@ -228,8 +270,10 @@ class Scenario:
             name=d["name"],
             description=d.get("description", ""),
             topology=Topology(**d.get("topology", {})),
+            repairs=tuple(Repair(**r) for r in d.get("repairs", ())),
             steps=d.get("steps", 6),
             dim=d.get("dim", 64),
+            min_data_parallel=d.get("min_data_parallel", 1),
             strategies=tuple(d.get("strategies", ("reinit", "cr", "ulfm"))),
             expect_bit_identical=d.get("expect_bit_identical", True),
             stall_timeout_s=d.get("stall_timeout_s", 0.0),
@@ -268,7 +312,123 @@ def _fault_resume(f: Fault) -> Optional[int]:
     return None
 
 
-def expected_resume_steps(scenario: Scenario) -> list:
+def elastic_transitions(scenario: Scenario) -> list:
+    """Replay the elastic (shrink-strategy) membership policy over the
+    scenario's declarative timeline: primary faults and node repairs
+    merged in step order (a step-N fault fires at the top of iteration N,
+    a step-N repair at that step's checkpoint boundary — fault first).
+    Rank hosting and node aliveness are modeled by name, mirroring the
+    executors: Algorithm 1 re-hosts a dead node's ranks onto the
+    least-loaded survivor, and a repair names the rank's *initial* node.
+
+    Returns [(kind, obj, resume)] where kind is:
+      "respawn"  spare-absorbed / in-place / over-subscribed recovery
+      "shrink"   pool exhausted, world contracted by the lost ranks
+                 (a whole node group, or a single rank — whose home
+                 node then stays alive)
+      "grow"     a repair of a dead node re-admitted a dropped group —
+                 its own when it has one, else the most recent; resume
+                 = that shrink's consistent cut (the pinned anchor)
+      "spare"    a repair of a dead node with nothing dropped: the
+                 node rejoins the pool
+      "noop"     a repair of a node that never left the world (e.g.
+                 after a process-level shrink): the executors skip it
+      "restart"  root loss (external job restart, timing-dependent cut)
+
+    This is the same admission/floor policy `MembershipMachine` executes;
+    the harness cross-checks the two derivations against each other."""
+    topo = scenario.topology
+    floor = scenario.min_data_parallel * topo.ranks_per_node
+    rpn = topo.ranks_per_node
+    hosts = {r: f"node{r // rpn}" for r in range(topo.world)}
+    ranks_on = {f"node{n}": set(range(n * rpn, (n + 1) * rpn))
+                for n in range(topo.nodes)}
+    ranks_on.update({f"spare{s}": set() for s in range(topo.spares)})
+    drop_groups: list = []        # (home_node_or_None, ranks, cut)
+
+    def have_spare():
+        return any(not rs for rs in ranks_on.values())
+
+    def world_size():
+        return sum(len(rs) for rs in ranks_on.values())
+
+    timeline = sorted(
+        [((f.step if f.step is not None else -1), 0, i, "fault", f)
+         for i, f in enumerate(scenario.faults)
+         if f.point not in CASCADE_POINTS]
+        + [(r.step, 1, i, "repair", r)
+           for i, r in enumerate(scenario.repairs)],
+        key=lambda e: e[:3])
+    out = []
+    for _, _, _, what, obj in timeline:
+        if what == "fault":
+            cut = _fault_resume(obj)
+            if obj.target == "root":
+                # external job restart redeploys the full topology (the
+                # executors rebuild view + machine): membership resets
+                hosts = {r: f"node{r // rpn}" for r in range(topo.world)}
+                ranks_on = {f"node{n}": set(range(n * rpn, (n + 1) * rpn))
+                            for n in range(topo.nodes)}
+                ranks_on.update({f"spare{s}": set()
+                                 for s in range(topo.spares)})
+                drop_groups.clear()
+                out.append(("restart", obj, cut))
+            elif obj.target == "node":
+                dead = hosts.get(obj.rank)
+                if dead is None:
+                    continue            # victim already out of the world
+                lost = ranks_on.pop(dead)
+                if have_spare() or world_size() < floor:
+                    # a spare absorbs it, or the floor forbids the
+                    # shrink: Algorithm 1 re-hosts onto the
+                    # least-loaded survivor (over-subscribing if none
+                    # is empty)
+                    target = min((len(rs), d)
+                                 for d, rs in ranks_on.items())[1]
+                    ranks_on[target] |= lost
+                    for r in lost:
+                        hosts[r] = target
+                    out.append(("respawn", obj, cut))
+                else:
+                    for r in lost:
+                        del hosts[r]
+                    drop_groups.append((dead, sorted(lost), cut))
+                    out.append(("shrink", obj, cut))
+            else:                         # rank loss
+                host = hosts.get(obj.rank)
+                if host is None:
+                    continue
+                if not have_spare() and world_size() - 1 >= floor:
+                    ranks_on[host].discard(obj.rank)
+                    del hosts[obj.rank]
+                    drop_groups.append((None, [obj.rank], cut))
+                    out.append(("shrink", obj, cut))
+                else:
+                    out.append(("respawn", obj, cut))
+        else:                             # repair
+            node = f"node{obj.rank // rpn}"
+            if node in ranks_on:
+                # the node never left the world (it survived, or a
+                # process-level shrink dropped only a rank of it):
+                # the executors skip the repair entirely
+                out.append(("noop", obj, None))
+            elif drop_groups:
+                idx = next((i for i in range(len(drop_groups) - 1, -1, -1)
+                            if drop_groups[i][0] == node),
+                           len(drop_groups) - 1)
+                _, granks, cut = drop_groups.pop(idx)
+                ranks_on[node] = set(granks)
+                for r in granks:
+                    hosts[r] = node
+                out.append(("grow", obj, cut))
+            else:
+                ranks_on[node] = set()
+                out.append(("spare", obj, None))
+    return out
+
+
+def expected_resume_steps(scenario: Scenario,
+                          strategy: Optional[str] = None) -> list:
     """The consistent cuts the rollback consensus must land on — one entry
     per *primary* (non-cascade) fault, in injection order; the shared
     oracle both executors are checked against. A None entry means that
@@ -288,7 +448,17 @@ def expected_resume_steps(scenario: Scenario) -> list:
 
     Sequential primary faults (double node loss, spare-pool exhaustion)
     each trigger their own recovery and therefore their own entry.
+
+    Under the elastic strategy (`strategy="shrink"`) node repairs add
+    entries of their own: a grow-back's consensus lands exactly on the
+    cut of the shrink it reverses (the rejoining ranks' newest durable
+    checkpoint — which the survivors kept pinned as the grow anchor).
+    Non-elastic strategies ignore repairs, so their oracle is unchanged.
     """
+    if strategy is not None and normalize_strategy(strategy) == "shrink" \
+            and scenario.repairs:
+        return [cut for kind, _, cut in elastic_transitions(scenario)
+                if kind not in ("spare", "noop")]
     return [_fault_resume(f) for f in scenario.faults
             if f.point not in CASCADE_POINTS]
 

@@ -100,6 +100,22 @@ class ClusterCosts:
             + self.shrink_rebalance_s \
             + self.tree_barrier_s(n_ranks, ranks_per_node)
 
+    def grow_recovery_s(self, n_ranks: int, ranks_per_node: int,
+                        n_added: int) -> float:
+        """Grow-back at a checkpoint boundary: the GROW broadcast over the
+        root->daemon tree, SIGREINIT to survivors, the rejoined daemon's
+        parallel spawn of the re-admitted ranks (wired up on the repaired
+        host), and the rejoin barrier over the re-expanded world. The
+        restore term (re-admitted ranks re-reading their pinned files) is
+        charged separately, like every other recovery's read."""
+        n_nodes = max(1, n_ranks // max(ranks_per_node, 1))
+        bcast = self.msg_latency_s * (1 + math.ceil(
+            math.log2(max(n_nodes, 2))))
+        waves = math.ceil(n_added / max(self.spawn_parallelism, 1))
+        return bcast + self.signal_s * max(n_ranks - n_added, 0) \
+            + waves * self.spawn_proc_s + self.node_rehost_s \
+            + self.tree_barrier_s(n_ranks, ranks_per_node)
+
     def ulfm_recovery_collectives_s(self, n_ranks: int) -> float:
         per_round = self.ulfm_round_alpha_s * math.log2(max(n_ranks, 2)) \
             + self.ulfm_round_beta_s * n_ranks

@@ -35,7 +35,7 @@ from repro.core import (ClusterView, ElasticManager, FailureEvent,
                         FailureType, FaultInjector, MeshEpoch, RankState,
                         RecoveryReport, ROLLBACK, RollbackSignal,
                         apply_recovery, get_strategy, reinit_main,
-                        root_handle_failure, root_handle_failure_shrink)
+                        root_handle_failure)
 from repro.models.model import Model
 from repro.sharding.partition import constraint_scope, state_shardings
 from repro.sharding.rules import ShardingRules, PRESETS
@@ -59,6 +59,9 @@ class TrainConfig:
     n_nodes: int = 2
     ranks_per_node: int = 4
     spare_nodes: int = 1
+    # elastic world floor, in whole node groups: shrinking recovery
+    # refuses to contract below min_data_parallel * ranks_per_node ranks
+    min_data_parallel: int = 1
     seed: int = 0
     log_every: int = 0
 
@@ -87,12 +90,14 @@ class Trainer:
         self.view = ClusterView.build(tc.n_nodes, tc.ranks_per_node,
                                       tc.spare_nodes)
         self.n_ranks = tc.n_nodes * tc.ranks_per_node
-        # elastic strategy: spare-pool consultation + shrink decision;
-        # one node = one data-parallel group, the mesh epoch keys the
-        # compiled-step cache across shrinks
+        # elastic strategy: the membership machine owns the spare pool,
+        # the shrink/grow decisions and the dropped-rank ledger; one node
+        # = one data-parallel group, the mesh epoch keys the
+        # compiled-step cache across shrinks and grow-backs
         self.elastic = ElasticManager(
             self.view, MeshEpoch(epoch=0, data_parallel=tc.n_nodes,
-                                 model_parallel=tc.ranks_per_node)) \
+                                 model_parallel=tc.ranks_per_node),
+            min_data_parallel=tc.min_data_parallel) \
             if self.strategy.key == "shrink" else None
         self.policy = CheckpointPolicy(every_steps=tc.ckpt_every,
                                        async_file=tc.async_file_ckpt)
@@ -149,26 +154,66 @@ class Trainer:
         return {"params": params, "opt": adamw_init(params),
                 "step": jnp.zeros((), jnp.int32)}
 
+    def _injected_at(self, point: str, step: Optional[int] = None):
+        """Scenario fault due at a named interruption point — how the
+        in-process driver reaches the checkpoint-phase and cascade
+        injection points the real runtime fires through
+        repro.scenarios.hooks. A fault whose victim rank is currently
+        out of the world is deferred, not claimed: its next incarnation
+        first runs at the grow that re-admits it, whose own cascade
+        pass fires it (mirrors the sim's deferred cascades)."""
+        inj = self.injector
+        if inj is None or not hasattr(inj, "check_point"):
+            return None
+        live = set(self.view.ranks())
+        return inj.check_point(
+            point, step=step, view=self.view,
+            eligible=lambda f: f.target != "rank" or f.rank in live)
+
     def _save_ckpt(self, step: int):
         """Both faces of Table 2: buddy memory copy + file checkpoint.
 
         The file path is the fast-path engine: with async_file the save
         snapshots on device (digests included), kicks the D2H drain and
-        returns — serialization and sharded IO overlap the next step."""
+        returns — serialization and sharded IO overlap the next step.
+
+        Mirrors the real worker's commit order (file first, then the
+        buddy push) so the checkpoint-phase interruption points carry
+        the same meaning: a mid-write death leaves both tiers at step-1;
+        a pre-push death leaves the file one step ahead of the buddy
+        copy, and the merged restore must still reach `step`."""
+        failure = self._injected_at("worker.ckpt.mid_write", step)
+        if failure is not None:
+            # dies with the shard bytes un-renamed: nothing durable at
+            # `step` anywhere — recovery resumes from step-1
+            self._handle_failure(failure)
+            raise RollbackSignal(self.view.epoch)
         state = self.state
         if self.mesh is not None and self.mesh.shape.get("data", 1) > 1:
             buddy = buddy_exchange(state, self.mesh, self.rules)
         else:
             buddy = jax.tree.map(lambda a: a + 0, state)   # device copy
         local = jax.tree.map(lambda a: a + 0, state)
-        self.mem_ckpt = (step, local, buddy)
         self.file_ckpt.save(step, state, async_=self.policy.async_file)
+        failure = self._injected_at("worker.ckpt.pre_push", step)
+        if failure is not None:
+            # ReStore's mid-replication failure: the file committed but
+            # the buddy copy was never pushed — the memory tier stays at
+            # step-1 and the merged restore takes the newer file
+            self._handle_failure(failure)
+            raise RollbackSignal(self.view.epoch)
+        self.mem_ckpt = (step, local, buddy)
 
     # ----------------------------------------------------------- recovery
 
-    def _handle_failure(self, failure: FailureEvent) -> RecoveryReport:
+    def _handle_failure(self, failure: FailureEvent,
+                        cascade: bool = False) -> RecoveryReport:
         rep = RecoveryReport(strategy=self.strategy.name, failure=failure)
-        if self.elastic is not None \
+        # cascades merge into the recovery in flight via respawn, never
+        # shrink on their own (a second failure during recovery must not
+        # drop a rank survivors are blocked waiting on) — same policy as
+        # the sim and the real root's open-join-window classification
+        if self.elastic is not None and not cascade \
                 and self.elastic.decide(failure) == "shrink":
             return self._handle_failure_shrink(rep, failure)
 
@@ -203,9 +248,20 @@ class Trainer:
                 self.mem_ckpt = None
         rep.mpi_recovery_s = time.monotonic() - t0
 
-        # --- application recovery: reload the appropriate checkpoint
+        # --- application recovery: reload the appropriate checkpoint.
+        # The memory tier is only taken when it is at least as new as the
+        # file tier — a failure between the file commit and the buddy
+        # push (worker.ckpt.pre_push) leaves the file one step ahead, and
+        # the merged restore must reach it (the real runtime's merged
+        # buddy+file restore maps, in-process)
         t0 = time.monotonic()
-        if ckpt_kind == "memory" and self.mem_ckpt is not None:
+        use_memory = ckpt_kind == "memory" and self.mem_ckpt is not None
+        if use_memory:
+            self.file_ckpt.wait()
+            fsteps = self.file_ckpt.steps()
+            if fsteps and fsteps[-1] > self.mem_ckpt[0]:
+                use_memory = False
+        if use_memory:
             step, local, buddy = self.mem_ckpt
             if self.mesh is not None and self.mesh.shape.get("data", 1) > 1:
                 restored = restore_from_buddy(buddy, self.mesh, self.rules)
@@ -227,45 +283,110 @@ class Trainer:
         rep.ckpt_read_s = time.monotonic() - t0
         rep.rollback_step = rollback_step
         self.reports.append(rep)
+        self._fire_cascades()
         return rep
+
+    def _fire_cascades(self):
+        """Cascade injection points (a second failure during the recovery
+        just performed): a survivor right after rollback, a restoring
+        rank right after gathering its frames, a kill mid-compose. Each
+        fires at most once per scenario; the nested recovery re-restores
+        the same state, so continuation stays bit-identical."""
+        for point in ("worker.recovery.enter", "worker.recovery.pulled",
+                      "worker.recovery.compose"):
+            cascade = self._injected_at(point)
+            if cascade is not None:
+                self._handle_failure(cascade, cascade=True)
+                return
 
     def _handle_failure_shrink(self, rep: RecoveryReport,
                                failure: FailureEvent) -> RecoveryReport:
         """Elastic shrinking recovery in the in-process SPMD driver: the
-        spare pool is exhausted by a node loss, so the data axis contracts
-        instead of re-hosting. Survivors keep process + device state; the
-        mesh epoch bump invalidates the compiled step (its logical world
-        changed), and the batch re-balances over the survivors — the
-        step-indexed TokenPipeline keeps the *global* batch, so the run
-        stays on the same data trajectory through the shrink."""
+        spare pool is exhausted, so the data axis contracts instead of
+        re-hosting — by a whole node group on a node loss, or by a single
+        rank on a process loss (uneven groups). Survivors keep process +
+        device state; the mesh epoch bump invalidates the compiled step
+        (its logical world changed), and the batch re-balances over the
+        survivors — the step-indexed TokenPipeline keeps the *global*
+        batch, so the run stays on the same data trajectory through the
+        shrink."""
         t0 = time.monotonic()
-        cmd = root_handle_failure_shrink(self.view, failure)
-        self.elastic.shrink_plan(failure)
+        cmd = self.elastic.shrink(failure)   # view+mesh+dropped ledger
         self.n_ranks = len(cmd.world)
         rep.detect_s = time.monotonic() - t0
 
         t0 = time.monotonic()
         self._build_step()           # mesh epoch bumped: re-lower the step
-        self.mem_ckpt = None         # the lost node took its buddy-held
-                                     # copies with it (decide() only
-                                     # shrinks on node failures)
+        if failure.kind is FailureType.NODE:
+            self.mem_ckpt = None     # the lost node took its buddy-held
+                                     # copies with it
         rep.mpi_recovery_s = time.monotonic() - t0
 
-        # survivors roll back to their newest durable state; with the
-        # buddy copies gone that is the file checkpoint at the cut
+        # survivors roll back to their newest durable state: the buddy
+        # memory copy when it survived (process shrink), else the file
+        # checkpoint at the cut
         t0 = time.monotonic()
-        self.file_ckpt.wait()
-        step, state = self.file_ckpt.load_latest()
-        if step is None:
-            self.state = self.init_state()
-            rollback_step = 0
-        else:
-            self.state = jax.tree.map(jnp.asarray, state)
+        if self.mem_ckpt is not None:
+            step, local, _ = self.mem_ckpt
+            self.state = jax.tree.map(lambda a: a + 0, local)
             rollback_step = step
+        else:
+            self.file_ckpt.wait()
+            step, state = self.file_ckpt.load_latest()
+            if step is None:
+                self.state = self.init_state()
+                rollback_step = 0
+            else:
+                self.state = jax.tree.map(jnp.asarray, state)
+                rollback_step = step
         rep.ckpt_read_s = time.monotonic() - t0
         rep.rollback_step = rollback_step
         rep.world_after = self.n_ranks
         self.reports.append(rep)
+        self._fire_cascades()
+        return rep
+
+    def _handle_repair(self, repair) -> Optional[RecoveryReport]:
+        """Grow-back in the in-process SPMD driver: a repaired node
+        rejoins at a checkpoint boundary. The admission policy (the
+        membership machine) re-admits the most recently dropped group —
+        world re-expands, mesh epoch bumps, the step recompiles for the
+        re-grown shape — or, with a full world, adds the node to the
+        spare pool (no recovery, returns None)."""
+        if self.elastic is None:
+            return None              # non-elastic runs never shrank
+        node = f"node{repair.rank // self.tc.ranks_per_node}"
+        if node in self.view.children:
+            return None              # node never left the world: no-op
+        if self.elastic.admit(node) == "spare":
+            self.elastic.grant_spare(node)
+            return None
+        rep = RecoveryReport(
+            strategy=self.strategy.name,
+            failure=FailureEvent(kind=FailureType.NODE, node=node,
+                                 at_step=repair.step))
+        t0 = time.monotonic()
+        cmd = self.elastic.grow(node)
+        self.n_ranks = len(cmd.world)
+        rep.detect_s = time.monotonic() - t0
+
+        t0 = time.monotonic()
+        self._build_step()           # mesh epoch bumped: re-lower the
+                                     # step for the re-expanded world
+        rep.mpi_recovery_s = time.monotonic() - t0
+
+        # the re-admitted ranks restore from the durable checkpoint at
+        # the consistent cut (Table-2 "grow" scheme: file tier)
+        t0 = time.monotonic()
+        self.file_ckpt.wait()
+        step, state = self.file_ckpt.load_latest()
+        if step is not None:
+            self.state = jax.tree.map(jnp.asarray, state)
+            rep.rollback_step = step
+        rep.ckpt_read_s = time.monotonic() - t0
+        rep.world_after = self.n_ranks
+        self.reports.append(rep)
+        self._fire_cascades()
         return rep
 
     # ---------------------------------------------------------------- run
@@ -288,6 +409,11 @@ class Trainer:
                 if self.injector else None
             if failure is not None:
                 self._handle_failure(failure)
+                raise RollbackSignal(self.view.epoch)
+            repair = self.injector.check_repair(step) \
+                if self.injector is not None \
+                and hasattr(self.injector, "check_repair") else None
+            if repair is not None and self._handle_repair(repair):
                 raise RollbackSignal(self.view.epoch)
 
             t0 = time.monotonic()

@@ -68,16 +68,19 @@ def test_strategy_lookup_aliases():
     assert get_strategy("ulfm").heartbeat is not None
 
 
-def test_elastic_shrink_plan():
-    em = ElasticManager(ClusterView.build(2, 4, 1),
-                        MeshEpoch(0, data_parallel=4, model_parallel=2))
+def test_elastic_shrink_transition():
     from repro.core.events import FailureEvent
-    mesh = em.shrink_plan(FailureEvent(kind=FailureType.PROCESS, rank=0))
-    assert mesh.data_parallel == 3 and mesh.epoch == 1
-    em2 = ElasticManager(ClusterView.build(2, 4, 1),
-                         MeshEpoch(0, data_parallel=1, model_parallel=2))
-    assert em2.shrink_plan(
-        FailureEvent(kind=FailureType.PROCESS, rank=0)) is None
+    em = ElasticManager(ClusterView.build(2, 4, 0),
+                        MeshEpoch(0, data_parallel=2, model_parallel=4))
+    node_f = FailureEvent(kind=FailureType.NODE, rank=4, node="node1")
+    assert em.decide(node_f) == "shrink"          # no spares, above floor
+    cmd = em.shrink(node_f)
+    assert set(cmd.dropped) == {4, 5, 6, 7}
+    assert em.mesh.data_parallel == 1 and em.mesh.epoch == 1
+    # at the floor: shrinking is refused, recovery falls back to respawn
+    proc_f = FailureEvent(kind=FailureType.PROCESS, rank=0)
+    em.min_data_parallel = 1                      # floor = 4 = |world|
+    assert em.decide(proc_f) == "respawn"
 
 
 # ----------------------------------------------------------- optimizer

@@ -1,0 +1,227 @@
+"""Property tests for the elastic membership state machine.
+
+Random interleavings of {node loss, rank loss, rejoin, spare grant}
+driven through `MembershipMachine` must never violate its invariants:
+
+  * world size stays within [min_data_parallel * ranks_per_node, initial]
+  * the mesh epoch is strictly monotonic across re-meshing transitions
+  * the world always equals (initial world - dropped ranks); in
+    particular a shrink -> grow -> shrink round-trip restores exactly
+    the pre-shrink membership (the consistent cut the survivors pin)
+
+Hypothesis drives the interleavings when installed; the seeded fallback
+replays pre-drawn random op sequences so the suite asserts the same
+invariants in hypothesis-free environments (see tests/_hyp.py).
+"""
+import random
+
+import pytest
+
+from _hyp import HAS_HYPOTHESIS, given, settings, st
+
+from repro.core import (ClusterView, ElasticManager, FailureEvent,
+                        FailureType, MembershipMachine, MeshEpoch)
+
+OPS = ("node_loss", "rank_loss", "rejoin", "spare_grant")
+
+
+def _build(n_nodes, rpn, spares, min_dp):
+    view = ClusterView.build(n_nodes, rpn, spares)
+    return MembershipMachine(
+        view, MeshEpoch(epoch=0, data_parallel=n_nodes,
+                        model_parallel=rpn),
+        min_data_parallel=min_dp)
+
+
+def _live_nodes(m):
+    return sorted(d for d, cs in m.view.children.items() if cs)
+
+
+def _drive(m, ops, choices):
+    """Apply an op sequence through the machine's public transitions,
+    the way the root does: decide() then respawn()/shrink(); rejoin ->
+    admit() then grow()/grant_spare(). `choices` picks victims
+    deterministically. Returns the transition log length actually
+    executed (unexecutable ops are skipped, like a root that has no
+    matching event to react to)."""
+    rng = random.Random(choices)
+    rejoin_serial = 0
+    for op in ops:
+        world = list(m.world())
+        if op == "node_loss":
+            nodes = _live_nodes(m)
+            # a respawn needs a surviving daemon to re-host onto
+            if len(m.view.daemons()) < 2 or not nodes:
+                continue
+            node = nodes[rng.randrange(len(nodes))]
+            victim = sorted(m.view.children[node])[0]
+            f = FailureEvent(kind=FailureType.NODE, rank=victim, node=node)
+            if m.decide(f) == "shrink":
+                m.shrink(f)
+            else:
+                m.respawn(f)
+        elif op == "rank_loss":
+            if not world:
+                continue
+            f = FailureEvent(kind=FailureType.PROCESS,
+                             rank=world[rng.randrange(len(world))])
+            if m.decide(f) == "shrink":
+                m.shrink(f)
+            else:
+                m.respawn(f)
+        elif op == "rejoin":
+            rejoin_serial += 1
+            node = f"repair{rejoin_serial}"
+            if m.admit(node) == "grow":
+                m.grow(node)
+            else:
+                m.grant_spare(node)
+        else:                       # spare_grant (operator adds capacity)
+            rejoin_serial += 1
+            m.grant_spare(f"extra{rejoin_serial}")
+    return len(m.log)
+
+
+def _assert_invariants(m):
+    # every transition already ran check_invariants(); re-assert the
+    # external statements on the final state explicitly
+    world = set(m.world())
+    assert m.floor_world <= len(world) <= len(m.initial_world)
+    assert world == set(m.initial_world) - set(m.dropped)
+    remesh = [t.mesh_epoch for t in m.log
+              if t.kind in ("shrink", "grow")
+              or (t.kind == "respawn" and t.trigger == "node_loss")]
+    assert all(a < b for a, b in zip(remesh, remesh[1:])), \
+        "mesh epoch not strictly monotonic across re-meshing"
+    m.check_invariants()
+
+
+def _check_interleaving(n_nodes, rpn, spares, min_dp, ops, choices):
+    m = _build(n_nodes, rpn, spares, min_dp)
+    _drive(m, ops, choices)
+    _assert_invariants(m)
+
+
+@given(st.integers(2, 5), st.integers(1, 4), st.integers(0, 2),
+       st.integers(1, 2),
+       st.lists(st.sampled_from(OPS), min_size=1, max_size=40),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=120, deadline=None)
+def test_membership_random_interleavings(n_nodes, rpn, spares, min_dp,
+                                         ops, choices):
+    if min_dp > n_nodes:
+        return
+    _check_interleaving(n_nodes, rpn, spares, min_dp, ops, choices)
+
+
+def test_membership_random_interleavings_seeded():
+    """Deterministic replay of the property above for environments
+    without hypothesis — same invariants, pre-drawn op sequences."""
+    for seed in range(40):
+        rng = random.Random(seed ^ 0xE1A5)
+        n_nodes = rng.randint(2, 5)
+        rpn = rng.randint(1, 4)
+        spares = rng.randint(0, 2)
+        min_dp = rng.randint(1, n_nodes)
+        ops = [rng.choice(OPS) for _ in range(rng.randint(1, 40))]
+        _check_interleaving(n_nodes, rpn, spares, min_dp, ops, seed)
+
+
+def test_shrink_grow_shrink_round_trip():
+    """The round-trip invariant stated directly: shrink a node out, grow
+    it back, shrink again — each grow restores exactly the membership
+    the preceding shrink removed (the consistent cut is recoverable),
+    and mesh epochs strictly increase through the whole sequence."""
+    m = _build(3, 2, 0, 1)
+    initial = set(m.world())
+    f1 = FailureEvent(kind=FailureType.NODE, rank=2, node="node1")
+    cmd1 = m.shrink(f1)
+    assert set(m.world()) == initial - set(cmd1.dropped)
+    g1 = m.grow("node1")
+    assert set(g1.added) == set(cmd1.dropped)
+    assert set(m.world()) == initial          # round trip restored
+    f2 = FailureEvent(kind=FailureType.NODE, rank=4, node="node2")
+    cmd2 = m.shrink(f2)
+    assert set(m.world()) == initial - set(cmd2.dropped)
+    g2 = m.grow("node2")
+    assert set(g2.added) == set(cmd2.dropped)
+    assert set(m.world()) == initial
+    epochs = [t.mesh_epoch for t in m.log]
+    assert epochs == sorted(epochs) and len(set(epochs)) == len(epochs)
+    _assert_invariants(m)
+
+
+def test_grow_readmits_most_recent_drop_first():
+    """LIFO re-admission: the survivors hold the *latest* shrink's cut
+    pinned, so a single-node repair must re-admit the most recently
+    dropped group, not the oldest."""
+    m = _build(4, 2, 0, 1)
+    m.shrink(FailureEvent(kind=FailureType.NODE, rank=2, node="node1"))
+    m.shrink(FailureEvent(kind=FailureType.NODE, rank=6, node="node3"))
+    g = m.grow("node3")
+    assert set(g.added) == {6, 7}             # newest drop first
+    assert m.dropped == [2, 3]
+    g2 = m.grow("node1")
+    assert set(g2.added) == {2, 3}
+    _assert_invariants(m)
+
+
+def test_grow_never_mixes_drop_groups():
+    """A node shrink followed by a process-level shrink: the rejoined
+    node re-admits its OWN group (one shrink = one group = one pinned
+    cut), never a mix of ranks from two different cuts — and the
+    process-dropped rank stays out until a later event re-admits it."""
+    m = _build(3, 2, 0, 1)
+    m.shrink(FailureEvent(kind=FailureType.NODE, rank=4, node="node2"))
+    m.shrink(FailureEvent(kind=FailureType.PROCESS, rank=1))
+    assert m.dropped == [4, 5, 1]
+    g = m.grow("node2")
+    assert set(g.added) == {4, 5}             # node2's own group
+    assert m.dropped == [1]
+    assert m.mesh.data_parallel == 3          # full group restored
+    _assert_invariants(m)
+
+
+def test_oracle_matches_sim_on_edge_repairs():
+    """The two derivations of the elastic policy (declarative
+    `elastic_transitions` vs the sim's MembershipMachine replay) agree
+    on the edge shapes the catalog does not reach: a repair after a
+    process-level shrink (its node never died -> no-op) and a repair of
+    a node that never left the world."""
+    from repro.scenarios import (Fault, Repair, Scenario, Topology,
+                                 elastic_transitions,
+                                 expected_resume_steps)
+    from repro.sim.cluster import simulate_scenario
+    proc = Scenario(name="edge-proc", topology=Topology(2, 2, 0), steps=7,
+                    faults=(Fault("rank", 1, 3),), repairs=(Repair(1, 5),),
+                    strategies=("shrink",), expect_bit_identical=False)
+    assert [k for k, _, _ in elastic_transitions(proc)] == \
+        ["shrink", "noop"]
+    out = simulate_scenario(proc, "shrink")
+    assert out.resume_steps == expected_resume_steps(proc, "shrink") == [3]
+    assert not any(r.get("grow") for r in out.rows)
+
+    live = Scenario(name="edge-live", topology=Topology(2, 2, 0), steps=7,
+                    faults=(Fault("node", 2, 4),), repairs=(Repair(0, 2),),
+                    strategies=("shrink",), expect_bit_identical=False)
+    assert [k for k, _, _ in elastic_transitions(live)] == \
+        ["noop", "shrink"]
+    out = simulate_scenario(live, "shrink")
+    assert out.resume_steps == expected_resume_steps(live, "shrink") == [4]
+    assert out.rows[0]["shrink"]
+
+
+def test_floor_blocks_shrink_and_machine_respawns():
+    m = _build(2, 2, 0, 2)                    # floor == initial world
+    f = FailureEvent(kind=FailureType.NODE, rank=2, node="node1")
+    assert m.decide(f) == "respawn"           # would cross the floor
+    proc = FailureEvent(kind=FailureType.PROCESS, rank=1)
+    assert m.decide(proc) == "respawn"
+    with pytest.raises(AssertionError):
+        m.shrink(f)                           # forcing it trips the guard
+
+
+def test_elastic_manager_is_the_membership_machine():
+    """The historical name stays importable and IS the machine — the
+    centralization the refactor promises (one state owner, not three)."""
+    assert issubclass(ElasticManager, MembershipMachine)

@@ -120,29 +120,65 @@ def test_elastic_decide_consults_spare_pool():
                                         model_parallel=2))
     node_f = FailureEvent(kind=FailureType.NODE, rank=2, node="node1")
     proc_f = FailureEvent(kind=FailureType.PROCESS, rank=1)
-    # process failures never shrink; node failures respawn while a spare
-    # slot remains
+    # any failure respawns while a spare slot remains (process failures
+    # respawn in place; node failures re-host onto the spare)
     assert em.decide(proc_f) == "respawn"
     assert em.decide(node_f) == "respawn"
     # Algorithm 1 re-hosts onto the spare, emptying the pool
     root_handle_failure(view, node_f)
     assert em.spares() == []
-    assert em.decide(node_f) == "shrink"
-    # ...but never below the data-parallel floor
-    em.mesh = MeshEpoch(epoch=1, data_parallel=1, model_parallel=2)
-    assert em.decide(node_f) == "respawn"
+    # pool exhausted: both node and single-rank losses now shrink...
+    live_node = FailureEvent(kind=FailureType.NODE, rank=0, node="node0")
+    assert em.decide(live_node) == "shrink"
+    assert em.decide(proc_f) == "shrink"
+    # ...but never below the min_data_parallel world floor
+    em.min_data_parallel = 2          # floor = 2 groups * 2 ranks = world
+    assert em.decide(live_node) == "respawn"
+    assert em.decide(proc_f) == "respawn"
 
 
-def test_shrink_plan_contracts_and_bumps_epoch():
+def test_membership_rejoin_grows_back():
+    """The bidirectional lifecycle at the protocol level: shrink a node
+    out of the world, rejoin it, and the grow restores exactly the
+    pre-shrink membership with strictly monotonic mesh epochs."""
+    from repro.core import ElasticManager, MeshEpoch
+    view = ClusterView.build(2, 2, 0)
+    em = ElasticManager(view, MeshEpoch(epoch=0, data_parallel=2,
+                                        model_parallel=2))
+    before = set(view.ranks())
+    cmd = em.shrink(FailureEvent(kind=FailureType.NODE, rank=2,
+                                 node="node1"))
+    assert set(cmd.dropped) == {2, 3} and em.dropped == [2, 3]
+    assert em.mesh.epoch == 1 and em.mesh.data_parallel == 1
+    # a rejoin with a shrunk world is admitted as a grow
+    assert em.admit("node1") == "grow"
+    grow = em.grow("node1")
+    assert set(grow.added) == {2, 3}
+    assert set(grow.world) == before and set(view.ranks()) == before
+    assert em.dropped == []
+    assert grow.mesh_epoch == em.mesh.epoch == 2
+    assert em.mesh.data_parallel == 2
+    # a rejoin with a full world joins the spare pool instead
+    assert em.admit("late-node") == "spare"
+    em.grant_spare("late-node")
+    assert em.spares() == ["late-node"]
+    # process-level shrink leaves uneven groups, still above the floor
+    cmd = em.shrink(FailureEvent(kind=FailureType.PROCESS, rank=1))
+    assert cmd.dropped == (1,) and em.dropped == [1]
+    assert em.mesh.epoch == 3
+    em.check_invariants()
+
+
+def test_shrink_contracts_and_bumps_epoch():
     from repro.core import ElasticManager, MeshEpoch
     view = ClusterView.build(3, 2, 0)
     em = ElasticManager(view, MeshEpoch(epoch=0, data_parallel=3,
                                         model_parallel=2))
-    node_f = FailureEvent(kind=FailureType.NODE, rank=4, node="node2")
-    mesh = em.shrink_plan(node_f)
-    assert mesh is not None
-    assert mesh.data_parallel == 2 and mesh.epoch == 1
-    mesh = em.shrink_plan(node_f)
-    assert mesh.data_parallel == 1 and mesh.epoch == 2
+    em.shrink(FailureEvent(kind=FailureType.NODE, rank=4, node="node2"))
+    assert em.mesh.data_parallel == 2 and em.mesh.epoch == 1
+    em.shrink(FailureEvent(kind=FailureType.NODE, rank=2, node="node1"))
+    assert em.mesh.data_parallel == 1 and em.mesh.epoch == 2
     # at the floor: shrink refused, caller falls back to global restart
-    assert em.shrink_plan(node_f) is None
+    last = FailureEvent(kind=FailureType.NODE, rank=0, node="node0")
+    assert em.decide(last) == "respawn"
+    em.check_invariants()

@@ -70,6 +70,42 @@ def test_schema_rejects(bad):
         Scenario(name="bad", topology=T22, steps=6, **bad)
 
 
+def test_expected_resume_oracle_elastic():
+    """Strategy-aware oracle: under the elastic strategy a repair adds a
+    grow entry whose cut is the shrink it reverses; everywhere else
+    repairs are invisible."""
+    from repro.scenarios import Repair, elastic_transitions
+    t220 = Topology(nodes=2, ranks_per_node=2, spares=0)
+    sc = Scenario(name="gb", topology=t220, steps=7,
+                  faults=(Fault("node", 2, 2),), repairs=(Repair(2, 4),),
+                  strategies=("shrink", "reinit"))
+    assert expected_resume_steps(sc) == [2]
+    assert expected_resume_steps(sc, "reinit") == [2]
+    assert expected_resume_steps(sc, "cr") == [2]
+    assert expected_resume_steps(sc, "shrink") == [2, 2]
+    kinds = [k for k, _, _ in elastic_transitions(sc)]
+    assert kinds == ["shrink", "grow"]
+    # spare-absorbed first loss, shrink second, grow reverses the second
+    sc2 = Scenario(name="gb3", topology=T32, steps=9,
+                   faults=(Fault("node", 2, 2), Fault("node", 4, 4)),
+                   repairs=(Repair(4, 6),), strategies=("shrink",))
+    assert expected_resume_steps(sc2, "shrink") == [2, 4, 4]
+    assert [k for k, _, _ in elastic_transitions(sc2)] == \
+        ["respawn", "shrink", "grow"]
+    # a repair with a full world is a spare grant: no oracle entry
+    sc3 = Scenario(name="sp", topology=T22, steps=7,
+                   faults=(Fault("node", 2, 2),), repairs=(Repair(2, 4),),
+                   strategies=("shrink",))
+    assert expected_resume_steps(sc3, "shrink") == [2]
+    assert [k for k, _, _ in elastic_transitions(sc3)] == \
+        ["respawn", "spare"]
+    # the min_data_parallel floor turns a would-be shrink into respawn
+    sc4 = Scenario(name="fl", topology=t220, steps=7,
+                   faults=(Fault("node", 2, 2),), min_data_parallel=2,
+                   strategies=("shrink",))
+    assert [k for k, _, _ in elastic_transitions(sc4)] == ["respawn"]
+
+
 def test_expected_resume_oracle():
     mk = lambda f: Scenario(name="x", topology=T22, steps=6, faults=(f,))
     assert expected_resume_step(mk(Fault("rank", 1, 3))) == 3
@@ -115,6 +151,16 @@ def test_catalog_breadth():
     # a hang cell detected by the heartbeat ring, not the watchdog
     assert any(s.heartbeat_period_s > 0 and s.stall_timeout_s == 0
                and any(f.how == "hang" for f in s.faults) for s in CATALOG)
+    # full elastic lifecycle coverage: grow-back cells (repairs), a
+    # process-level shrink cell, and a daemon-hang (node-level
+    # heartbeat) cell
+    assert any(s.repairs for s in CATALOG)
+    assert any(s.repairs and s.is_cascading for s in CATALOG)
+    assert any(not s.topology.spares
+               and any(f.target == "rank" for f in s.faults)
+               and "shrink" in s.strategies for s in CATALOG)
+    assert any(any(f.how == "hang" and f.target == "node"
+                   for f in s.faults) for s in CATALOG)
     # every scenario is executable on the real runtime or sim-only by
     # explicit choice (ulfm) — none is silently dead
     for s in CATALOG:
@@ -172,12 +218,21 @@ SIM_MATRIX = [(s.name, st) for s in CATALOG for st in s.strategies]
 def test_sim_matrix(name, strategy):
     sc = BY_NAME[name]
     out = engine.run_sim(sc, strategy)
-    assert out.n_recoveries == len(sc.faults)
-    assert out.total_s > 0
-    assert out.resume_consistent
     rows = out.detail["rows"]
-    assert [r["cascade"] for r in rows] == \
-        [f.point.startswith("worker.recovery.") for f in sc.faults]
+    # every fault is charged exactly one recovery row; the elastic
+    # strategy may add grow rows for node repairs on top
+    fault_rows = [r for r in rows if not r.get("grow")]
+    assert len(fault_rows) == len(sc.faults)
+    grows = [r for r in rows if r.get("grow")]
+    if strategy != "shrink" or not sc.repairs:
+        assert not grows
+    assert out.total_s > 0
+    assert out.resume_consistent, \
+        f"{name}/{strategy}: {out.resume_steps} != {out.expected_resume}"
+    # cascades may be re-ordered around a grow (a cascade on a dropped
+    # rank fires at the grow that re-admits it) but never lost
+    assert sorted(r["cascade"] for r in fault_rows) == \
+        sorted(f.point.startswith("worker.recovery.") for f in sc.faults)
     for r in rows:
         assert r["detect_s"] > 0 and r["mpi_recovery_s"] > 0
 
@@ -212,31 +267,38 @@ def test_sim_cascade_charges_two_recoveries():
 # ------------------------------------------------- elastic / shrink sim
 
 ELASTIC_CELLS = ["double-node-loss", "spare-pool-exhaustion",
-                 "shrink-after-cascade"]
+                 "shrink-after-cascade", "proc-loss-shrink",
+                 "shrink-then-growback", "growback-mid-cascade",
+                 "shrink-then-growback-3node"]
 
 
 @pytest.mark.parametrize("name", ELASTIC_CELLS)
 @pytest.mark.parametrize("strategy", ["reinit", "cr", "ulfm", "shrink"])
 def test_sim_elastic_matrix(name, strategy):
     """Every elastic cell through every strategy — including the ones the
-    cell itself does not list, so the sim coverage is the full x4 grid."""
+    cell itself does not list, so the sim coverage is the full x4 grid.
+    Under the elastic strategy the executed shrink/grow transitions must
+    match the schema's declarative `elastic_transitions` replay — two
+    independent derivations of the same membership policy."""
+    from repro.scenarios import elastic_transitions
     sc = BY_NAME[name]
     out = engine.run_sim(sc, strategy)
-    assert out.n_recoveries == len(sc.faults)
+    rows = out.detail["rows"]
+    fault_rows = [r for r in rows if not r.get("grow")]
+    assert len(fault_rows) == len(sc.faults)
     assert out.resume_consistent, \
         f"{name}/{strategy}: {out.resume_steps} != {out.expected_resume}"
-    rows = out.detail["rows"]
     if strategy == "shrink":
-        # the world contracts exactly when a node loss finds the pool
-        # empty — never earlier, never for non-elastic strategies
-        spares = sc.topology.spares
-        node_faults = 0
-        for r, f in zip(rows, sc.faults):
-            expect_shrink = (f.target == "node" and node_faults >= spares)
-            node_faults += f.target == "node"
-            assert r["shrink"] == expect_shrink, (name, r)
+        exp = elastic_transitions(sc)
+        primary = [e for e in exp
+                   if e[0] in ("respawn", "shrink", "restart")]
+        primary_rows = [r for r in fault_rows if not r["cascade"]]
+        assert [r["shrink"] for r in primary_rows] == \
+            [k == "shrink" for k, _, _ in primary], (name, primary_rows)
+        grows = [r for r in rows if r.get("grow")]
+        assert len(grows) == sum(1 for k, _, _ in exp if k == "grow")
     else:
-        assert not any(r["shrink"] for r in rows)
+        assert not any(r["shrink"] or r.get("grow") for r in rows)
 
 
 def test_sim_shrink_cheaper_than_node_respawn():
@@ -249,6 +311,81 @@ def test_sim_shrink_cheaper_than_node_respawn():
     assert not respawned["shrink"] and shrunk["shrink"]
     assert shrunk["mpi_recovery_s"] < respawned["mpi_recovery_s"]
     assert shrunk["ckpt_read_s"] < respawned["ckpt_read_s"]
+
+
+def test_sim_growback_reexpands_world():
+    """The grow row's structure: after shrink-then-growback the sim must
+    show one shrink row and one grow row, the grow re-admitting exactly
+    the dropped ranks with a bumped mesh epoch and a consensus landing
+    on the pinned pre-shrink cut."""
+    out = simulate_scenario(BY_NAME["shrink-then-growback"], "shrink")
+    shrunk = [r for r in out.rows if r["shrink"]]
+    grows = [r for r in out.rows if r["grow"]]
+    assert len(shrunk) == 1 and len(grows) == 1
+    assert grows[0]["added"] == [2, 3]
+    assert grows[0]["mesh_epoch"] == 2        # shrink bumped, grow bumped
+    assert out.resume_steps == [2, 2]         # shrink cut, then grow cut
+    assert out.world_consistent
+    # non-elastic strategies never grow
+    for st in ("reinit", "cr", "ulfm"):
+        assert not any(r["grow"] for r in
+                       simulate_scenario(BY_NAME["shrink-then-growback"],
+                                         st).rows)
+
+
+def test_sim_process_shrink_uneven_groups():
+    """Process-level shrink: a single-rank loss with no spares drops one
+    rank (uneven groups), restores from survivor memory, and is cheaper
+    than the respawn the non-elastic strategies pay."""
+    sc = BY_NAME["proc-loss-shrink"]
+    out = simulate_scenario(sc, "shrink")
+    assert out.rows[0]["shrink"] and not out.rows[0]["cascade"]
+    assert out.resume_steps == [3]
+    respawn = simulate_scenario(sc, "reinit")
+    assert out.rows[0]["mpi_recovery_s"] < respawn.rows[0]["mpi_recovery_s"]
+
+
+def test_sim_growback_cascade_defers_to_grow():
+    """A cascade on a dropped rank cannot fire while the rank is out of
+    the world: the sim defers it to the grow that re-admits it (exactly
+    when its next incarnation first runs), and the consensus still
+    lands on the shrink cut."""
+    out = simulate_scenario(BY_NAME["growback-mid-cascade"], "shrink")
+    kinds = [("grow" if r["grow"] else
+              "cascade" if r["cascade"] else
+              "shrink" if r["shrink"] else "respawn") for r in out.rows]
+    assert kinds == ["shrink", "grow", "cascade"]
+    assert out.resume_steps == [2, 2]
+    # under reinit the rank is respawned immediately, so the cascade
+    # fires during the first recovery, before any repair
+    out_r = simulate_scenario(BY_NAME["growback-mid-cascade"], "reinit")
+    assert [r["cascade"] for r in out_r.rows] == [False, True]
+
+
+def test_sim_min_data_parallel_floor_blocks_shrink():
+    """Surfaced floor knob: the same cell with min_data_parallel raised
+    to the node count refuses to shrink and over-subscribes instead."""
+    from repro.scenarios import Fault as F, Scenario as S, Topology as T
+    base = S(name="floor0", topology=T(2, 2, 0), steps=6,
+             faults=(F("node", 2, 2),), strategies=("shrink",),
+             expect_bit_identical=False)
+    floored = S(name="floor2", topology=T(2, 2, 0), steps=6,
+                faults=(F("node", 2, 2),), min_data_parallel=2,
+                strategies=("shrink",))
+    assert simulate_scenario(base, "shrink").rows[0]["shrink"]
+    assert not simulate_scenario(floored, "shrink").rows[0]["shrink"]
+
+
+def test_sim_node_hang_detected_by_daemon_ring():
+    """Node-hang detection cost: the daemon ring pays its timeout plus
+    the channel-EOF term — far below the rank-hang watchdog window, and
+    with no stall watchdog armed at all in the cell."""
+    sc = BY_NAME["node-hang-heartbeat"]
+    assert sc.stall_timeout_s == 0
+    out = simulate_scenario(sc, "reinit")
+    assert out.rows[0]["detect_s"] > sc.heartbeat_timeout_s
+    watchdog = simulate_scenario(BY_NAME["proc-hang"], "reinit")
+    assert out.rows[0]["detect_s"] < watchdog.rows[0]["detect_s"]
 
 
 def test_sim_heartbeat_ring_beats_watchdog_on_hangs():
@@ -358,13 +495,15 @@ SLOW_MATRIX = [(s.name, st) for s in CATALOG
                for st in engine.real_strategies(s)]
 
 
-def _ff_checksums(cache, tmp_path_factory, topo):
-    """Fault-free reference checksums per topology (shared across the
-    module — one real run per distinct tree shape)."""
-    key = (topo.nodes, topo.ranks_per_node, topo.spares)
+def _ff_checksums(cache, tmp_path_factory, sc):
+    """Fault-free reference checksums per (topology, run shape) —
+    shared across the module: one real run per distinct reference."""
+    topo = sc.topology
+    key = (topo.nodes, topo.ranks_per_node, topo.spares, sc.steps, sc.dim)
     if key not in cache:
         wd = str(tmp_path_factory.mktemp(f"ff{topo.nodes}"))
-        out = engine.run_real(fault_free(topo), "reinit", wd, timeout=240)
+        out = engine.run_real(fault_free(topo, steps=sc.steps, dim=sc.dim),
+                              "reinit", wd, timeout=240)
         assert out.n_recoveries == 0
         cache[key] = out.checksums
     return cache[key]
@@ -405,6 +544,74 @@ def test_heartbeat_detects_hung_neighbour(tmp_path):
     assert out.resume_steps == [sc.faults[0].step]
 
 
+def test_daemon_heartbeat_detects_hung_node(tmp_path):
+    """Satellite unit check, on the live process tree: a hung *daemon*
+    (whole-node hang: children muted, control channel open, nothing
+    relayed) is SUSPECT_NODEd by its ring-successor daemon within the
+    heartbeat window — the stall watchdog is DISARMED, and rank-level
+    observation cannot see through a daemon that relays nothing."""
+    sc = BY_NAME["node-hang-heartbeat"]
+    assert sc.stall_timeout_s == 0
+    out = engine.run_real(sc, "reinit", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    assert len(events) == 1
+    ev = events[0]
+    assert ev["kind"] == "node"
+    assert ev["detected_by"] == "heartbeat"
+    # detection within k periods past the timeout (scheduling slack on a
+    # loaded host included) — nowhere near any watchdog-scale constant
+    k = 5
+    assert ev["detect_latency_s"] <= \
+        sc.heartbeat_timeout_s + k * sc.heartbeat_period_s + 1.0
+    assert out.resume_consistent
+    assert out.resume_steps == [sc.faults[0].step]
+
+
+@pytest.mark.scenario_fast
+def test_real_growback_world_reexpands(tmp_path, tmp_path_factory,
+                                       ff_cache):
+    """The acceptance-criterion cell, checked in mechanism detail on the
+    live process tree: the node loss shrinks 4->2 at the cut, the
+    repaired node's REJOIN grows the world back to its pre-fault size at
+    a checkpoint boundary (bumped mesh epoch), the consensus lands on
+    the pinned pre-shrink cut, and the re-expanded run finishes
+    bit-identically to fault-free."""
+    sc = BY_NAME["shrink-then-growback"]
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc)
+    out = engine.run_real(sc, "shrink", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    assert [bool(ev.get("shrink")) for ev in events] == [True, False]
+    assert [bool(ev.get("grow")) for ev in events] == [False, True]
+    shrunk, grown = events
+    assert shrunk["world_after"] == 2 and shrunk["dropped"] == [2, 3]
+    assert grown["added"] == [2, 3]
+    assert grown["world_after"] == 4          # pre-fault size restored
+    assert grown["mesh_epoch"] > shrunk["mesh_epoch"]
+    assert grown["detected_by"] == "rejoin"
+    assert out.resume_steps == [2, 2]         # both land on the cut
+    assert out.resume_consistent
+    assert len(out.checksums) == 4            # the full world reports
+    assert out.checksums == ff                # bit-identical continuation
+
+
+@pytest.mark.scenario_fast
+def test_real_process_shrink_uneven_groups(tmp_path):
+    """Process-level shrink on the live tree: a single-rank loss with an
+    empty pool drops that rank (uneven groups: 2+1), survivors
+    re-balance and resume at the oracle cut."""
+    sc = BY_NAME["proc-loss-shrink"]
+    out = engine.run_real(sc, "shrink", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    assert len(events) == 1
+    ev = events[0]
+    assert ev["shrink"] and ev["dropped"] == [1]
+    assert ev["world_after"] == 3
+    assert ev["mesh_epoch"] is not None
+    assert len(out.checksums) == 3            # survivors only
+    assert out.resume_consistent, \
+        (out.resume_steps, out.expected_resume)
+
+
 @pytest.mark.scenario_fast
 def test_real_shrink_world_contracts(tmp_path):
     """The scenario_fast shrink cell, checked in mechanism detail: the
@@ -428,7 +635,7 @@ def test_real_shrink_world_contracts(tmp_path):
 @pytest.mark.parametrize("name", [s.name for s in FAST])
 def test_real_scenario_fast(name, tmp_path, tmp_path_factory, ff_cache):
     sc = BY_NAME[name]
-    ff = _ff_checksums(ff_cache, tmp_path_factory, sc.topology)
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc)
     strategy = engine.real_strategies(sc)[0]
     out = engine.run_real(sc, strategy, str(tmp_path), timeout=240)
     _assert_outcome(sc, out, ff)
@@ -441,7 +648,7 @@ def test_real_scenario_matrix_3x_stable(name, strategy, tmp_path,
     """The no-flake proof: every real-runtime scenario x strategy passes
     three consecutive runs with identical assertions."""
     sc = BY_NAME[name]
-    ff = _ff_checksums(ff_cache, tmp_path_factory, sc.topology)
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc)
     for attempt in range(3):
         out = engine.run_real(sc, strategy,
                               str(tmp_path / f"run{attempt}"), timeout=300)

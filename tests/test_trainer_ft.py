@@ -107,13 +107,16 @@ def test_resume_from_disk(tmp_path):
         tree_digest(jax.device_get(tr3.state["params"]))
 
 
-def _shrink_scenario(n_nodes, rpn, spares, fail_rank, fail_step):
+def _shrink_scenario(n_nodes, rpn, spares, fail_rank, fail_step,
+                     repairs=(), faults=None):
     from repro.scenarios import Fault, Scenario, Topology
     return Scenario(
         name="trainer-node-loss", steps=STEPS,
         topology=Topology(nodes=n_nodes, ranks_per_node=rpn,
                           spares=spares),
-        faults=(Fault("node", fail_rank, fail_step),),
+        faults=faults if faults is not None
+        else (Fault("node", fail_rank, fail_step),),
+        repairs=repairs,
         strategies=("shrink",), expect_bit_identical=False)
 
 
@@ -165,6 +168,174 @@ def test_elastic_trainer_spare_absorbs_first_node_loss(tmp_path,
     rep = res["reports"][0]
     assert rep.world_after is None and tr.n_ranks == 8
     assert tr.elastic.spares() == []        # the spare absorbed the loss
+    assert tree_digest(jax.device_get(tr.state["params"])) == ref_digest
+
+
+def test_elastic_trainer_grows_back_after_shrink(tmp_path, reference):
+    """The full elastic lifecycle through the in-process SPMD driver: a
+    node loss shrinks the world (mesh epoch 1, recompile), the repaired
+    node's rejoin at a later checkpoint boundary grows it back (mesh
+    epoch 2, second recompile) — and the run still lands on the
+    bit-identical final state."""
+    from repro.core import ScenarioInjector
+    from repro.scenarios import Repair
+    ref_digest, _ = reference
+    inj = ScenarioInjector(_shrink_scenario(2, 4, 0, fail_rank=2,
+                                            fail_step=4,
+                                            repairs=(Repair(2, 7),)))
+    model = Model(CFG)
+    data = TokenPipeline(CFG.vocab_size, 4, 32, seed=7)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=STEPS)
+    tc = TrainConfig(total_steps=STEPS, ckpt_dir=str(tmp_path),
+                     strategy="shrink", n_nodes=2, ranks_per_node=4,
+                     spare_nodes=0)
+    tr = Trainer(model, data, opt, tc, injector=inj)
+    res = tr.run()
+    assert res["final_step"] == STEPS
+    shrink_rep, grow_rep = res["reports"]
+    assert shrink_rep.world_after == 4
+    assert grow_rep.world_after == 8 and tr.n_ranks == 8
+    assert sorted(tr.view.ranks()) == list(range(8))
+    assert tr.elastic.mesh.data_parallel == 2
+    assert tr.elastic.mesh.epoch == 2       # strictly monotonic remesh
+    assert tr.elastic.dropped == []
+    assert tree_digest(jax.device_get(tr.state["params"])) == ref_digest
+
+
+def test_trainer_process_shrink_uneven_groups(tmp_path, reference):
+    """Process-level shrink in the driver: a single-rank loss with no
+    spares drops that rank (uneven groups), keeps the survivors' memory
+    tier, and still finishes bit-identically (global batch unchanged)."""
+    from repro.core import ScenarioInjector
+    from repro.scenarios import Fault
+    ref_digest, _ = reference
+    inj = ScenarioInjector(_shrink_scenario(
+        2, 4, 0, 0, 0, faults=(Fault("rank", 2, 4),)))
+    model = Model(CFG)
+    data = TokenPipeline(CFG.vocab_size, 4, 32, seed=7)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=STEPS)
+    tc = TrainConfig(total_steps=STEPS, ckpt_dir=str(tmp_path),
+                     strategy="shrink", n_nodes=2, ranks_per_node=4,
+                     spare_nodes=0)
+    tr = Trainer(model, data, opt, tc, injector=inj)
+    res = tr.run()
+    assert res["final_step"] == STEPS
+    rep = res["reports"][0]
+    assert rep.world_after == 7 and tr.n_ranks == 7   # uneven groups
+    assert rep.rollback_step == 4       # survivor memory tier at the cut
+    assert sorted(tr.view.ranks()) == [0, 1, 3, 4, 5, 6, 7]
+    assert tr.elastic.dropped == [2]
+    assert tree_digest(jax.device_get(tr.state["params"])) == ref_digest
+
+
+def test_trainer_growback_mid_cascade(tmp_path, reference):
+    """The growback-mid-cascade shape in-process: the cascade's victim
+    is dropped by the shrink, so the fault defers until the grow
+    re-admits it, then merges as a respawn (never a second shrink) —
+    three reports, world restored, bit-identical continuation."""
+    from repro.core import ScenarioInjector
+    from repro.scenarios import Fault, Repair
+    ref_digest, _ = reference
+    inj = ScenarioInjector(_shrink_scenario(
+        2, 4, 0, 0, 0,
+        faults=(Fault("node", 2, 4),
+                Fault("rank", 2, None, point="worker.recovery.pulled")),
+        repairs=(Repair(2, 7),)))
+    model = Model(CFG)
+    data = TokenPipeline(CFG.vocab_size, 4, 32, seed=7)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=STEPS)
+    tc = TrainConfig(total_steps=STEPS, ckpt_dir=str(tmp_path),
+                     strategy="shrink", n_nodes=2, ranks_per_node=4,
+                     spare_nodes=0)
+    tr = Trainer(model, data, opt, tc, injector=inj)
+    res = tr.run()
+    assert res["final_step"] == STEPS
+    shrink_rep, grow_rep, casc_rep = res["reports"]
+    assert shrink_rep.world_after == 4
+    assert grow_rep.world_after == 8
+    assert casc_rep.world_after is None       # merged respawn, no shrink
+    assert tr.n_ranks == 8 and sorted(tr.view.ranks()) == list(range(8))
+    assert tree_digest(jax.device_get(tr.state["params"])) == ref_digest
+
+
+def test_trainer_min_data_parallel_floor(tmp_path, reference):
+    """The surfaced floor knob: with min_data_parallel == n_nodes the
+    same node loss refuses to shrink and respawns instead."""
+    from repro.core import ScenarioInjector
+    ref_digest, _ = reference
+    inj = ScenarioInjector(_shrink_scenario(2, 4, 0, fail_rank=2,
+                                            fail_step=4))
+    model = Model(CFG)
+    data = TokenPipeline(CFG.vocab_size, 4, 32, seed=7)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=STEPS)
+    tc = TrainConfig(total_steps=STEPS, ckpt_dir=str(tmp_path),
+                     strategy="shrink", n_nodes=2, ranks_per_node=4,
+                     spare_nodes=0, min_data_parallel=2)
+    tr = Trainer(model, data, opt, tc, injector=inj)
+    res = tr.run()
+    assert res["final_step"] == STEPS
+    rep = res["reports"][0]
+    assert rep.world_after is None and tr.n_ranks == 8   # respawned
+    assert tree_digest(jax.device_get(tr.state["params"])) == ref_digest
+
+
+@pytest.mark.parametrize("point,expect_offset", [
+    ("worker.ckpt.mid_write", -1),    # save never committed: resume s-1
+    ("worker.ckpt.pre_push", 0),      # file committed, buddy not: resume s
+])
+def test_trainer_checkpoint_phase_faults(tmp_path, reference, point,
+                                         expect_offset):
+    """ROADMAP satellite: checkpoint-phase injection points flow through
+    the in-process trainer via ScenarioInjector — a mid-write death
+    resumes one step back, a pre-push death resumes at the committed
+    file via the merged buddy+file restore; both continue
+    bit-identically."""
+    from repro.core import ScenarioInjector
+    from repro.scenarios import Fault, Scenario, Topology
+    ref_digest, _ = reference
+    sc = Scenario(name=f"trainer-{point.rsplit('.', 1)[-1]}", steps=STEPS,
+                  topology=Topology(nodes=1, ranks_per_node=8, spares=0),
+                  faults=(Fault("rank", 3, 5, point=point),),
+                  strategies=("reinit",))
+    inj = ScenarioInjector(sc)
+    model = Model(CFG)
+    data = TokenPipeline(CFG.vocab_size, 4, 32, seed=7)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=STEPS)
+    tc = TrainConfig(total_steps=STEPS, ckpt_dir=str(tmp_path),
+                     strategy="reinit")
+    tr = Trainer(model, data, opt, tc, injector=inj)
+    res = tr.run()
+    assert res["final_step"] == STEPS
+    assert len(res["reports"]) == 1
+    assert res["reports"][0].rollback_step == 5 + expect_offset
+    assert tree_digest(jax.device_get(tr.state["params"])) == ref_digest
+
+
+def test_trainer_cascade_during_recovery(tmp_path, reference):
+    """ROADMAP satellite: cascade points flow through the in-process
+    trainer — a second failure during the first recovery triggers a
+    nested recovery over the same frames; both land on the same cut and
+    the continuation stays bit-identical."""
+    from repro.core import ScenarioInjector
+    from repro.scenarios import Fault, Scenario, Topology
+    ref_digest, _ = reference
+    sc = Scenario(name="trainer-cascade", steps=STEPS,
+                  topology=Topology(nodes=1, ranks_per_node=8, spares=0),
+                  faults=(Fault("rank", 3, 4),
+                          Fault("rank", 3, None,
+                                point="worker.recovery.pulled")),
+                  strategies=("reinit",))
+    inj = ScenarioInjector(sc)
+    model = Model(CFG)
+    data = TokenPipeline(CFG.vocab_size, 4, 32, seed=7)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=STEPS)
+    tc = TrainConfig(total_steps=STEPS, ckpt_dir=str(tmp_path),
+                     strategy="reinit")
+    tr = Trainer(model, data, opt, tc, injector=inj)
+    res = tr.run()
+    assert res["final_step"] == STEPS
+    assert len(res["reports"]) == 2           # primary + merged cascade
+    assert [r.rollback_step for r in res["reports"]] == [4, 4]
     assert tree_digest(jax.device_get(tr.state["params"])) == ref_digest
 
 
