@@ -27,6 +27,7 @@ REGRESSION_TOLERANCE = 0.20
 
 def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
                      growback: dict | None = None,
+                     failover: dict | None = None,
                      path: str = BENCH_JSON) -> bool:
     """Returns True only when the file was actually (re)written."""
     if not ckpt_io:
@@ -64,6 +65,19 @@ def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
             prior = json.load(f).get("growback")
         if prior:
             doc["growback"] = prior
+    if failover:
+        # zero-rollback replica failover vs reinit, at the largest
+        # measured rank count (live runtime)
+        doc["failover"] = {
+            "ranks": failover.get("largest_ranks"),
+            "replica_e2e_s": failover.get("replica_e2e_s"),
+            "reinit_e2e_s": failover.get("reinit_e2e_s"),
+            "speedup": failover.get("speedup")}
+    elif os.path.exists(path):
+        with open(path) as f:
+            prior = json.load(f).get("failover")
+        if prior:
+            doc["failover"] = prior
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -83,9 +97,10 @@ def check_regression(path: str = BENCH_JSON,
         committed = json.load(f)
     from benchmarks import checkpoint_bench, recovery_time, runtime_bench
 
-    # the growback row only gates when the committed baseline has one
-    # (the real-process lifecycle is ~15 s per pass — skip it otherwise)
+    # the growback/failover rows only gate when the committed baseline
+    # has them (each real-process pass is ~15 s — skip otherwise)
     gate_growback = bool(committed.get("growback", {}).get("e2e_s"))
+    gate_failover = bool(committed.get("failover", {}).get("replica_e2e_s"))
 
     def measure() -> dict:
         ckpt_io = checkpoint_bench.bench_file_io()
@@ -101,6 +116,10 @@ def check_regression(path: str = BENCH_JSON,
         if gate_growback:
             gb = runtime_bench.bench_growback(report=lambda *_: None)
             out[("growback", "e2e_s")] = gb.get("growback_e2e_s")
+        if gate_failover:
+            fo = runtime_bench.bench_failover(report=lambda *_: None,
+                                              sizes=((2, 2),))
+            out[("failover", "replica_e2e_s")] = fo.get("replica_e2e_s")
         return out
 
     # best of three full passes: container CPU/disk contention makes a
@@ -152,7 +171,7 @@ def main() -> None:
         failures += 1
         print("fig6/fig7_recovery_FAILED,0,error")
         traceback.print_exc()
-    growback = None
+    growback = failover = None
     if not fast:
         from benchmarks import runtime_bench
         try:
@@ -161,8 +180,14 @@ def main() -> None:
             failures += 1
             print("bench_growback_FAILED,0,error")
             traceback.print_exc()
+        try:
+            failover = runtime_bench.bench_failover(report=print)
+        except Exception:                 # noqa: BLE001
+            failures += 1
+            print("bench_failover_FAILED,0,error")
+            traceback.print_exc()
     try:
-        if write_bench_json(ckpt_io, e2e, growback):
+        if write_bench_json(ckpt_io, e2e, growback, failover):
             print(f"bench_json_written,0,{BENCH_JSON}")
         else:
             print("bench_json_skipped,0,checkpoint_bench_failed")
@@ -178,10 +203,11 @@ def main() -> None:
     ]
     if not fast:
         from benchmarks import runtime_bench
-        # growback already measured above (feeds the bench json)
+        # growback/failover already measured above (feed the bench json)
         suites.append(("real-process runtime",
                        lambda report: runtime_bench.run(report,
-                                                        growback=False)))
+                                                        growback=False,
+                                                        failover=False)))
 
     for label, fn in suites:
         try:

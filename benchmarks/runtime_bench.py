@@ -136,11 +136,61 @@ def bench_growback(report=print) -> dict:
     return out
 
 
-def run(report=print, growback=True):
+def bench_failover(report=print, *, sizes=((2, 2), (2, 4))) -> dict:
+    """Zero-rollback replica failover vs Reinit++ global restart, on the
+    live process tree, at growing rank counts. The same fenced rank kill
+    is recovered both ways; e2e is detection -> the world computing again:
+    for replica that is `promote_complete_s` (the promoted shadow's
+    arrival releases the stalled barrier), for reinit `join_release_s`
+    (respawn + re-register + rollback consensus — conservatively
+    EXCLUDING the recomputed steps reinit still owes afterwards)."""
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    from repro.scenarios import Fault, Scenario, Topology
+    from repro.scenarios.engine import run_real
+
+    out = {"sizes": {}}
+    for nodes, rpn in sizes:
+        ranks = nodes * rpn
+        sc = Scenario(
+            name=f"failover-{ranks}r",
+            topology=Topology(nodes=nodes, ranks_per_node=rpn, spares=1),
+            steps=8, dim=128, faults=(Fault("rank", 1, 4),),
+            strategies=("replica", "reinit"))
+        with tempfile.TemporaryDirectory() as tmp:
+            rep = run_real(sc, "replica", os.path.join(tmp, "replica"),
+                           timeout=180)
+            rei = run_real(sc, "reinit", os.path.join(tmp, "reinit"),
+                           timeout=180)
+        rep_ev = rep.detail["events"][-1]
+        rei_ev = rei.detail["events"][-1]
+        assert rep_ev.get("promote"), rep_ev
+        assert rep.resume_consistent and rei.resume_consistent
+        rep_e2e = rep_ev["promote_complete_s"]
+        rei_e2e = rei_ev.get("join_release_s",
+                             rei_ev.get("mpi_recovery_s", 0.0))
+        speedup = rei_e2e / rep_e2e if rep_e2e else float("inf")
+        out["sizes"][str(ranks)] = {
+            "replica_e2e_s": rep_e2e, "reinit_e2e_s": rei_e2e,
+            "speedup": speedup}
+        report(f"failover_replica_{ranks}r,{rep_e2e * 1e6:.0f},"
+               f"e2e_s={rep_e2e:.4f}")
+        report(f"failover_reinit_{ranks}r,{rei_e2e * 1e6:.0f},"
+               f"e2e_s={rei_e2e:.4f}")
+        report(f"failover_speedup_{ranks}r,0,x={speedup:.1f}")
+    largest = max(out["sizes"], key=int)
+    out["largest_ranks"] = int(largest)
+    out.update(out["sizes"][largest])
+    return out
+
+
+def run(report=print, growback=True, failover=True):
     bench_buddy_spill(report)
     bench_detection_latency(report)
     if growback:       # run.py measures it separately for the bench json
         bench_growback(report)
+    if failover:       # likewise measured separately for the bench json
+        bench_failover(report)
     with tempfile.TemporaryDirectory() as tmp:
         results = {}
         for mode in ["reinit", "cr"]:

@@ -26,6 +26,13 @@ TABLE2 = {
     # modeled explicitly by the executors, not through this table.
     ("process", "shrink"): "memory",
     ("node", "shrink"): "file",
+    # replica failover: the warm shadow *is* the memory tier, and it is
+    # admitted off-node by construction, so even a node loss leaves it
+    # intact — the promoted shadow composes its streamed frames without
+    # ever touching the file tier. (When no warm shadow exists the root
+    # falls back to Reinit++, which uses that row of this table.)
+    ("process", "replica"): "memory",
+    ("node", "replica"): "memory",
 }
 
 

@@ -9,10 +9,12 @@ Layers:
   elastic    spare pool, mesh epochs, shrinking-recovery option
   recovery   CR / Reinit++ / ULFM strategy objects
 """
-from .events import (FailureEvent, FailureType, GrowCommand, RankState,
-                     RecoveryReport, ReinitCommand, Respawn, ShrinkCommand)
+from .events import (FailureEvent, FailureType, GrowCommand, PromoteCommand,
+                     Promotion, RankState, RecoveryReport, ReinitCommand,
+                     Respawn, ShrinkCommand)
 from .protocol import (ClusterView, DaemonActions, apply_recovery,
                        daemon_handle_reinit, root_handle_failure,
+                       root_handle_failure_promote,
                        root_handle_failure_shrink, root_handle_rejoin)
 from .failure import (ChannelMonitor, ChildMonitor, FaultInjector,
                       HeartbeatModel, ScenarioInjector, kill_process)
@@ -20,4 +22,5 @@ from .reinit import (ROLLBACK, RollbackSignal, SIGREINIT, install_sigreinit,
                      reinit_main)
 from .membership import MembershipMachine, RankMembership, Transition
 from .elastic import ElasticManager, MeshEpoch
-from .recovery import CR, REINIT, SHRINK, STRATEGIES, ULFM, get_strategy
+from .recovery import (CR, REINIT, REPLICA, SHRINK, STRATEGIES,
+                       STRATEGY_ALIASES, ULFM, get_strategy)

@@ -77,6 +77,26 @@ class GrowCommand:
     mesh_epoch: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class Promotion:
+    """One ⟨failed rank, shadow's hosting daemon⟩ pair: the shadow that
+    was warming that rank's delta stream takes over the rank id."""
+    rank: int
+    daemon: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PromoteCommand:
+    """The broadcast of a zero-rollback failover: no respawns and no
+    rollback — each failed rank is replaced in place by its warm shadow.
+    Survivors stay parked at the stalled step; the promoted shadows
+    simply complete it. The mesh shape is unchanged, so the mesh epoch
+    does NOT bump (compiled steps stay valid everywhere)."""
+    promotions: tuple[Promotion, ...]
+    epoch: int
+    world: tuple[int, ...]           # full rank membership (unchanged set)
+
+
 @dataclasses.dataclass
 class RecoveryReport:
     """Timings of one recovery, broken down the way the paper reports them

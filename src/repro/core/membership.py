@@ -30,10 +30,11 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
-from .events import FailureEvent, FailureType, GrowCommand, ReinitCommand, \
-    ShrinkCommand
+from .events import FailureEvent, FailureType, GrowCommand, PromoteCommand, \
+    ReinitCommand, ShrinkCommand
 from .protocol import ClusterView, root_handle_failure, \
-    root_handle_failure_shrink, root_handle_rejoin
+    root_handle_failure_promote, root_handle_failure_shrink, \
+    root_handle_rejoin
 
 
 @dataclasses.dataclass
@@ -54,7 +55,8 @@ class MeshEpoch:
 @dataclasses.dataclass(frozen=True)
 class Transition:
     """One audited membership transition (the machine's history log)."""
-    kind: str                        # respawn | shrink | grow | spare
+    kind: str        # respawn | shrink | grow | spare | shadow |
+                     # shadow_lost | promote
     trigger: str                     # node_loss | rank_loss | rejoin
     epoch: int                       # cluster-view epoch after
     mesh_epoch: int                  # mesh epoch after
@@ -90,6 +92,10 @@ class MembershipMachine:
         # dropped one (whose cut the survivors still hold pinned).
         # home_node is None for process-level drops (their node lives).
         self._drop_groups: List[tuple] = []
+        # pre-admitted warm members: rank -> daemon hosting its shadow.
+        # Shadows are *outside* the world (they hold state, not a rank
+        # id) until a promote transition swaps them in.
+        self._shadows: dict = {}
         self.log: List[Transition] = []
 
     @property
@@ -142,6 +148,22 @@ class MembershipMachine:
         the world back while ranks are missing from it, and otherwise
         joins the spare pool."""
         return "grow" if self.dropped else "spare"
+
+    @property
+    def shadows(self) -> dict:
+        """rank -> daemon hosting that rank's warm shadow (read-only)."""
+        return dict(self._shadows)
+
+    def can_promote(self, failure: FailureEvent) -> bool:
+        """True iff every rank lost by `failure` has a warm shadow — the
+        precondition of the zero-rollback path. A rank without one falls
+        back to decide() (respawn/shrink)."""
+        if failure.kind is FailureType.NODE:
+            lost = self.view.children.get(failure.node, set())
+            return bool(lost) and all(
+                self._shadows.get(r) not in (None, failure.node)
+                for r in lost)
+        return failure.rank in self._shadows
 
     # ------------------------------------------------------- transitions
 
@@ -209,6 +231,43 @@ class MembershipMachine:
         self._record("grow", "rejoin", added=added)
         return cmd
 
+    def admit_shadow(self, rank: int, node: str):
+        """Pre-admit a warm shadow for `rank`, hosted on `node` (normally
+        a spare). Shadows are warm state outside the world: no epoch or
+        mesh change — membership is untouched until a promote."""
+        assert rank in self.world(), f"shadow for unknown rank {rank}"
+        assert node in self.view.children, f"shadow on unknown node {node}"
+        assert node != self.view.parent(rank), \
+            f"shadow for rank {rank} co-hosted with its primary"
+        self._shadows[rank] = node
+        self._record("shadow", "admit", added=(rank,))
+
+    def shadow_lost(self, rank: int):
+        """A shadow died (or its host did): the rank loses replica
+        protection and future failures fall back to decide()."""
+        if self._shadows.pop(rank, None) is not None:
+            self._record("shadow_lost", "shadow_loss", dropped=(rank,))
+
+    def promote(self, failure: FailureEvent) -> PromoteCommand:
+        """Zero-rollback failover: the failed ranks' warm shadows take
+        over their rank ids in place. The world's rank set and the mesh
+        shape are unchanged, so the mesh epoch does NOT bump — compiled
+        steps everywhere stay valid. Consumes the shadows."""
+        assert self.can_promote(failure), f"no warm shadow for {failure}"
+        cmd = root_handle_failure_promote(self.view, failure, self._shadows)
+        for p in cmd.promotions:
+            self._shadows.pop(p.rank, None)
+        # a dead node also takes down any shadows it hosted
+        if failure.kind is FailureType.NODE:
+            for r, host in list(self._shadows.items()):
+                if host == failure.node:
+                    self._shadows.pop(r)
+        trigger = "node_loss" if failure.kind is FailureType.NODE \
+            else "rank_loss"
+        self._record("promote", trigger,
+                     added=tuple(p.rank for p in cmd.promotions))
+        return cmd
+
     def grant_spare(self, node: str):
         """A repaired node rejoins a full world: it becomes an (empty)
         over-provisioned spare. No epoch or mesh change — nothing about
@@ -240,6 +299,21 @@ class MembershipMachine:
                   or (t.kind == "respawn" and t.trigger == "node_loss")]
         assert all(a < b for a, b in zip(remesh, remesh[1:])), \
             "re-meshing transition without a strict mesh-epoch bump"
+        # a promote is in-place: the rank set and the mesh shape are
+        # untouched, so its mesh epoch must equal its predecessor's
+        for i, t in enumerate(self.log):
+            if t.kind == "promote" and i > 0:
+                prev = self.log[i - 1]
+                assert t.mesh_epoch == prev.mesh_epoch, \
+                    "promote bumped the mesh epoch"
+                assert set(t.world) == set(prev.world), \
+                    "promote changed the rank set"
+        # shadows never alias live hosting: a rank's shadow lives on a
+        # different daemon than the rank itself
+        for r, host in self._shadows.items():
+            if r in world:
+                assert self.view.parent(r) != host, \
+                    f"rank {r} shadowed on its own host {host}"
 
 
 @dataclasses.dataclass

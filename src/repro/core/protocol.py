@@ -11,8 +11,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Iterable, Set
 
-from .events import (FailureEvent, FailureType, GrowCommand, RankState,
-                     ReinitCommand, Respawn, ShrinkCommand)
+from .events import (FailureEvent, FailureType, GrowCommand, PromoteCommand,
+                     Promotion, RankState, ReinitCommand, Respawn,
+                     ShrinkCommand)
 
 
 @dataclasses.dataclass
@@ -112,6 +113,41 @@ def root_handle_failure_shrink(view: ClusterView, failure: FailureEvent
     world = tuple(view.ranks())
     assert world, "shrink removed the last rank"
     return ShrinkCommand(dropped=dropped, epoch=view.epoch, world=world)
+
+
+def root_handle_failure_promote(view: ClusterView, failure: FailureEvent,
+                                shadows: Dict[int, str]) -> PromoteCommand:
+    """Zero-rollback failover: each failed rank is replaced in place by
+    its warm shadow, hosted on the shadow's daemon.
+
+    `shadows` maps rank -> daemon hosting that rank's shadow. Mutates
+    `view` (the failed rank moves to the shadow's daemon — the world's
+    rank *set* never changes) and returns the PROMOTE broadcast.
+    Raises KeyError if any failed rank has no warm shadow — the caller
+    falls back to Algorithm 1 (respawn) for those.
+    """
+    if failure.kind is FailureType.NODE:
+        dead = failure.node
+        assert dead is not None
+        lost = sorted(view.children.get(dead, ()))
+    else:
+        assert failure.rank is not None
+        lost = [failure.rank]
+    missing = [r for r in lost if r not in shadows]
+    if missing:
+        raise KeyError(f"no warm shadow for ranks {missing}")
+    view.epoch += 1
+    if failure.kind is FailureType.NODE:
+        view.children.pop(dead, None)
+    promotions = []
+    for r in lost:
+        home = shadows[r]
+        if failure.kind is not FailureType.NODE:
+            view.children[view.parent(r)].discard(r)
+        view.children.setdefault(home, set()).add(r)
+        promotions.append(Promotion(rank=r, daemon=home))
+    return PromoteCommand(promotions=tuple(promotions), epoch=view.epoch,
+                          world=tuple(view.ranks()))
 
 
 def root_handle_rejoin(view: ClusterView, node: str,

@@ -11,6 +11,10 @@ their calibrated large-scale costs. The asymmetries the paper measures:
             state; memory (buddy) checkpoints valid for process failures.
   ULFM      all-rank revoke/shrink/agree collectives; survivors keep
             process; always-on heartbeat taxes every fault-free step.
+  Replica   shadow ranks consume the buddy delta stream every step; a
+            failure is repaired by promoting the warm shadow in place —
+            no rollback, no respawn, no recomputed steps. The stream
+            fan-out taxes every fault-free step instead.
 """
 from __future__ import annotations
 
@@ -37,6 +41,9 @@ class RecoveryStrategy:
     # enough context to start the restore early). CR cannot overlap —
     # nothing survives the teardown to do the restoring.
     overlap_restore: bool = False
+    # replication: shadow ranks hold warm state and failover is an
+    # in-place promotion (no rollback-to-checkpoint on the critical path)
+    replicates: bool = False
 
     def checkpoint_kind(self, failure: FailureType) -> str:
         from repro.checkpoint.policy import checkpoint_kind_for
@@ -46,11 +53,22 @@ class RecoveryStrategy:
     @property
     def key(self) -> str:
         return {"CR": "cr", "Reinit++": "reinit", "ULFM": "ulfm",
-                "Shrink": "shrink"}[self.name]
+                "Shrink": "shrink", "Replica": "replica"}[self.name]
 
-    def fault_free_overhead(self, n_ranks: int) -> float:
-        return self.heartbeat.per_step_overhead(n_ranks) if self.heartbeat \
+    def fault_free_overhead(self, n_ranks: int,
+                            stream_mb_per_rank: float = 0.0,
+                            nic_bw_MBps: float = 1_200.0) -> float:
+        """Per-step tax this strategy pays when nothing fails.
+
+        ULFM pays its heartbeat; Replica pays the extra delta-frame push
+        to the shadow (one more NIC copy per rank per step — pairs are
+        parallel, so it scales with the per-rank frame size, not the
+        world size). The other strategies are free when healthy."""
+        cost = self.heartbeat.per_step_overhead(n_ranks) if self.heartbeat \
             else 0.0
+        if self.replicates and stream_mb_per_rank > 0.0:
+            cost += stream_mb_per_rank / nic_bw_MBps
+        return cost
 
 
 CR = RecoveryStrategy(
@@ -79,11 +97,43 @@ SHRINK = RecoveryStrategy(
     allrank_collectives=0, tree_broadcasts=1, heartbeat=None,
     overlap_restore=True)
 
-STRATEGIES = {s.key: s for s in (CR, REINIT, ULFM, SHRINK)}
+# Zero-rollback replica failover (FTHP-MPI / PartRePer-MPI lineage):
+# shadow ranks drawn from the spare pool apply the buddy delta stream as
+# it flows, so they always hold the state of the current step. Failover
+# is PROMOTE shadow + re-form ring + resume — survivors never roll back
+# and the failed step is never recomputed. The price is paid fault-free:
+# one extra NIC push per rank per step, plus a shadow process per
+# protected rank.
+REPLICA = RecoveryStrategy(
+    name="Replica", redeploys=False, keeps_jit_cache=True,
+    allrank_collectives=0, tree_broadcasts=1, heartbeat=None,
+    overlap_restore=True, replicates=True)
+
+STRATEGIES = {s.key: s for s in (CR, REINIT, ULFM, SHRINK, REPLICA)}
+
+# Accepted spellings → canonical strategy keys. This is the single alias
+# table; scenarios/schema.py re-exports it so the CLI, the scenario
+# schema and this registry can never drift apart.
+STRATEGY_ALIASES = {
+    "reinit++": "reinit",
+    "reinitpp": "reinit",
+    "restart": "cr",
+    "ulfm-shrink": "ulfm",
+    "elastic": "shrink",
+}
 
 
 def get_strategy(name: str) -> RecoveryStrategy:
-    k = name.lower().replace("++", "").replace("reinitpp", "reinit")
-    if k not in STRATEGIES:
-        raise KeyError(f"unknown strategy {name!r}; known: {list(STRATEGIES)}")
+    """Resolve a strategy by key or documented alias.
+
+    Raises ValueError on empty/ambiguous input (e.g. "++", which older
+    normalization silently collapsed to "" and then mis-reported as an
+    unknown strategy) and KeyError on a genuinely unknown name."""
+    if not isinstance(name, str) or not name.strip():
+        raise ValueError(f"empty or non-string strategy name: {name!r}")
+    k = name.strip().lower()
+    k = STRATEGY_ALIASES.get(k, k)
+    if not k or k not in STRATEGIES:
+        known = sorted(set(STRATEGIES) | set(STRATEGY_ALIASES))
+        raise KeyError(f"unknown strategy {name!r}; known: {known}")
     return STRATEGIES[k]

@@ -15,6 +15,8 @@ import json
 import os
 import sys
 
+from repro.core.recovery import STRATEGIES
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -23,7 +25,7 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--strategy", default="reinit",
-                    choices=["reinit", "cr", "ulfm"])
+                    choices=sorted(STRATEGIES))
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=1)
     ap.add_argument("--ckpt-delta-every", type=int, default=0,
@@ -40,11 +42,13 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.cluster:
-        from repro.runtime.root import main as root_main
+        from repro.runtime.root import MODES, main as root_main
+        # ulfm is sim-only: the cluster path runs it as reinit
+        mode = args.strategy if args.strategy in MODES else "reinit"
         rt_args = ["--nodes", "2", "--ranks-per-node", "4", "--spares", "1",
                    "--steps", str(args.steps),
                    "--ckpt-dir", args.ckpt_dir,
-                   "--mode", "cr" if args.strategy == "cr" else "reinit"]
+                   "--mode", mode]
         if args.fail_kind:
             rt_args += ["--fail-step", str(max(args.steps // 2, 1)),
                         "--fail-rank", "1", "--fail-kind", args.fail_kind]

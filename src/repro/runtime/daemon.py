@@ -8,6 +8,13 @@ SIGREINIT (SIGUSR1) and re-spawns the ranks assigned to it.
 A KILL_NODE message (node-failure injection) SIGKILLs every child and then
 the daemon itself — from the root's perspective the control channel breaks,
 exactly like a node loss.
+
+Replica mode extends the daemon with shadow hosting (a SPAWN carrying
+shadow=True starts warm-shadow workers, PROMOTE is relayed to the named
+one) and root fail-over: when the control channel to the root breaks and a
+warm-standby address was configured (--standby-port), the daemon re-homes —
+re-registers with the standby and continues relaying — instead of tearing
+the node down.
 """
 from __future__ import annotations
 
@@ -57,6 +64,12 @@ class Daemon:
         # control channel to root
         self.root_sock = connect("127.0.0.1", args.root_port)
         self.root_send_lock = threading.Lock()
+        # warm-standby root (replica mode): where to re-home if the
+        # primary's channel breaks. One re-home only — if the standby
+        # dies too, the node goes down like any root loss.
+        self.standby_port = int(getattr(args, "standby_port", 0) or 0)
+        self._rehome_lock = threading.Lock()
+        self._rehomed = False
         self._send_root({"type": "REGISTER_DAEMON", "node": self.node,
                          "pid": os.getpid(), "port": self.wport})
 
@@ -73,11 +86,42 @@ class Daemon:
         # serializes run-loop relays against the heartbeat observer's
         # SUSPECT_NODE reports (two concurrent sendall()s interleave)
         with self.root_send_lock:
+            sock = self.root_sock
+            try:
+                send_msg(sock, msg)
+                return
+            except OSError:
+                if not self._rehome(sock):
+                    raise
             send_msg(self.root_sock, msg)
+
+    def _rehome(self, failed_sock) -> bool:
+        """Swap the root channel over to the warm standby. Returns True
+        when self.root_sock is usable again (either this call re-homed,
+        or another thread already did and `failed_sock` was stale)."""
+        if self.standby_port <= 0:
+            return False
+        with self._rehome_lock:
+            if self.root_sock is not failed_sock:
+                return True        # raced: someone re-homed already
+            if self._rehomed:
+                return False       # standby is gone too
+            try:
+                sock = connect("127.0.0.1", self.standby_port)
+                send_msg(sock, {"type": "REGISTER_DAEMON",
+                                "node": self.node, "pid": os.getpid(),
+                                "port": self.wport, "rehome": True})
+            except OSError:
+                self._rehomed = True
+                return False
+            self.root_sock = sock
+            self._rehomed = True
+            return True
 
     # ------------------------------------------------------------ workers
 
-    def spawn_worker(self, rank: int, *, restarted: bool, epoch: int):
+    def spawn_worker(self, rank: int, *, restarted: bool, epoch: int,
+                     shadow: bool = False):
         a = self.args
         cmd = [sys.executable, "-m", "repro.runtime.worker",
                "--rank", str(rank), "--world", str(a.world),
@@ -93,6 +137,8 @@ class Daemon:
                "--epoch", str(epoch)]
         if restarted:
             cmd.append("--restarted")
+        if shadow:
+            cmd.append("--shadow")
         env = dict(os.environ, PYTHONPATH=a.pythonpath)
         proc = subprocess.Popen(cmd, env=env)
         with self.lock:
@@ -259,17 +305,20 @@ class Daemon:
             except OSError:
                 pass
 
-    def _spawn_many(self, ranks, *, restarted: bool, epoch: int):
+    def _spawn_many(self, ranks, *, restarted: bool, epoch: int,
+                    shadow: bool = False):
         """fork+exec the ranks concurrently — the spawn fan-out inside a
         node happens in parallel, so a node-failure respawn costs one
         spawn latency, not len(ranks) of them."""
         if len(ranks) <= 1:
             for r in ranks:
-                self.spawn_worker(r, restarted=restarted, epoch=epoch)
+                self.spawn_worker(r, restarted=restarted, epoch=epoch,
+                                  shadow=shadow)
             return
         threads = [threading.Thread(target=self.spawn_worker, args=(r,),
                                     kwargs={"restarted": restarted,
-                                            "epoch": epoch})
+                                            "epoch": epoch,
+                                            "shadow": shadow})
                    for r in ranks]
         for th in threads:
             th.start()
@@ -278,18 +327,24 @@ class Daemon:
 
     def run(self):
         while True:
+            sock = self.root_sock
             try:
-                msg = recv_msg(self.root_sock)
+                msg = recv_msg(sock)
             except OSError:           # channel broken (possibly injected)
                 msg = None
             if self._silent.is_set():
                 threading.Event().wait()     # hung node: mute forever
             if msg is None:
+                if self.root_sock is not sock:
+                    continue          # relay thread already re-homed us
+                if self._rehome(sock):
+                    continue          # primary died: now homed on standby
                 self._die_hard()      # root gone: tear everything down
             t = msg["type"]
             if t == "SPAWN":          # initial deployment or Algorithm 2
                 self._spawn_many(msg["ranks"], restarted=msg["restarted"],
-                                 epoch=msg["epoch"])
+                                 epoch=msg["epoch"],
+                                 shadow=msg.get("shadow", False))
             elif t in ("REINIT", "GROW"):
                 # Algorithm 2: signal survivors, spawn assigned ranks.
                 # GROW is the same daemon-side motion over an *expanding*
@@ -328,6 +383,18 @@ class Daemon:
                     except ProcessLookupError:
                         pass
                 self._broadcast_workers(msg)
+            elif t == "PROMOTE":
+                # replica failover: hand the promote order to the named
+                # shadow only — it composes its warm frame and enters
+                # the BSP loop at the resume step
+                with self.lock:
+                    s = self.worker_socks.get(msg["rank"])
+                if s is not None:
+                    try:
+                        with self.send_lock:
+                            send_msg(s, msg)
+                    except OSError:
+                        pass
             elif t == "KILL_RANK":
                 # root-side stall watchdog: a silent (hung) child cannot
                 # be detected by waitpid — the root orders the kill and
@@ -344,7 +411,7 @@ class Daemon:
                 # relayed to workers (node-level concern only)
                 self.daemon_table = dict(msg["table"])
             elif t in ("RANK_TABLE", "BARRIER_RELEASE", "JOIN_RELEASE",
-                       "FENCE_RELEASE", "SHUTDOWN"):
+                       "FENCE_RELEASE", "RESYNC", "SHUTDOWN"):
                 if t == "RANK_TABLE":
                     with self.lock:
                         self.last_table = msg
@@ -381,6 +448,7 @@ def main(argv=None):
     ap.add_argument("--hb-timeout", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--pythonpath", default="")
+    ap.add_argument("--standby-port", type=int, default=0)
     Daemon(ap.parse_args(argv)).run()
 
 

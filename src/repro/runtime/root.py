@@ -1,7 +1,8 @@
 """Root (HNP): deployment, liveness, Algorithm 1, recovery orchestration.
 
-Three recovery modes — the paper's two measured approaches plus the
-elastic extension it defers as future work:
+Four recovery modes — the paper's two measured approaches plus the
+elastic extension it defers as future work and the zero-rollback
+replica extension:
 
   reinit  Algorithm 1 + REINIT broadcast: survivors roll back in place,
           only failed ranks are re-spawned (on the least-loaded node for
@@ -23,6 +24,19 @@ elastic extension it defers as future work:
           ranks at the next checkpoint boundary (GROW broadcast: expanded
           world, bumped mesh epoch, re-admitted ranks restore from the
           pinned pre-shrink cut) or adds the node to the spare pool.
+  replica Zero-rollback failover: every rank gets a warm shadow on
+          another node (spare nodes first) that applies the primary's
+          per-step checkpoint stream. A fenced failure is recovered by
+          PROMOTE — the shadow composes its newest warm frame and joins
+          the stalled barrier in the victim's place. No SIGREINIT, no
+          epoch bump, no respawn: survivors never leave their barrier
+          wait, so recovery is promote-and-reform and the resume step IS
+          the failure step. Faults the stream cannot cover (mid-write
+          kills, a cold or dead shadow, a NACKing shadow) fall back to
+          the reinit path. A warm-standby root mirrors the rank/daemon
+          tables over a replication channel and takes over on HNP loss
+          (daemons re-home to it) — root failure no longer needs an
+          external job restart.
 
 The root measures, with wall clocks, the same phases the paper reports:
 detection→REINIT-broadcast, re-registration (MPI recovery), and the first
@@ -43,10 +57,18 @@ import time
 
 from repro.core.elastic import ElasticManager, MeshEpoch
 from repro.core.events import FailureEvent, FailureType
-from repro.core.protocol import ClusterView, root_handle_failure
+from repro.core.protocol import ClusterView, root_handle_failure, \
+    root_handle_failure_promote
+from repro.core.recovery import STRATEGIES
 from repro.scenarios.schema import ROOT_INJECTED_EXIT, Scenario
 
-from .transport import listener, recv_msg, send_msg
+from .transport import connect, listener, recv_msg, send_msg
+
+# every registered strategy the live process tree can execute; ulfm is
+# sim-only by design (its revoke/shrink/agree collectives are modeled,
+# not implemented). Derived from the strategy registry so the CLI can
+# never drift from it.
+MODES = tuple(k for k in STRATEGIES if k != "ulfm")
 
 
 class Root:
@@ -114,6 +136,23 @@ class Root:
         self._pending_grow: list[str] = []
         self._held_release: tuple | None = None   # barrier paused for a
                                                   # rejoin in flight
+        # replica mode: warm shadows (rank -> peer addr / hosting daemon /
+        # pid) and the in-flight promote ledger (rank -> hosting daemon,
+        # consulted when a PROMOTE_NACK or a mid-promote death arrives)
+        self.shadow_table: dict[int, tuple[str, int]] = {}
+        self._shadow_parent: dict[int, str] = {}
+        self._shadow_pids: dict[int, int] = {}
+        self._promote_inflight: dict[int, str] = {}
+        self._await_shadows: set[int] = set()   # gate the initial table
+                                                # broadcast on warm cover
+        # warm-standby root: spawned before deploy in replica mode; the
+        # registration carries the standby's listener port, which daemons
+        # get on their spawn command line so they can re-home on HNP loss
+        self.standby_proc: subprocess.Popen | None = None
+        self.standby_sock = None
+        self._standby_port = 0
+        self._standby_ready = threading.Event()
+        self._standby_active = False
         # root-target scenario faults: {step: fault_index}
         self._root_faults: dict[int, int] = {}
         if getattr(args, "scenario", ""):
@@ -142,6 +181,14 @@ class Root:
                 msg = recv_msg(conn)
                 if msg is None:
                     break
+                if msg["type"] == "STANDBY_REGISTER":
+                    # the warm standby announcing itself: keep the channel
+                    # as the replication stream, never queue it as a
+                    # cluster event
+                    self._standby_port = msg["port"]
+                    self.standby_sock = conn
+                    self._standby_ready.set()
+                    continue
                 if msg["type"] == "REGISTER_DAEMON":
                     node = msg["node"]
                     self.daemon_socks[node] = conn
@@ -177,6 +224,7 @@ class Root:
                "--scenario", getattr(a, "scenario", ""),
                "--hb-period", str(getattr(a, "hb_period", 0.0)),
                "--hb-timeout", str(getattr(a, "hb_timeout", 0.0)),
+               "--standby-port", str(self._standby_port),
                "--ckpt-dir", a.ckpt_dir, "--pythonpath", a.pythonpath]
         env = dict(os.environ, PYTHONPATH=a.pythonpath)
         self.daemon_procs[node] = subprocess.Popen(cmd, env=env)
@@ -198,6 +246,103 @@ class Root:
                          {"type": "SPAWN", "ranks": ranks,
                           "restarted": False, "epoch": self.epoch})
         self.report["deploy_start_s"] = t0
+
+    # ---------------------------------------------------- replica fabric
+
+    def _spawn_standby(self):
+        """Spawn the warm-standby root and wait for it to register: its
+        listener port goes on every daemon's command line (the re-home
+        target), so it must exist before the first daemon spawns."""
+        a = self.args
+        cmd = [sys.executable, "-m", "repro.runtime.root",
+               "--nodes", str(a.nodes),
+               "--ranks-per-node", str(a.ranks_per_node),
+               "--spares", str(a.spares), "--steps", str(a.steps),
+               "--dim", str(a.dim), "--mode", a.mode,
+               "--min-data-parallel", str(getattr(a, "min_data_parallel", 1)),
+               "--scenario", getattr(a, "scenario", ""),
+               "--ckpt-dir", a.ckpt_dir, "--report", a.report,
+               "--pythonpath", a.pythonpath,
+               "--as-standby", "--primary-port", str(self.port)]
+        env = dict(os.environ, PYTHONPATH=a.pythonpath)
+        self.standby_proc = subprocess.Popen(cmd, env=env)
+        if not self._standby_ready.wait(timeout=30):
+            raise TimeoutError("standby root never registered")
+
+    def _deploy_shadows(self):
+        """One warm shadow per rank, hosted off the rank's own node —
+        spare nodes first (the paper's over-provisioning absorbs the
+        shadow load), other compute nodes otherwise. Shadows are
+        pre-admitted members with warm state: they apply the primary's
+        per-step checkpoint stream and only enter the BSP loop on
+        PROMOTE."""
+        spares = self.view.spares()
+        computes = [d for d in self.view.daemons()
+                    if self.view.children.get(d)]
+        pool = spares or computes
+        by_daemon: dict[str, list[int]] = {}
+        i = 0
+        for r in sorted(self.view.ranks()):
+            home = self.view.parent(r)
+            cands = [d for d in pool if d != home] \
+                or [d for d in computes if d != home]
+            if not cands:
+                continue            # single-node world: nowhere to shadow
+            host = cands[i % len(cands)]
+            i += 1
+            self._shadow_parent[r] = host
+            by_daemon.setdefault(host, []).append(r)
+        # hold the initial table broadcast until every shadow registered:
+        # the zero-rollback guarantee needs the stream warm from step 1 —
+        # otherwise a slow-deploying shadow joins mid-chain and the first
+        # failure races its warm-up
+        self._await_shadows = {r for rs in by_daemon.values() for r in rs}
+        for host, ranks in by_daemon.items():
+            send_msg(self.daemon_socks[host],
+                     {"type": "SPAWN", "ranks": sorted(ranks),
+                      "restarted": False, "epoch": self.epoch,
+                      "shadow": True})
+
+    def _table_msg(self, partial: bool = False) -> dict:
+        msg = {"type": "RANK_TABLE", "epoch": self.epoch,
+               "world": sorted(self.world_ranks),
+               "table": {str(k): list(v) for k, v in
+                         self.rank_table.items()}}
+        if partial:
+            msg["partial"] = True
+        if self.shadow_table:
+            # primaries stream their per-step frames to their own shadow
+            msg["shadows"] = {str(k): list(v) for k, v in
+                              self.shadow_table.items()}
+        return msg
+
+    def _sync_standby(self):
+        """Replicate the root's authoritative tables to the warm standby.
+        Called once per processed event — the stream is tiny (rank/daemon
+        tables + report), and a takeover needs nothing newer than the
+        last completed event."""
+        if self.standby_sock is None:
+            return
+        try:
+            send_msg(self.standby_sock, {
+                "type": "SYNC", "epoch": self.epoch,
+                "world": sorted(self.world_ranks),
+                "table": {str(k): list(v) for k, v in
+                          self.rank_table.items()},
+                "pids": {str(k): v for k, v in self._rank_pids.items()},
+                "shadows": {str(k): list(v) for k, v in
+                            self.shadow_table.items()},
+                "shadow_parent": {str(k): v for k, v in
+                                  self._shadow_parent.items()},
+                "shadow_pids": {str(k): v for k, v in
+                                self._shadow_pids.items()},
+                "children": {d: sorted(rs) for d, rs in
+                             self.view.children.items()},
+                "view_epoch": self.view.epoch,
+                "done": sorted(self.done),
+                "report": self.report})
+        except OSError:
+            self.standby_sock = None      # standby died: run uncovered
 
     # ----------------------------------------------------------- barrier
 
@@ -229,6 +374,18 @@ class Root:
                              "value": total})
             del self.barrier[key]
             self._barrier_seen.pop(key, None)
+            if self.report["events"]:
+                ev = self.report["events"][-1]
+                if ev.get("promote") and "promote_complete_s" not in ev \
+                        and ev.get("t_recover_start"):
+                    # the promoted shadow's arrival completed the stalled
+                    # barrier: the whole world is computing again — the
+                    # replica failover's true end-to-end recovery time.
+                    # The promotion window is over: later deaths of these
+                    # ranks are ordinary new failures, not window deaths.
+                    ev["promote_complete_s"] = \
+                        time.monotonic() - ev["t_recover_start"]
+                    self._promote_inflight.clear()
             self._maybe_die_as_root(key[1])
             if getattr(self, "_first_barrier_after_recovery", None) is not None:
                 t0 = self._first_barrier_after_recovery
@@ -467,11 +624,7 @@ class Root:
         # pipeline the restore with the spawn, like REINIT: survivors'
         # addresses go out immediately so the re-admitted ranks can try
         # buddy pulls while the rest of the world re-registers
-        self._broadcast({"type": "RANK_TABLE", "epoch": self.epoch,
-                         "partial": True,
-                         "world": sorted(self.world_ranks),
-                         "table": {str(k): list(v) for k, v in
-                                   self.rank_table.items()}})
+        self._broadcast(self._table_msg(partial=True))
         ev["reinit_broadcast_s"] = time.monotonic() - t0
         ev["t_recover_start"] = t0
 
@@ -546,6 +699,8 @@ class Root:
         self.report["events"].append(ev)
         if self.args.mode == "cr":
             self._recover_cr(ev, failure)
+        elif self.args.mode == "replica":
+            self._recover_replica(ev, failure)
         elif self.elastic is not None \
                 and self.elastic.decide(failure) == "shrink":
             self._recover_shrink(ev, failure)
@@ -591,11 +746,7 @@ class Root:
         # back and re-spawned ranks begin their buddy pulls while the
         # rest of the world is still re-registering — the full table
         # rebroadcast happens when all lost ranks are back
-        self._broadcast({"type": "RANK_TABLE", "epoch": self.epoch,
-                         "partial": True,
-                         "world": sorted(self.world_ranks),
-                         "table": {str(k): list(v) for k, v in
-                                   self.rank_table.items()}})
+        self._broadcast(self._table_msg(partial=True))
         ev["reinit_broadcast_s"] = time.monotonic() - t0
         ev["t_recover_start"] = t0
 
@@ -639,6 +790,143 @@ class Root:
         # immediately; the remaining cost is the survivors' rollback
         self._maybe_broadcast_table()
 
+    # ----------------------------------------------- replica (promote)
+
+    def _drop_shadow(self, rank: int):
+        self.shadow_table.pop(rank, None)
+        self._shadow_parent.pop(rank, None)
+        self._shadow_pids.pop(rank, None)
+
+    def _handle_shadow_death(self, rank: int):
+        """A warm shadow died (its own injected fault, or collateral).
+        The rank's primary is untouched, so this is not a recovery — the
+        rank just lost its zero-rollback cover and the next failure falls
+        back to reinit."""
+        self._drop_shadow(rank)
+        if not self.shutting_down:
+            self.report["events"].append({"shadow_lost": rank})
+
+    def _can_promote(self, failure: FailureEvent):
+        """Returns the zero-rollback resume step, or None when the
+        failure is not promotable. Promotable means: every lost rank has
+        a registered shadow hosted off the failed node, AND every
+        survivor is already parked at one stalled barrier — the fenced
+        consistent cut, which is exactly the step the warm frame holds.
+        An unfenced failure (mid-write kill, hang) leaves survivors
+        scattered and the stream behind the cut: fall back to reinit."""
+        if failure.kind is FailureType.NODE:
+            lost = sorted(self.view.children.get(failure.node, ()))
+            if not lost:
+                return None
+        else:
+            if failure.rank not in self.world_ranks:
+                return None
+            lost = [failure.rank]
+        for r in lost:
+            home = self._shadow_parent.get(r)
+            if r not in self.shadow_table or home is None \
+                    or home not in self.daemon_socks:
+                return None
+            if failure.kind is FailureType.NODE and home == failure.node:
+                return None
+        survivors = self.world_ranks - set(lost)
+        for (ep, step), d in self.barrier.items():
+            if ep == self.epoch and survivors <= set(d) \
+                    and len(d) < len(self.world_ranks):
+                return step
+        return None
+
+    def _recover_replica(self, ev, failure: FailureEvent):
+        """Zero-rollback failover: promote the lost ranks' warm shadows
+        in place, or fall back to Algorithm-1 reinit when the stream
+        cannot cover this failure."""
+        if failure.kind is FailureType.NODE:
+            # the dead node takes the shadows it hosted with it
+            doomed = sorted(r for r, h in self._shadow_parent.items()
+                            if h == failure.node)
+            for r in doomed:
+                self._drop_shadow(r)
+            if doomed:
+                ev["shadows_lost"] = doomed
+        resume = self._can_promote(failure)
+        if resume is None:
+            ev["promote"] = False
+            self._recover_reinit(ev, failure)
+            return
+        self._recover_promote(ev, failure, resume)
+
+    def _recover_promote(self, ev, failure: FailureEvent, resume: int):
+        """PROMOTE: move each lost rank to its shadow's daemon, point the
+        rank table at the shadow's peer listener, and tell the shadow to
+        compose its warm frame and enter the BSP loop at `resume`.
+
+        Deliberately NO epoch bump, NO SIGREINIT, NO _reset_sync_state():
+        survivors stay parked at the stalled barrier — the promoted
+        shadows' arrivals are what complete it. The rank-ordered
+        reduction then sums the identical values a fault-free run would
+        have, so the recovered run stays bit-identical."""
+        t0 = time.monotonic()
+        cmd = root_handle_failure_promote(self.view, failure,
+                                          dict(self._shadow_parent))
+        if failure.kind is FailureType.NODE:
+            self.daemon_socks.pop(failure.node, None)
+            self.daemon_pids.pop(failure.node, None)
+            self.daemon_procs.pop(failure.node, None)
+            self.daemon_ports.pop(failure.node, None)
+        ev["promote"] = True
+        ev["promoted"] = [p.rank for p in cmd.promotions]
+        ev["resume_step"] = resume
+        ev["t_recover_start"] = t0
+        self._pending_respawn = set()
+        for p in cmd.promotions:
+            addr = self.shadow_table.pop(p.rank)
+            home = self._shadow_parent.pop(p.rank)
+            self._promote_inflight[p.rank] = home
+            self.rank_table[p.rank] = addr
+            self._rank_pids[p.rank] = self._shadow_pids.pop(p.rank, None)
+            sock = self.daemon_socks.get(home)
+            if sock is not None:
+                try:
+                    send_msg(sock, {"type": "PROMOTE", "rank": p.rank,
+                                    "resume": resume,
+                                    "epoch": self.epoch})
+                except OSError:
+                    pass
+        ev["reinit_broadcast_s"] = time.monotonic() - t0
+        self._maybe_broadcast_table()
+
+    def _promote_window_death(self, rank: int):
+        """A freshly-promoted shadow died inside the promotion window
+        (after PROMOTE, before its barrier arrival completed the stalled
+        cut). Merge into the recovery in flight: fall back to a reinit
+        respawn annotated on the SAME consensus entry — never a second
+        event, never a double promote, never a deadlocked barrier."""
+        self._promote_inflight.pop(rank, None)
+        ev = self.report["events"][-1]
+        ev.setdefault("promote_window_death", []).append(rank)
+        ev["promote"] = False
+        self.recovering = True
+        self._recover_reinit(ev, FailureEvent(kind=FailureType.PROCESS,
+                                              rank=rank))
+
+    def _promote_nack(self, msg):
+        """The shadow cannot compose the agreed resume step (its stream
+        lagged): kill it so the ordinary failure path re-runs — with the
+        shadow gone, _recover_replica falls back to reinit."""
+        r = msg["rank"]
+        home = self._promote_inflight.pop(r, None)
+        if home is None:
+            return
+        if self.report["events"]:
+            ev = self.report["events"][-1]
+            ev.setdefault("promote_nack", []).append(r)
+        sock = self.daemon_socks.get(home)
+        if sock is not None:
+            try:
+                send_msg(sock, {"type": "KILL_RANK", "rank": r})
+            except OSError:
+                pass
+
     def _recover_cr(self, ev, failure: FailureEvent):
         t0 = time.monotonic()
         # teardown: SIGKILL every daemon (daemons take children with them
@@ -678,11 +966,10 @@ class Root:
     # --------------------------------------------------------------- run
 
     def _maybe_broadcast_table(self):
+        if self._await_shadows:
+            return      # replica deploy: shadows still coming up
         if len(self.rank_table) == len(self.world_ranks):
-            self._broadcast({"type": "RANK_TABLE", "epoch": self.epoch,
-                             "world": sorted(self.world_ranks),
-                             "table": {str(k): list(v) for k, v in
-                                       self.rank_table.items()}})
+            self._broadcast(self._table_msg())
             # daemon ring membership for hung-daemon observation: every
             # live daemon (spares included) observes its ring successor
             self._broadcast({"type": "DAEMON_TABLE", "epoch": self.epoch,
@@ -710,10 +997,18 @@ class Root:
         return ev.get("t_recover_start") if ev else None
 
     def run(self) -> dict:
+        if self.args.mode == "replica":
+            self._spawn_standby()
         self.deploy()
+        if self.args.mode == "replica":
+            self._deploy_shadows()
         t_start = time.monotonic()
         self._first_barrier_after_recovery = None
         self._pending_respawn = set()
+        self._serve()
+        return self._finish(t_start)
+
+    def _serve(self):
         # with the stall watchdog armed the event wait ticks so silent
         # ranks are noticed; either way 120 s without any event at all is
         # a dead cluster
@@ -741,27 +1036,61 @@ class Root:
             if t == "REGISTER_DAEMON":
                 # post-deployment registration = REJOIN of a repaired
                 # node (the initial deployment consumes its
-                # registrations inside deploy())
+                # registrations inside deploy()) — or a daemon re-homing
+                # to this standby after the primary root died: ask its
+                # workers to re-send any in-flight sync message the dead
+                # root swallowed
                 node = msg["node"]
-                if self.elastic is not None and node in self._rejoining:
+                if self._standby_active and msg.get("rehome"):
+                    sock = self.daemon_socks.get(node)
+                    if sock is not None:
+                        try:
+                            send_msg(sock, {"type": "RESYNC"})
+                        except OSError:
+                            pass
+                    for e in reversed(self.report["events"]):
+                        if e.get("standby_takeover"):
+                            # takeover latency: primary loss -> first
+                            # daemon re-homed to this standby
+                            e.setdefault("takeover_s", time.monotonic()
+                                         - e["detect_at_s"])
+                            break
+                elif self.elastic is not None and node in self._rejoining:
                     self._rejoining.discard(node)
                     self._handle_rejoin(node)
             elif t == "REGISTER_WORKER":
-                self.rank_table[msg["rank"]] = ("127.0.0.1",
-                                                msg["peer_port"])
-                self._rank_pids[msg["rank"]] = msg.get("pid")
-                self._pending_respawn.discard(msg["rank"])
-                self._maybe_broadcast_table()
+                if msg.get("shadow"):
+                    # a warm shadow came up: record its peer listener and
+                    # rebroadcast the table so its primary starts
+                    # streaming frames to it
+                    self.shadow_table[msg["rank"]] = ("127.0.0.1",
+                                                      msg["peer_port"])
+                    self._shadow_pids[msg["rank"]] = msg.get("pid")
+                    self._shadow_parent[msg["rank"]] = msg["node"]
+                    self._await_shadows.discard(msg["rank"])
+                    self._maybe_broadcast_table()
+                else:
+                    self.rank_table[msg["rank"]] = ("127.0.0.1",
+                                                    msg["peer_port"])
+                    self._rank_pids[msg["rank"]] = msg.get("pid")
+                    self._pending_respawn.discard(msg["rank"])
+                    self._maybe_broadcast_table()
             elif t == "CHILD_DEAD":
                 # a death report for a pid that is not the rank's current
                 # incarnation is stale (old pid of a re-registered rank,
                 # or a straggler from a torn-down deployment) — drop it
                 pid, known = msg.get("pid"), self._rank_pids.get(msg["rank"])
                 stale = None not in (pid, known) and pid != known
-                if self.shutting_down or stale:
+                if pid is not None \
+                        and pid == self._shadow_pids.get(msg["rank"]):
+                    # an un-promoted shadow died, not the rank itself
+                    self._handle_shadow_death(msg["rank"])
+                elif self.shutting_down or stale:
                     pass
                 elif not self.recovering:
-                    if self._join_open and known is not None \
+                    if msg["rank"] in self._promote_inflight:
+                        self._promote_window_death(msg["rank"])
+                    elif self._join_open and known is not None \
                             and msg["rank"] in self.world_ranks:
                         # died inside the open rejoin window (after the
                         # table rebroadcast, before the consensus
@@ -794,6 +1123,8 @@ class Root:
                     ev["respawn_done_s"] = time.monotonic() - t0
             elif t == "JOIN":
                 self._join_arrive(msg)
+            elif t == "PROMOTE_NACK":
+                self._promote_nack(msg)
             elif t == "SUSPECT":
                 self._handle_suspect(msg)
             elif t == "SUSPECT_NODE":
@@ -802,6 +1133,9 @@ class Root:
                 self.done.add(msg["rank"])
                 self.report.setdefault("checksums", {})[str(msg["rank"])] \
                     = msg["checksum"]
+            self._sync_standby()
+
+    def _finish(self, t_start: float) -> dict:
         self.shutting_down = True
         self.report["total_s"] = time.monotonic() - t_start
         self._broadcast({"type": "SHUTDOWN"})
@@ -818,9 +1152,81 @@ class Root:
                 except subprocess.TimeoutExpired:
                     p.kill()
         if self.args.report:
-            with open(self.args.report, "w") as f:
+            # tmp + atomic rename: the scenario engine (and any external
+            # watcher) takes the file's existence as completion — a
+            # standby takeover hands off through exactly this commit
+            tmp = self.args.report + ".tmp"
+            with open(tmp, "w") as f:
                 json.dump(self.report, f, indent=2)
+            os.replace(tmp, self.args.report)
+        if self.standby_sock is not None:
+            try:
+                send_msg(self.standby_sock, {"type": "SHUTDOWN_STANDBY"})
+            except OSError:
+                pass
+        if self.standby_proc is not None:
+            try:
+                self.standby_proc.wait(timeout=10)
+            except subprocess.TimeoutExpired:
+                self.standby_proc.kill()
         return self.report
+
+    # ----------------------------------------------------- standby root
+
+    def _apply_sync(self, msg: dict):
+        self.epoch = msg["epoch"]
+        self.world_ranks = set(msg["world"])
+        self.rank_table = {int(k): tuple(v)
+                           for k, v in msg["table"].items()}
+        self._rank_pids = {int(k): v for k, v in msg["pids"].items()}
+        self.shadow_table = {int(k): tuple(v)
+                             for k, v in msg["shadows"].items()}
+        self._shadow_parent = {int(k): v
+                               for k, v in msg["shadow_parent"].items()}
+        self._shadow_pids = {int(k): v
+                             for k, v in msg["shadow_pids"].items()}
+        self.view.children = {d: set(rs)
+                              for d, rs in msg["children"].items()}
+        self.view.epoch = msg["view_epoch"]
+        self.done = set(msg["done"])
+        self.report = msg["report"]
+
+    def run_standby(self) -> dict:
+        """Warm-standby protocol: register with the primary, mirror its
+        table/membership/report stream, and on primary loss take over —
+        daemons re-home here, in-flight sync messages are re-requested
+        (RESYNC), and this process finishes the job and commits the
+        report the dead primary never could. A clean SHUTDOWN_STANDBY
+        from the primary exits quietly instead. Returns {} when no
+        takeover happened."""
+        s = connect("127.0.0.1", self.args.primary_port)
+        send_msg(s, {"type": "STANDBY_REGISTER", "port": self.port,
+                     "pid": os.getpid()})
+        synced = False
+        while True:
+            try:
+                msg = recv_msg(s)
+            except OSError:
+                msg = None
+            if msg is None:
+                break                        # primary died mid-job
+            if msg["type"] == "SHUTDOWN_STANDBY":
+                return {}
+            if msg["type"] == "SYNC":
+                self._apply_sync(msg)
+                synced = True
+        if not synced or self.shutting_down:
+            return {}
+        # --- takeover
+        self._standby_active = True
+        t0 = time.monotonic()
+        self.report.setdefault("events", []).append(
+            {"failure": "root", "kind": "root", "detected_by": "standby",
+             "standby_takeover": True, "detect_at_s": t0})
+        self._first_barrier_after_recovery = None
+        self._pending_respawn = set()
+        self._serve()
+        return self._finish(t0)
 
 
 def main(argv=None):
@@ -834,8 +1240,7 @@ def main(argv=None):
     ap.add_argument("--fail-rank", type=int, default=-1)
     ap.add_argument("--fail-kind", default="process",
                     choices=["process", "node"])
-    ap.add_argument("--mode", default="reinit",
-                    choices=["reinit", "cr", "shrink"])
+    ap.add_argument("--mode", default="reinit", choices=list(MODES))
     ap.add_argument("--min-data-parallel", type=int, default=1,
                     help="elastic world floor, in whole node groups: "
                          "shrink refuses to drop below "
@@ -855,8 +1260,19 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--report", default="")
     ap.add_argument("--pythonpath", default=os.environ.get("PYTHONPATH", ""))
+    ap.add_argument("--as-standby", action="store_true",
+                    help="run as the warm-standby root: mirror the "
+                         "primary's tables and take over on its loss")
+    ap.add_argument("--primary-port", type=int, default=0,
+                    help="primary root's listener (standby mode only)")
     args = ap.parse_args(argv)
     os.makedirs(args.ckpt_dir, exist_ok=True)
+    if args.as_standby:
+        rep = Root(args).run_standby()
+        if not rep:
+            return 0            # clean primary finish: nothing to do
+        print(json.dumps(rep, indent=2))
+        return 0
     rep = Root(args).run()
     ok = len(set(rep.get("checksums", {}).values())) >= 1
     print(json.dumps(rep, indent=2))

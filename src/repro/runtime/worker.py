@@ -10,6 +10,12 @@ Fault injection (paper §4): at the pre-drawn (step, rank), the victim
 SIGKILLs itself (process failure) or asks its daemon to take the whole node
 down (node failure). Survivors receive SIGREINIT (SIGUSR1), roll back to
 the reinit point, and rejoin the epoch barrier with re-spawned ranks.
+
+Replica mode adds a shadow role (--shadow): the process registers,
+receives the primary's per-step checkpoint stream on its peer listener,
+and parks outside the BSP loop until the root PROMOTEs it — it then
+composes the warm frame for the resume step and enters the loop in the
+dead primary's place, with zero rollback and zero respawn.
 """
 from __future__ import annotations
 
@@ -152,9 +158,28 @@ class Worker:
         # armed by a hang injection: the rank stops answering everything
         # (peer fabric included) while its channels stay open
         self._silent = threading.Event()
-        hooks.install(WorkerInjector(self, self._injection_plan(args)))
+        self.injector = WorkerInjector(self, self._injection_plan(args))
+        hooks.install(self.injector)
         self.initial_state = (RankState.RESTARTED if args.restarted
                               else RankState.NEW)
+
+        # replica mode: shadow role + the primary side of the stream.
+        # shadow_table maps rank -> its shadow's peer address (from the
+        # root's RANK_TABLE broadcasts); a primary pushes every step's
+        # frame there. _pending_sync is the in-flight root-bound message
+        # (BARRIER/JOIN/DONE) replayed on RESYNC after a standby
+        # takeover — the primary root may have died with it buffered but
+        # unprocessed.
+        self.is_shadow = getattr(args, "shadow", False)
+        self.shadow_table: dict[int, tuple[str, int]] = {}
+        self._shadow_addr_seen: Optional[tuple] = None
+        self._pending_sync: Optional[dict] = None
+        self._promote_ev = threading.Event()
+        self._promote_resume = 0
+        self._promoted = False
+        self._shadow_plan = (
+            Scenario.load(args.scenario).shadow_faults(self.rank)
+            if (args.scenario and self.is_shadow) else [])
 
         # retention window spills to local disk past the hot step — the
         # paper's memory/file dichotomy as an LRU tier, exercised by the
@@ -197,7 +222,7 @@ class Worker:
         self._send_daemon({
             "type": "REGISTER_WORKER", "rank": self.rank,
             "peer_port": self.peer_port, "pid": os.getpid(),
-            "restarted": args.restarted})
+            "restarted": args.restarted, "shadow": self.is_shadow})
         threading.Thread(target=self._control_loop, daemon=True).start()
 
         # neighbour-heartbeat ring (ULFM/FTHP-MPI-style): observe the ring
@@ -270,6 +295,8 @@ class Worker:
                     self.store.hold(msg["origin"], msg["step"],
                                     msg["_payload"])
                     send_msg(conn, {"type": "ACK"})
+                    if self._shadow_plan and msg["origin"] == self.rank:
+                        self._shadow_stream_fault(msg["step"])
                 elif msg["type"] == "GET_CKPT":
                     held = self.store.held_map(msg["origin"])
                     # all retained frames concatenated on the raw payload
@@ -283,6 +310,38 @@ class Worker:
                              payload=b"".join(blobs))
         finally:
             conn.close()
+
+    def _shadow_stream_fault(self, step: int):
+        """Shadow-target faults fire off the replication stream: once the
+        primary's push reaches the fault's step, the warm standby itself
+        dies — exercising the root's shadow-loss bookkeeping (drop the
+        entry, fall back to reinit if the primary dies later)."""
+        for idx, f in self._shadow_plan:
+            if f.step is not None and step < f.step:
+                continue
+            if self.injector._claim(idx, "shadow.stream", step):
+                os.kill(os.getpid(), signal.SIGKILL)
+
+    def _push_shadow(self, step: int, payload: bytes, x: np.ndarray):
+        """Primary side of the replication stream: mirror every step's
+        frame to this rank's shadow (when one exists). The first frame a
+        newly-seen shadow receives must be self-contained — the shadow
+        joined mid-chain, so a delta against a frame it never got would
+        leave its whole stream uncomposable."""
+        addr = self.shadow_table.get(self.rank)
+        if addr is None:
+            return
+        if addr != self._shadow_addr_seen:
+            payload = serde.to_bytes({"x": x}, extra={"step": step})
+        try:
+            s = connect(*addr, timeout=5)
+            send_msg(s, {"type": "PUSH_CKPT", "origin": self.rank,
+                         "step": step}, payload=payload)
+            recv_msg(s)
+            s.close()
+            self._shadow_addr_seen = addr
+        except OSError:
+            pass      # shadow died; the root drops it from the table
 
     def _push_remote(self, buddy_rank: int, step: int, payload: bytes):
         addr = self.rank_table.get(buddy_rank)
@@ -373,6 +432,9 @@ class Worker:
             if t == "RANK_TABLE":
                 self.rank_table = {int(k): tuple(v)
                                    for k, v in msg["table"].items()}
+                self.shadow_table = {int(k): tuple(v)
+                                     for k, v in
+                                     msg.get("shadows", {}).items()}
                 with self.barrier_cv:     # epoch bump unblocks stale waits
                     # the table carries the authoritative membership: a
                     # rank spawned into a shrunk/grown world learns its
@@ -431,6 +493,38 @@ class Worker:
                         self._pinned.clear()
                     self.barrier_cv.notify_all()
                 self.store.reform_ring(self.world_ranks)
+            elif t == "PROMOTE":
+                # replica failover: the root names this shadow the new
+                # primary for its rank. Accept only if the warm stream
+                # actually composes at the resume step; otherwise NACK so
+                # the root can fall back (kill us + reinit respawn).
+                resume = int(msg["resume"])
+                have = serde.composable_steps(
+                    self.store.held_map(self.rank))
+                if resume in have:
+                    self._promote_resume = resume
+                    self._promote_ev.set()
+                else:
+                    try:
+                        self._send_daemon({
+                            "type": "PROMOTE_NACK", "rank": self.rank,
+                            "epoch": msg.get("epoch", self.epoch),
+                            "have": sorted(have)})
+                    except OSError:
+                        pass
+            elif t == "RESYNC":
+                # standby takeover: the dead primary root may have
+                # swallowed our in-flight BARRIER/JOIN/DONE (the send
+                # "succeeded" into a socket buffer nobody drained) —
+                # replay it; root-side arrival recording is idempotent
+                with self.barrier_cv:
+                    pending = (dict(self._pending_sync)
+                               if self._pending_sync else None)
+                if pending is not None:
+                    try:
+                        self._send_daemon(pending)
+                    except OSError:
+                        pass
             elif t == "SHUTDOWN":
                 os._exit(0)
 
@@ -468,10 +562,16 @@ class Worker:
     def _allreduce(self, step: int, value: float) -> float:
         """BSP collective: tree sum through daemon → root and back."""
         epoch = self.epoch
-        self._send_daemon({
-            "type": "BARRIER", "rank": self.rank, "epoch": epoch,
-            "step": step, "value": value})
-        return self._wait_release((epoch, step), epoch)
+        msg = {"type": "BARRIER", "rank": self.rank, "epoch": epoch,
+               "step": step, "value": value}
+        with self.barrier_cv:
+            self._pending_sync = msg
+        self._send_daemon(msg)
+        try:
+            return self._wait_release((epoch, step), epoch)
+        finally:
+            with self.barrier_cv:
+                self._pending_sync = None
 
     def _join(self, avail: int) -> int:
         """ORTE-style rejoin barrier (the MPI_Init-equivalent barrier of
@@ -479,10 +579,16 @@ class Worker:
         the newest checkpoint it can restore, the root answers with the
         minimum — the latest *consistent* global checkpoint."""
         epoch = self.epoch
-        self._send_daemon({
-            "type": "JOIN", "rank": self.rank, "epoch": epoch,
-            "avail": avail})
-        return int(self._wait_release(("join", epoch), epoch))
+        msg = {"type": "JOIN", "rank": self.rank, "epoch": epoch,
+               "avail": avail}
+        with self.barrier_cv:
+            self._pending_sync = msg
+        self._send_daemon(msg)
+        try:
+            return int(self._wait_release(("join", epoch), epoch))
+        finally:
+            with self.barrier_cv:
+                self._pending_sync = None
 
     # --------------------------------------------------------------- app
 
@@ -599,6 +705,12 @@ class Worker:
         # lands exactly here — keep it composable and retention-proof
         if self.member.shrunk and resume > 0:
             self._pin_anchor(resume, x)
+        return self._loop(start, x)
+
+    def _loop(self, start: int, x: np.ndarray) -> None:
+        """The BSP step loop proper. Reached via `body` (normal join /
+        rollback path) or directly by a promoted shadow, which skips the
+        consensus entirely — its warm frame IS the resume state."""
         w = np.eye(self.dim) * 0.999        # fixed "model"
 
         for step in range(start, self.steps):
@@ -626,15 +738,46 @@ class Worker:
             hooks.fire("worker.ckpt.pre_push", step=step + 1)
             self.store.save(step + 1, payload,
                             on_disk=self._file_path(step + 1))
-        self._send_daemon({
-            "type": "DONE", "rank": self.rank,
-            "checksum": float(np.sum(x))})
+            self._push_shadow(step + 1, payload, x)
+        msg = {"type": "DONE", "rank": self.rank,
+               "checksum": float(np.sum(x))}
+        with self.barrier_cv:
+            self._pending_sync = msg     # replayed if a standby takes over
+        self._send_daemon(msg)
         # park until SHUTDOWN (control loop exits the process) — an event
         # wait, not a poll loop
         threading.Event().wait()
 
+    def _shadow_body(self, state: RankState) -> None:
+        """Entry for a promoted shadow. The first pass (promotion itself)
+        composes the warm frame and enters the loop at the resume step —
+        no join, no rollback. If a *later* recovery SIGREINITs us, we are
+        an ordinary survivor by then and take the normal body path."""
+        if self._promoted:
+            return self.body(state)
+        # cascade window: the promoted-but-not-yet-running shadow is the
+        # same program point a respawned rank hits when it pulls buddy
+        # state — a fault planted there kills the new primary mid-promote
+        hooks.fire("worker.recovery.pulled")
+        resume = self._promote_resume
+        frames = self.store.held_map(self.rank)
+        hooks.fire("worker.recovery.compose", step=resume)
+        _, x = self._compose_state(frames, resume)
+        self._promoted = True
+        return self._loop(resume, x)
+
     def run(self):
         install_sigreinit()
+        if self.is_shadow:
+            # warm standby: the peer listener is absorbing the primary's
+            # stream; stay out of the BSP world until the root PROMOTEs
+            # us. SIGREINITs from unrelated recoveries only arm the
+            # deferred flag here (the wait is not an interruptible
+            # region) — cleared before we take over.
+            self._promote_ev.wait()
+            ROLLBACK.clear()
+            reinit_main(self._shadow_body, initial_state=RankState.NEW)
+            return
         try:
             reinit_main(self.body, initial_state=self.initial_state)
         except SystemExit:
@@ -656,6 +799,7 @@ def main(argv=None):
     ap.add_argument("--hb-timeout", type=float, default=0.0)
     ap.add_argument("--ckpt-dir", required=True)
     ap.add_argument("--restarted", action="store_true")
+    ap.add_argument("--shadow", action="store_true")
     ap.add_argument("--epoch", type=int, default=0)
     Worker(ap.parse_args(argv)).run()
 

@@ -236,6 +236,53 @@ CATALOG: tuple[Scenario, ...] = (
                 Fault("node", 4, 4)),
         strategies=("shrink",),
         expect_bit_identical=False),
+    # --------------------------------------- replica (zero-rollback) cells
+    Scenario(
+        name="replica-promote",
+        description="Zero-rollback failover: rank 1 dies behind the FENCE "
+                    "at step 3; its warm shadow (fed the buddy delta "
+                    "stream every step) is promoted in place, completes "
+                    "the stalled barrier, and the run resumes AT step 3 "
+                    "with no rollback, no respawn and no recomputed "
+                    "steps — bit-identical to fault-free.",
+        topology=T22, faults=(Fault("rank", 1, 3),),
+        strategies=("replica", "reinit"), tags=("fast",)),
+    Scenario(
+        name="replica-shadow-loss",
+        description="The shadow dies, not the rank: the application never "
+                    "notices (no consensus entry), rank 1 silently loses "
+                    "its zero-rollback cover, and its later failure "
+                    "falls back to global-restart recovery.",
+        topology=T22,
+        faults=(Fault("shadow", 1, 2), Fault("rank", 1, 4)),
+        strategies=("replica",), tags=("fast",)),
+    Scenario(
+        name="replica-promote-cascade",
+        description="Failure during the promotion window: the shadow "
+                    "dies right as it is being promoted — the root must "
+                    "merge the loss into the in-flight recovery (fall "
+                    "back to respawn), never deadlock or double-promote.",
+        topology=T22,
+        faults=(Fault("rank", 1, 3),
+                Fault("rank", 1, None, point="worker.recovery.pulled")),
+        strategies=("replica",), tags=("fast",)),
+    Scenario(
+        name="replica-root-loss-standby",
+        description="Root loss under replica: the warm standby (mirroring "
+                    "the rank/daemon/membership tables over the "
+                    "replication channel) takes over, daemons re-home to "
+                    "it, and the job finishes with NO external relaunch "
+                    "— the last single point of failure removed.",
+        topology=T22, faults=(Fault("root", step=3),),
+        strategies=("replica",), tags=()),
+    Scenario(
+        name="replica-3node-cascade",
+        description="3-node replica matrix: a promote at step 2, then a "
+                    "second rank loss at step 4 on another node — two "
+                    "independent zero-rollback failovers in one run.",
+        topology=T32,
+        faults=(Fault("rank", 1, 2), Fault("rank", 4, 4)),
+        strategies=("replica", "reinit"), tags=("slow3",)),
     # -------------------------------------------------------- root loss
     Scenario(
         name="root-restart",

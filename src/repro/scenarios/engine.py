@@ -31,7 +31,10 @@ SRC = os.path.dirname(os.path.dirname(os.path.dirname(
 #: cost model (the paper measures its prototype; we charge its collectives
 #: and heartbeat in the sim). "shrink" is elastic recovery: re-host onto
 #: spares while the pool lasts, contract the world once it is empty.
-REAL_MODES = {"reinit": "reinit", "cr": "cr", "shrink": "shrink"}
+#: "replica" is zero-rollback failover: warm shadows promote in place and
+#: a warm-standby root absorbs HNP loss without an external relaunch.
+REAL_MODES = {"reinit": "reinit", "cr": "cr", "shrink": "shrink",
+              "replica": "replica"}
 
 
 def real_strategies(scenario: Scenario) -> list[str]:
@@ -133,11 +136,22 @@ def run_real(scenario: Scenario, strategy: str, workdir: str, *,
     cmd = _root_cmd(scenario_path, scenario, mode, ckpt_dir, report_path)
     env = dict(os.environ, PYTHONPATH=SRC)
 
+    if os.path.exists(report_path):
+        os.remove(report_path)
+
     relaunches = 0
+    standby_takeover = False
     while True:
         proc = subprocess.run(cmd, env=env, capture_output=True,
                               text=True, timeout=timeout)
         if proc.returncode == ROOT_INJECTED_EXIT:
+            if mode == "replica":
+                # no external relaunch: the warm standby already took
+                # over — wait for it to finish the job and write the
+                # report the dead primary never could
+                _await_report(report_path, timeout, scenario, proc)
+                standby_takeover = True
+                break
             relaunches += 1
             if relaunches > max_relaunches:
                 raise RuntimeError(
@@ -162,7 +176,23 @@ def run_real(scenario: Scenario, strategy: str, workdir: str, *,
         checksums=report.get("checksums", {}),
         total_s=report.get("total_s", 0.0),
         detail={"events": events, "relaunches": relaunches,
-                "report": report})
+                "standby_takeover": standby_takeover, "report": report})
+
+
+def _await_report(report_path: str, timeout: float, scenario: Scenario,
+                  proc) -> None:
+    """Block until the standby root commits the final report (it writes
+    tmp + atomic rename, so existence means complete)."""
+    import time
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if os.path.exists(report_path):
+            return
+        time.sleep(0.1)
+    raise RuntimeError(
+        f"{scenario.name}: primary root died but the standby never "
+        f"finished the job (no report after {timeout}s)\n"
+        f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
 
 
 def describe(scenario: Scenario) -> str:

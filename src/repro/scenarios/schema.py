@@ -20,9 +20,10 @@ A `Scenario` is a pure data description of one fault-injected execution:
 The same Scenario object drives both executors (repro.scenarios.engine):
 the discrete-event simulator charges each phase its calibrated cost over
 the real Algorithm-1/2 protocol, and the real-process runtime replays the
-faults on live POSIX processes. The schema is stdlib-only on purpose — it
-is imported by repro.core.failure and by the worker subprocesses, neither
-of which should pull in jax.
+faults on live POSIX processes. The schema stays jax-free on purpose — it
+is imported by repro.core.failure and by the worker subprocesses; its only
+non-stdlib import is core.recovery's strategy registry (itself jax-free),
+so the strategy keys have exactly one source of truth.
 """
 from __future__ import annotations
 
@@ -30,7 +31,10 @@ import dataclasses
 import json
 from typing import Optional
 
-TARGETS = ("rank", "node", "root")
+# "shadow" targets the warm replica of `rank` (replica strategy): the
+# shadow process dies, the rank silently loses its zero-rollback cover,
+# and the next failure of that rank falls back to global-restart.
+TARGETS = ("rank", "node", "root", "shadow")
 HOWS = ("sigkill", "channel_break", "hang")
 
 # Named interruption points. "step" is the only fenced point (the victim
@@ -59,13 +63,17 @@ CASCADE_POINTS = tuple(p for p in POINTS if p.startswith("worker.recovery."))
 ROOT_INJECTED_EXIT = 42
 
 #: strategy keys a scenario may request; "ulfm" is sim-only (the measured
-#: runtime implements reinit, cr and shrink — see engine.real_strategies).
-#: "shrink" is elastic recovery: spare-pool re-hosting while spares last,
-#: world contraction (no respawn) once the pool is exhausted.
-STRATEGY_KEYS = ("reinit", "cr", "ulfm", "shrink")
-STRATEGY_ALIASES = {"reinit++": "reinit", "reinitpp": "reinit",
-                    "restart": "cr", "ulfm-shrink": "ulfm",
-                    "elastic": "shrink"}
+#: runtime implements reinit, cr, shrink and replica — see
+#: engine.real_strategies). "shrink" is elastic recovery: spare-pool
+#: re-hosting while spares last, world contraction once the pool is
+#: exhausted. "replica" is zero-rollback failover: warm shadows promote
+#: in place, a warm standby absorbs root loss.
+#: The key set and alias table live in core.recovery — the strategy
+#: registry is the single source of truth the drift-guard test pins.
+from repro.core.recovery import STRATEGIES as _STRATEGIES
+from repro.core.recovery import STRATEGY_ALIASES
+
+STRATEGY_KEYS = tuple(_STRATEGIES)
 
 
 def normalize_strategy(name: str) -> str:
@@ -121,6 +129,10 @@ class Fault:
                              f"{topo.world}")
         if self.how == "hang" and self.target == "root":
             raise ValueError("hang faults only defined for rank/node")
+        if self.target == "shadow" and (self.how != "sigkill"
+                                        or self.point != "step"):
+            raise ValueError("shadow faults support only sigkill @step "
+                             "(the shadow runs no BSP loop to interrupt)")
         if self.point in CASCADE_POINTS:
             if position == 0:
                 raise ValueError(f"{self.point} is a cascade point: it "
@@ -226,6 +238,10 @@ class Scenario:
                              "daemon-level ring observation detects it")
         if not self.strategies:
             raise ValueError("scenario needs at least one strategy")
+        if any(f.target == "shadow" for f in self.faults) \
+                and "replica" not in self.strategies:
+            raise ValueError("shadow faults only exist under the replica "
+                             "strategy (no other strategy runs shadows)")
 
     # --------------------------------------------------------- queries
 
@@ -239,6 +255,13 @@ class Scenario:
     def root_faults(self) -> list[tuple[int, Fault]]:
         return [(i, f) for i, f in enumerate(self.faults)
                 if f.target == "root"]
+
+    def shadow_faults(self, rank: int) -> list[tuple[int, Fault]]:
+        """(index, fault) pairs killing the warm shadow of `rank` —
+        injected by the shadow process itself when the delta stream
+        reaches the trigger step."""
+        return [(i, f) for i, f in enumerate(self.faults)
+                if f.target == "shadow" and f.rank == rank]
 
     @property
     def is_cascading(self) -> bool:
@@ -301,7 +324,7 @@ class Scenario:
 
 
 def _fault_resume(f: Fault) -> Optional[int]:
-    if f.target == "root":
+    if f.target in ("root", "shadow"):
         return None
     if f.point == "step":
         return f.step
@@ -355,7 +378,7 @@ def elastic_transitions(scenario: Scenario) -> list:
     timeline = sorted(
         [((f.step if f.step is not None else -1), 0, i, "fault", f)
          for i, f in enumerate(scenario.faults)
-         if f.point not in CASCADE_POINTS]
+         if f.point not in CASCADE_POINTS and f.target != "shadow"]
         + [(r.step, 1, i, "repair", r)
            for i, r in enumerate(scenario.repairs)],
         key=lambda e: e[:3])
@@ -459,8 +482,13 @@ def expected_resume_steps(scenario: Scenario,
             and scenario.repairs:
         return [cut for kind, _, cut in elastic_transitions(scenario)
                 if kind not in ("spare", "noop")]
+    # shadow faults never interrupt the application: no consensus entry.
+    # Replica promotions resume exactly at the step-point cut, the same
+    # value the fence oracle already yields — so the default table below
+    # is shared by every strategy (a replica fallback on a ckpt-phase
+    # fault degrades to Reinit++, whose cut it also shares).
     return [_fault_resume(f) for f in scenario.faults
-            if f.point not in CASCADE_POINTS]
+            if f.point not in CASCADE_POINTS and f.target != "shadow"]
 
 
 def expected_resume_step(scenario: Scenario) -> Optional[int]:

@@ -129,9 +129,23 @@ class ServeEngine:
     # ---------------------------------------------------- fault tolerance
 
     def snapshot(self) -> dict:
+        """Capture the decode state without stalling the decode stream:
+        each leaf is copied on device (so the live buffers stay donatable)
+        and its D2H transfer is *started*, not awaited — the drain
+        overlaps subsequent engine steps, and materialization happens
+        only if/when the snapshot is actually restored."""
+        def drain(a):
+            try:
+                c = jnp.copy(a)
+                c.copy_to_host_async()
+                return c
+            except (AttributeError, RuntimeError):
+                # non-array leaf or a backend without async transfers:
+                # fall back to the synchronous pull
+                return np.asarray(a)
+
         return {
-            "state": jax.tree.map(lambda a: np.asarray(jax.device_get(a)),
-                                  self.state),
+            "state": jax.tree.map(drain, self.state),
             "pos": self.pos.copy(),
             "slots": [(s.rid, list(s.prompt), s.max_new_tokens, list(s.out))
                       if s else None for s in self.slots],

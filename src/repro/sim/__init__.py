@@ -1,3 +1,4 @@
 from .costs import ClusterCosts, AppProfile, APPS
 from .cluster import (simulate_run, SimResult, recovery_time, recovery_e2e,
-                      simulate_scenario, ScenarioSimResult)
+                      replica_break_even, simulate_scenario,
+                      ScenarioSimResult)

@@ -51,6 +51,14 @@ class ClusterCosts:
     ulfm_rounds: int = 4                    # revoke, shrink, agree, merge
     heartbeat_detect_s: float = 0.05        # observation period / 2
 
+    # --- replica failover: promotion swaps a warm shadow in for the
+    # failed rank — a PROMOTE broadcast, the shadow composing its
+    # already-streamed frames from local memory, and the rejoin barrier.
+    # No spawn, no file read, no recomputed steps.
+    promote_compose_s: float = 0.02     # shadow composes warm delta frames
+    standby_sync_s: float = 0.01        # standby root: final table catch-up
+    rehome_s: float = 2.0e-3            # one daemon reconnects to standby
+
     # --- elastic shrinking recovery: no respawn anywhere — a SHRINK
     # broadcast, SIGREINIT to survivors, then the batch re-balance
     # (re-partitioning the step's work over the contracted data axis:
@@ -114,6 +122,29 @@ class ClusterCosts:
         waves = math.ceil(n_added / max(self.spawn_parallelism, 1))
         return bcast + self.signal_s * max(n_ranks - n_added, 0) \
             + waves * self.spawn_proc_s + self.node_rehost_s \
+            + self.tree_barrier_s(n_ranks, ranks_per_node)
+
+    def promote_s(self, n_ranks: int, ranks_per_node: int,
+                  n_promoted: int = 1) -> float:
+        """Zero-rollback failover: PROMOTE broadcast over the root->daemon
+        tree, the promoted shadows composing their streamed frames from
+        local memory (parallel across shadows), and the rejoin barrier
+        that re-forms the ring. Every other recovery's dominant terms —
+        spawn, file read, rolled-back recompute — are absent, which is
+        the strategy's entire point."""
+        n_nodes = max(1, n_ranks // max(ranks_per_node, 1))
+        bcast = self.msg_latency_s * (1 + math.ceil(
+            math.log2(max(n_nodes, 2))))
+        return bcast + self.promote_compose_s \
+            + self.tree_barrier_s(n_ranks, ranks_per_node)
+
+    def standby_takeover_s(self, n_ranks: int, ranks_per_node: int) -> float:
+        """Root loss under replica: daemons notice the dead channel,
+        re-home to the warm standby (parallel reconnects, charged once),
+        the standby reconciles its mirrored tables, and the cluster
+        resumes — no external relaunch, no worker ever restarts."""
+        return self.channel_detect_s + self.rehome_s \
+            + self.standby_sync_s \
             + self.tree_barrier_s(n_ranks, ranks_per_node)
 
     def ulfm_recovery_collectives_s(self, n_ranks: int) -> float:

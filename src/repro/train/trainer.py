@@ -106,6 +106,11 @@ class Trainer:
                                           delta_every=tc.ckpt_delta_every)
         # buddy memory checkpoint: (step, state_copy, buddy_copy)
         self.mem_ckpt: Optional[tuple[int, Any, Any]] = None
+        # replica strategy: the victim's warm shadow — a device copy of
+        # the state mirrored after *every* step (the replication stream),
+        # hosted off-node by construction, so recovery is promote-and-
+        # continue with zero rollback
+        self.shadow_ckpt: Optional[tuple[int, Any]] = None
         self.state: Optional[dict] = None
         self.logs: list[StepLog] = []
         self.reports: list[RecoveryReport] = []
@@ -185,7 +190,10 @@ class Trainer:
         failure = self._injected_at("worker.ckpt.mid_write", step)
         if failure is not None:
             # dies with the shard bytes un-renamed: nothing durable at
-            # `step` anywhere — recovery resumes from step-1
+            # `step` anywhere — recovery resumes from step-1. Unfenced
+            # checkpoint-phase deaths have no stalled kill barrier to
+            # promote against, so replica falls back (shadow goes cold)
+            self.shadow_ckpt = None
             self._handle_failure(failure)
             raise RollbackSignal(self.view.epoch)
         state = self.state
@@ -199,7 +207,9 @@ class Trainer:
         if failure is not None:
             # ReStore's mid-replication failure: the file committed but
             # the buddy copy was never pushed — the memory tier stays at
-            # step-1 and the merged restore takes the newer file
+            # step-1 and the merged restore takes the newer file. Same
+            # unfenced-death fallback as mid_write for replica.
+            self.shadow_ckpt = None
             self._handle_failure(failure)
             raise RollbackSignal(self.view.epoch)
         self.mem_ckpt = (step, local, buddy)
@@ -225,6 +235,29 @@ class Trainer:
         if self.elastic is not None:
             self.elastic.nonshrink_plan(failure)     # mesh bookkeeping
         rep.detect_s = time.monotonic() - t0
+
+        # --- zero-rollback fast path (replica): the victim's warm shadow
+        # holds the state at the failure step — promotion replaces the
+        # heavyweight strategy recovery, and the run resumes exactly
+        # where it stopped. A node loss does NOT invalidate the shadow
+        # (shadows are hosted off the primary's node by construction); a
+        # cold shadow (nothing mirrored yet, or consumed by the recovery
+        # in flight) falls through to the ordinary path below.
+        if self.strategy.replicates and self.shadow_ckpt is not None:
+            t0 = time.monotonic()
+            step, shadow = self.shadow_ckpt
+            self.shadow_ckpt = None   # consumed: a cascade during this
+                                      # recovery has no second standby
+            if failure.kind is FailureType.NODE:
+                self.mem_ckpt = None  # buddy copies died with the node
+            rep.mpi_recovery_s = time.monotonic() - t0
+            t0 = time.monotonic()
+            self.state = jax.tree.map(lambda a: a + 0, shadow)
+            rep.ckpt_read_s = time.monotonic() - t0
+            rep.rollback_step = step
+            self.reports.append(rep)
+            self._fire_cascades()
+            return rep
 
         # --- MPI recovery: what each strategy actually does
         t0 = time.monotonic()
@@ -423,6 +456,13 @@ class Trainer:
             dt = time.monotonic() - t0
             step = int(self.state["step"])
             self.straggler.observe(step, dt)
+            if self.strategy.replicates:
+                # replication stream: mirror every step's state to the
+                # rank's off-node shadow (Table 2 replica rows) — this,
+                # not the checkpoint cadence, is what makes the later
+                # promote zero-rollback
+                self.shadow_ckpt = (step, jax.tree.map(lambda a: a + 0,
+                                                       self.state))
             self.logs.append(StepLog(step=step, loss=float(loss),
                                      seconds=dt, heartbeat_overhead=hb))
             if self.policy.should_checkpoint(step):

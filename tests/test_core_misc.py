@@ -66,6 +66,39 @@ def test_strategy_lookup_aliases():
     assert get_strategy("Reinit++").name == "Reinit++"
     assert get_strategy("CR").redeploys
     assert get_strategy("ulfm").heartbeat is not None
+    assert get_strategy("replica").replicates
+
+
+def test_strategy_registry_single_source_of_truth():
+    """Drift guard: every strategy-keyed surface — the scenario schema,
+    the Table-2 checkpoint policy, the real-runtime engine and the root
+    CLI — must derive from (or exactly cover) core.recovery.STRATEGIES.
+    Adding a strategy without updating a surface fails here, not in a
+    3-nodes-deep real-runtime run."""
+    from repro.checkpoint.policy import TABLE2
+    from repro.core.recovery import STRATEGIES, STRATEGY_ALIASES
+    from repro.runtime.root import MODES
+    from repro.scenarios import engine, schema
+
+    keys = set(STRATEGIES)
+    assert keys == {"reinit", "cr", "ulfm", "shrink", "replica"}
+    # scenario vocabulary is the registry, verbatim
+    assert set(schema.STRATEGY_KEYS) == keys
+    # Table 2 covers every (failure kind x strategy) cell
+    assert set(TABLE2) == {(f, s) for f in ("process", "node")
+                           for s in keys}
+    # the real runtime executes everything except the sim-only ulfm,
+    # and the engine's mode map agrees with the root's CLI choices
+    assert set(MODES) == keys - {"ulfm"}
+    assert set(engine.REAL_MODES) == set(MODES)
+    # the train launcher accepts every registered strategy
+    from repro.launch.train import STRATEGIES as launch_strategies
+    assert set(launch_strategies) == keys
+    # aliases resolve into the registry, never out of it
+    assert set(STRATEGY_ALIASES.values()) <= keys
+    # every registered strategy resolves through the public lookup
+    for k in keys:
+        assert get_strategy(k).key == k
 
 
 def test_elastic_shrink_transition():

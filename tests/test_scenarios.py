@@ -132,7 +132,7 @@ def test_catalog_breadth():
     targets = {f.target for s in CATALOG for f in s.faults}
     hows = {f.how for s in CATALOG for f in s.faults}
     points = {f.point for s in CATALOG for f in s.faults}
-    assert targets == {"rank", "node", "root"}
+    assert targets == {"rank", "node", "root", "shadow"}
     assert hows == {"sigkill", "channel_break", "hang"}
     assert {"step", "worker.ckpt.mid_write", "worker.ckpt.pre_push",
             "worker.recovery.pulled", "worker.recovery.enter",
@@ -140,7 +140,7 @@ def test_catalog_breadth():
     assert any(s.topology.nodes >= 3 for s in CATALOG)   # 3-node coverage
     assert any(s.is_cascading for s in CATALOG)
     strategies = {st for s in CATALOG for st in s.strategies}
-    assert strategies == {"reinit", "cr", "ulfm", "shrink"}
+    assert strategies == {"reinit", "cr", "ulfm", "shrink", "replica"}
     # elastic coverage: multi-node-loss cells exist, and at least one
     # exhausts the spare pool (more node faults than spares)
     multi = [s for s in CATALOG
@@ -161,6 +161,17 @@ def test_catalog_breadth():
                and "shrink" in s.strategies for s in CATALOG)
     assert any(any(f.how == "hang" and f.target == "node"
                    for f in s.faults) for s in CATALOG)
+    # zero-rollback replica coverage: a straight promote cell, a
+    # shadow-stream loss (degraded cover -> reinit fallback), a
+    # promotion-window death (cascade on the promoted shadow), and a
+    # root loss recovered by the warm standby under the replica mode
+    replica = [s for s in CATALOG if "replica" in s.strategies]
+    assert any(any(f.target == "rank" for f in s.faults) and
+               not s.is_cascading for s in replica)
+    assert any(any(f.target == "shadow" for f in s.faults)
+               for s in replica)
+    assert any(s.is_cascading for s in replica)
+    assert any(any(f.target == "root" for f in s.faults) for s in replica)
     # every scenario is executable on the real runtime or sim-only by
     # explicit choice (ulfm) — none is silently dead
     for s in CATALOG:
@@ -629,6 +640,95 @@ def test_real_shrink_world_contracts(tmp_path):
     assert len(out.checksums) == 4          # survivors only
     assert out.resume_consistent, \
         (out.resume_steps, out.expected_resume)
+
+
+@pytest.mark.scenario_fast
+def test_real_replica_zero_rollback(tmp_path, tmp_path_factory, ff_cache):
+    """The tentpole property, on the live process tree: a fenced rank
+    kill at step N under the replica mode is recovered by PROMOTE — the
+    resume step IS the failure step (no rollback, no recomputed steps),
+    no epoch bump reaches the survivors, and the run finishes
+    bit-identical to fault-free."""
+    sc = BY_NAME["replica-promote"]
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc)
+    out = engine.run_real(sc, "replica", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    assert len(events) == 1
+    ev = events[0]
+    assert ev["promote"] is True
+    assert ev["promoted"] == [sc.faults[0].rank]
+    assert ev["resume_step"] == sc.faults[0].step      # zero rollback
+    assert ev["promote_complete_s"] > 0
+    # promote-and-reform: no respawn happened, so no cascade counter
+    assert not ev.get("cascades")
+    assert out.resume_consistent
+    assert out.checksums == ff
+
+
+@pytest.mark.scenario_fast
+def test_real_replica_promotion_window_merge(tmp_path, tmp_path_factory,
+                                             ff_cache):
+    """A shadow dying inside the promotion window (after PROMOTE, before
+    its barrier arrival completes the stalled cut) must MERGE into the
+    recovery in flight — one consensus entry, a reinit fallback on the
+    SAME event, never a deadlocked barrier or a double promote."""
+    sc = BY_NAME["replica-promote-cascade"]
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc)
+    out = engine.run_real(sc, "replica", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    assert len(events) == 1                            # merged, not a 2nd
+    ev = events[0]
+    assert ev["promote_window_death"] == [sc.faults[0].rank]
+    assert ev["promote"] is False                      # promotion voided
+    assert out.resume_steps == [sc.faults[0].step]
+    assert out.resume_consistent
+    assert out.checksums == ff
+
+
+@pytest.mark.scenario_fast
+def test_real_replica_shadow_loss_falls_back(tmp_path, tmp_path_factory,
+                                             ff_cache):
+    """Losing the shadow first degrades cover: the later primary kill
+    finds no warm shadow and falls back to the reinit path — recorded as
+    a shadow_lost event plus a non-promote recovery at the reinit cut."""
+    sc = BY_NAME["replica-shadow-loss"]
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc)
+    out = engine.run_real(sc, "replica", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    final = events[-1]
+    assert final["promote"] is False          # no warm shadow survived
+    assert final["resume_step"] == sc.faults[1].step
+    if len(events) == 2:
+        # cover loss detected before the primary kill: a shadow_lost
+        # entry (no consensus of its own), then the reinit fallback
+        assert events[0].get("shadow_lost") == sc.faults[0].rank
+        assert events[0].get("resume_step") is None
+    else:
+        # the shadow's SIGCHLD raced the primary's fenced kill: the root
+        # promoted a corpse and the promotion-window merge voided it on
+        # the same event — still one consensus, still no deadlock
+        assert final.get("promote_window_death") == [sc.faults[1].rank]
+    assert out.resume_consistent
+    assert out.checksums == ff
+
+
+@pytest.mark.scenario_fast
+def test_real_replica_root_loss_standby_takeover(tmp_path,
+                                                 tmp_path_factory,
+                                                 ff_cache):
+    """Root (HNP) loss under the replica mode: the warm standby takes
+    over — daemons re-home, in-flight sync messages are resent on
+    RESYNC, the run finishes with the full world reporting, and no
+    external relaunch happens (the engine would have recorded one)."""
+    sc = BY_NAME["replica-root-loss-standby"]
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc)
+    out = engine.run_real(sc, "replica", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    assert any(ev.get("standby_takeover") for ev in events)
+    assert out.detail["relaunches"] == 0
+    assert len(out.checksums) == sc.topology.world
+    assert out.resume_consistent
+    assert out.checksums == ff
 
 
 @pytest.mark.scenario_fast
