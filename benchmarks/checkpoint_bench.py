@@ -83,30 +83,42 @@ def bench_file_io(state=None, *, mb: float = STATE_MB) -> dict:
     return out
 
 
+def _mutate(state: dict, step: int, dirty_frac: float) -> dict:
+    """Dirty a contiguous `dirty_frac` window of each leaf on device (a
+    different window each step, like an optimizer walking its state)."""
+    out = {}
+    for k, v in state.items():
+        n = v.size
+        w = max(1, int(n * dirty_frac))
+        start = (step * w) % max(1, n - w)
+        out[k] = v.at[start:start + w].add(1.0)
+    jax.block_until_ready(out)
+    return out
+
+
 def bench_delta_io(*, mb: float = STATE_MB,
                    dirty_frac: float = DELTA_DIRTY_FRAC) -> dict:
-    """Steady-state delta checkpointing on a `dirty_frac`-dirty state:
-    every save mutates a contiguous `dirty_frac` window of each leaf (a
-    different window each time, like an optimizer walking its state) and
-    writes a tile-range delta against the previous save; reads compose
-    base + deltas and verify the composed digests."""
-    state = {k: np.array(v) for k, v in _state(mb).items()}
+    """Steady-state delta checkpointing on a `dirty_frac`-dirty device
+    state with the dirty-tile gather on: every save writes a tile-range
+    delta against the previous save, and only the gathered dirty tiles
+    (plus 12 B/tile of digest rows) cross device→host; reads compose
+    base + deltas and verify the composed digests. `delta_d2h_frac` is
+    the headline: transferred bytes as a fraction of a full-state drain."""
+    state = _state(mb)
+    jax.block_until_ready(state)
     out = {}
     with tempfile.TemporaryDirectory() as d, \
             FileCheckpointer(d, keep=16, n_shards=N_SHARDS,
-                             delta_every=16) as ck:
+                             delta_every=16, gather="on") as ck:
         ck.save(1, state)
         full_bytes = ck.last_write["bytes"]
-        counter = {"step": 1}
+        full_d2h = ck.last_write["d2h_bytes"]
+        box = {"step": 1, "state": state}
 
         def save_next():
-            s = counter["step"] = counter["step"] + 1
-            for v in state.values():
-                n = v.size
-                w = max(1, int(n * dirty_frac))
-                start = (s * w) % max(1, n - w)
-                v[start:start + w] += 1.0
-            ck.save(s, state)
+            s = box["step"] = box["step"] + 1
+            box["state"] = _mutate(box["state"], s, dirty_frac)
+            ck.save(s, box["state"])
 
         out["bin_delta_write_s"] = _time(save_next)
         assert ck.last_write["kind"] == "delta", ck.last_write
@@ -114,6 +126,10 @@ def bench_delta_io(*, mb: float = STATE_MB,
         out["delta_full_bytes"] = full_bytes
         out["delta_bytes_frac"] = ck.last_write["bytes"] / full_bytes
         out["delta_dirty_frac"] = dirty_frac
+        # D2H traffic proportional to dirt: the gather path's whole point
+        out["delta_d2h_bytes"] = ck.last_write["d2h_bytes"]
+        out["delta_full_d2h_bytes"] = full_d2h
+        out["delta_d2h_frac"] = ck.last_write["d2h_bytes"] / max(full_d2h, 1)
         loaded = {}
 
         def read():
@@ -123,8 +139,46 @@ def bench_delta_io(*, mb: float = STATE_MB,
         out["bin_delta_read_s"] = _time(read)
         # composed restore is bit-exact vs the live state
         step, st = ck.load_latest()
-        assert all(np.array_equal(np.asarray(st[k]), state[k])
+        assert all(np.array_equal(np.asarray(st[k]),
+                                  np.asarray(box["state"][k]))
                    for k in state)
+    return out
+
+
+def bench_rebase(*, mb: float = 16.0,
+                 dirty_frac: float = DELTA_DIRTY_FRAC,
+                 links: int = 8) -> dict:
+    """Restore cost of a `links`-long delta chain before vs after the
+    background re-base compacts it into a self-contained base. The
+    rebased restore must be bit-identical to the chained one."""
+    state = _state(mb)
+    jax.block_until_ready(state)
+    out = {"rebase_state_mb": mb, "rebase_chain_links": links}
+    with tempfile.TemporaryDirectory() as d, \
+            FileCheckpointer(d, keep=links + 4, n_shards=N_SHARDS,
+                             delta_every=links + 4, gather="on") as ck:
+        ck.save(1, state)
+        for s in range(2, links + 2):
+            state = _mutate(state, s, dirty_frac)
+            ck.save(s, state)
+        loaded = {}
+
+        def read():
+            step, st = ck.load_latest()
+            loaded["state"] = {k: np.asarray(v) for k, v in st.items()}
+
+        out["chained_read_s"] = _time(read)
+        # arm the threshold; the next delta save trips the compaction
+        ck.rebase_after = 1
+        state = _mutate(state, links + 2, dirty_frac)
+        ck.save(links + 2, state)
+        ck.wait()
+        assert ck.last_rebase.get("ok"), ck.last_rebase
+        out["rebased_read_s"] = _time(read)
+        assert all(np.array_equal(loaded["state"][k],
+                                  np.asarray(state[k])) for k in state)
+        out["rebase_read_speedup"] = out["chained_read_s"] \
+            / max(out["rebased_read_s"], 1e-9)
     return out
 
 
@@ -132,6 +186,7 @@ def run(report=print) -> dict:
     state = _state()
     jax.block_until_ready(state)
     io = bench_file_io(state)
+    io.update(bench_rebase())
 
     t0 = time.monotonic()
     mem_copy = jax.tree.map(lambda a: a + 0, state)
@@ -151,6 +206,14 @@ def run(report=print) -> dict:
            f"64MB_compose")
     report(f"table2_delta_bytes_frac,0,"
            f"frac={io['delta_bytes_frac']:.4f}")
+    report(f"table2_delta_d2h_frac,0,"
+           f"frac={io['delta_d2h_frac']:.4f}")
+    report(f"table2_rebase_chained_read,{io['chained_read_s'] * 1e6:.0f},"
+           f"{io['rebase_state_mb']:.0f}MB_{io['rebase_chain_links']}links")
+    report(f"table2_rebase_rebased_read,{io['rebased_read_s'] * 1e6:.0f},"
+           f"{io['rebase_state_mb']:.0f}MB_base")
+    report(f"table2_rebase_read_speedup,0,"
+           f"x={io['rebase_read_speedup']:.2f}")
     report(f"table2_memory_copy,{t_mem * 1e6:.0f},64MB")
     report(f"table2_write_speedup_new_vs_old,0,"
            f"x={io['write_speedup']:.2f}")

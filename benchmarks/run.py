@@ -44,6 +44,18 @@ def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
                   "read_s": ckpt_io.get("bin_delta_read_s"),
                   "bytes_frac": ckpt_io.get("delta_bytes_frac"),
                   "dirty_frac": ckpt_io.get("delta_dirty_frac")},
+        # device dirty-tile gather: transferred D2H bytes per delta save
+        # as a fraction of a full-state drain (proportional-to-dirt)
+        "dirty_gather": {
+            "d2h_frac": ckpt_io.get("delta_d2h_frac"),
+            "d2h_bytes": ckpt_io.get("delta_d2h_bytes"),
+            "full_d2h_bytes": ckpt_io.get("delta_full_d2h_bytes")},
+        # background re-base: chained vs compacted restore cost
+        "rebase": {
+            "chained_read_s": ckpt_io.get("chained_read_s"),
+            "rebased_read_s": ckpt_io.get("rebased_read_s"),
+            "read_speedup": ckpt_io.get("rebase_read_speedup"),
+            "chain_links": ckpt_io.get("rebase_chain_links")},
         "speedup": {"write": ckpt_io.get("write_speedup"),
                     "read": ckpt_io.get("read_speedup")},
         "memory_copy_s": ckpt_io.get("memory_copy_s"),
@@ -101,6 +113,7 @@ def check_regression(path: str = BENCH_JSON,
     # has them (each real-process pass is ~15 s — skip otherwise)
     gate_growback = bool(committed.get("growback", {}).get("e2e_s"))
     gate_failover = bool(committed.get("failover", {}).get("replica_e2e_s"))
+    gate_rebase = bool(committed.get("rebase", {}).get("rebased_read_s"))
 
     def measure() -> dict:
         ckpt_io = checkpoint_bench.bench_file_io()
@@ -112,7 +125,13 @@ def check_regression(path: str = BENCH_JSON,
             ("delta", "write_s"): ckpt_io.get("bin_delta_write_s"),
             ("delta", "read_s"): ckpt_io.get("bin_delta_read_s"),
             ("delta", "bytes_frac"): ckpt_io.get("delta_bytes_frac"),
+            # the gather's D2H fraction gates like a timing: lower is
+            # better, >20% growth means dirt is leaking past the gather
+            ("dirty_gather", "d2h_frac"): ckpt_io.get("delta_d2h_frac"),
         }
+        if gate_rebase:
+            rb = checkpoint_bench.bench_rebase()
+            out[("rebase", "rebased_read_s")] = rb.get("rebased_read_s")
         if gate_growback:
             gb = runtime_bench.bench_growback(report=lambda *_: None)
             out[("growback", "e2e_s")] = gb.get("growback_e2e_s")
@@ -147,6 +166,9 @@ def check_regression(path: str = BENCH_JSON,
 
 def main() -> None:
     fast = "--fast" in sys.argv
+    # nightly variant: re-run the delta/gather/rebase benches on a 4x
+    # larger state (D2H proportionality must hold where it matters)
+    large = "--large-state" in sys.argv
     if "--check-regression" in sys.argv:
         print("name,us_per_call,derived")
         sys.exit(check_regression())
@@ -165,6 +187,20 @@ def main() -> None:
         failures += 1
         print("table2_checkpointing_FAILED,0,error")
         traceback.print_exc()
+    if large:
+        try:
+            big = checkpoint_bench.bench_delta_io(mb=256.0)
+            print(f"large_delta_write,"
+                  f"{big['bin_delta_write_s'] * 1e6:.0f},256MB_5%_dirty")
+            print(f"large_delta_d2h_frac,0,"
+                  f"frac={big['delta_d2h_frac']:.4f}")
+            rb = checkpoint_bench.bench_rebase(mb=64.0, links=12)
+            print(f"large_rebase_read_speedup,0,"
+                  f"x={rb['rebase_read_speedup']:.2f}")
+        except Exception:                 # noqa: BLE001
+            failures += 1
+            print("large_state_bench_FAILED,0,error")
+            traceback.print_exc()
     try:
         e2e = recovery_time.run(report=print, ckpt_io=ckpt_io)
     except Exception:                     # noqa: BLE001

@@ -4,6 +4,10 @@ Layout:
     <dir>/step_<N>/shard_<i>.bin     one serde frame per writer shard
     <dir>/step_<N>/manifest.json     shapes/dtypes/digests per leaf
     <dir>/step_<N>/COMMITTED         written last — crash-consistency marker
+    <dir>/step_<N>/rebase/           optional: the same step re-written as
+                                     a self-contained full frame by the
+                                     background re-base (own manifest +
+                                     COMMITTED; preferred at load time)
 
 A checkpoint without COMMITTED is garbage from a crashed writer and is
 ignored (and garbage-collected) by load_latest. Writes go to a tmp dir that
@@ -15,7 +19,9 @@ in the checkpoint substrate):
   write   leaves are digested while still on device (Pallas/jnp word-sum;
           only 8 bytes per leaf cross to the host for the manifest), then
           drained leaf-by-leaf via copy_to_host_async and streamed into
-          serde frames by a thread pool, one worker per shard.
+          serde frames by a thread pool, one worker per shard. Sync and
+          async saves share the same on-device digest path — a sync save
+          never host-hashes bytes the device already digested.
   async   save() snapshots the state with a cheap on-device copy (so the
           trainer may donate its buffers to step N+1 immediately), kicks
           the device→host DMA per leaf, and queues serialization + IO on
@@ -38,8 +44,35 @@ in the checkpoint substrate):
           still needs. A save whose dirty fraction exceeds 50% degrades
           to a base automatically.
 
+  gather  (delta saves on accelerators, or gather="on") the *transfer*
+          is made proportional to dirt too: the per-tile digest rows
+          decide which tiles changed, a Pallas/jnp gather compacts
+          exactly those tiles into one contiguous device buffer, and
+          only that buffer (plus 12 B/tile of digest rows) crosses
+          device→host. Delta frames are then built directly from the
+          gathered tiles — the full snapshot is never materialized on
+          the host. The full-state drain survives only where it is
+          needed: base-cadence saves (predicted at submit time so the
+          DMA still overlaps), dirty-degraded saves, and the CPU-backend
+          fallback. `last_write["d2h_bytes"]` accounts what crossed.
+
+  rebase  (rebase_after=N / rebase_max_bytes=B) a background writer-pool
+          thread rewrites a delta chain as a fresh self-contained base
+          once its compose cost crosses the threshold (chain links,
+          or cumulative delta bytes), so `delta_every` can be raised
+          aggressively without unbounded restore cost. Crash-safe: the
+          full frame is staged inside the step dir and committed by one
+          atomic rename to `rebase/`; the old chain (and its base
+          anchor) is never touched before that COMMITTED lands, and is
+          GC'd only afterwards, via the normal chain-closure walk.
+          `ckpt.file.rebase.{begin,pre_commit}` are scenario hook
+          points.
+
 `fmt="npz"` preserves the legacy np.savez + sha256 path byte-for-byte so
 benchmarks/checkpoint_bench.py can report old-vs-new on the same class.
+npz shards are always full archives, so delta_every is force-disabled
+there — a "delta" decision over full npz bytes would corrupt the chain
+bookkeeping.
 """
 from __future__ import annotations
 
@@ -60,39 +93,76 @@ from .manifest import (Manifest, digest_from_checksum, flatten_leaves,
                        flatten_state, leaf_digest, unflatten_state)
 
 
-def _snapshot_device(leaf):
-    """On-device copy + async D2H kick. The copy decouples the snapshot
-    from donation: step N+1 may donate the original buffer while the copy
-    drains. Returns an object np.asarray() can materialize later."""
+def _snapshot_device(leaf, *, kick: bool = True):
+    """On-device copy + (optional) async D2H kick. The copy decouples the
+    snapshot from donation: step N+1 may donate the original buffer while
+    the copy drains. With kick=False the copy stays on device — the
+    gather path moves only dirty tiles later, so kicking the full drain
+    here would defeat it. Returns an object np.asarray() can materialize
+    later."""
     if isinstance(leaf, jax.Array):
         c = jax.numpy.copy(leaf)
-        try:
-            c.copy_to_host_async()
-        except (AttributeError, RuntimeError):
-            pass
+        if kick:
+            try:
+                c.copy_to_host_async()
+            except (AttributeError, RuntimeError):
+                pass
         return c
     return np.asarray(leaf)
+
+
+class _LeafMeta:
+    """Shape/dtype stand-in for a leaf whose bytes never reached the
+    host (gathered delta saves build manifests from these)."""
+
+    __slots__ = ("shape", "dtype")
+
+    def __init__(self, shape, dtype):
+        self.shape = shape
+        self.dtype = dtype
 
 
 class FileCheckpointer:
     def __init__(self, directory: str, *, keep: int = 3,
                  n_shards: int = 1, fmt: str = "bin",
                  io_workers: Optional[int] = None,
-                 delta_every: int = 0, delta_max_dirty: float = 0.5):
+                 delta_every: int = 0, delta_max_dirty: float = 0.5,
+                 gather: str = "auto", rebase_after: int = 0,
+                 rebase_max_bytes: int = 0):
         if fmt not in ("bin", "npz"):
             raise ValueError(f"fmt must be 'bin' or 'npz', got {fmt!r}")
+        if gather not in ("auto", "on", "off"):
+            raise ValueError(f"gather must be auto/on/off, got {gather!r}")
+        if fmt == "npz" and delta_every > 1:
+            # npz shards are always full np.savez archives; honoring a
+            # "delta" decision would write full bytes while the chain
+            # planner records a delta kind — incoherent. Force full
+            # frames and never engage the planner.
+            delta_every = 0
         self.dir = directory
         self.keep = keep
         self.n_shards = n_shards
         self.fmt = fmt
         # delta_every=K>1: base every K-th save, tile-range deltas between
         self.delta_every = delta_every
-        self._chain = serde.ChainPlanner(delta_every, delta_max_dirty)
-        self.last_write: dict = {}      # {"kind", "bytes"} of newest save
+        # gather: "auto" = device dirty-tile gather on accelerator
+        # backends; "on" forces it (tests/benches on CPU); "off" keeps
+        # the full-drain delta path
+        self.gather = gather
+        # background re-base thresholds (0 = off): chain links /
+        # cumulative delta bytes under the newest step
+        self.rebase_after = rebase_after
+        self.rebase_max_bytes = rebase_max_bytes
+        self._chain = serde.ChainPlanner(self.delta_every, delta_max_dirty)
+        self.last_write: dict = {}   # {"kind", "bytes", "d2h_bytes"}
+        self.last_rebase: dict = {}  # {"step", "ok"[, "error"]}
         self._io_workers = io_workers or min(8, max(2, n_shards))
         self._pool: Optional[ThreadPoolExecutor] = None      # shard fan-out
         self._writer: Optional[ThreadPoolExecutor] = None    # ordered jobs
+        self._rebase_pool: Optional[ThreadPoolExecutor] = None
         self._pending: deque[Future] = deque()
+        self._rebase_pending: deque[Future] = deque()
+        self._rebase_busy = False
         self._error: Optional[BaseException] = None
         self._live_tmps: set[str] = set()
         self._lock = threading.Lock()
@@ -101,6 +171,20 @@ class FileCheckpointer:
     @property
     def _delta_on(self) -> bool:
         return self.fmt == "bin" and self.delta_every > 1
+
+    @property
+    def _gather_on(self) -> bool:
+        if not self._delta_on or self.gather == "off":
+            return False
+        return self.gather == "on" or jax.default_backend() != "cpu"
+
+    @property
+    def _device_digests_on(self) -> bool:
+        # on the CPU backend a jnp reduction is just a slower numpy, so
+        # there the parallel shard writers digest instead — unless the
+        # gather path is forced on (its decisions need the tile rows)
+        return self.fmt == "bin" and (jax.default_backend() != "cpu"
+                                      or self.gather == "on")
 
     @property
     def delta_max_dirty(self) -> float:
@@ -126,8 +210,26 @@ class FileCheckpointer:
                 max_workers=1, thread_name_prefix="ckpt-writer")
         return self._writer
 
+    def _rebase_pool_get(self) -> ThreadPoolExecutor:
+        # separate single thread: a slow compose must never stall the
+        # ordered writer behind it
+        if self._rebase_pool is None:
+            self._rebase_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="ckpt-rebase")
+        return self._rebase_pool
+
     def _step_dir(self, step: int) -> str:
         return os.path.join(self.dir, f"step_{step:010d}")
+
+    def _frame_dir(self, step: int) -> str:
+        """Where the step's authoritative frame lives: the committed
+        `rebase/` subdir when the background re-base has landed, else
+        the step dir itself."""
+        d = self._step_dir(step)
+        rb = os.path.join(d, "rebase")
+        if os.path.exists(os.path.join(rb, "COMMITTED")):
+            return rb
+        return d
 
     def steps(self) -> list[int]:
         out = []
@@ -139,11 +241,15 @@ class FileCheckpointer:
         return sorted(out)
 
     def _manifest(self, step: int) -> Manifest:
-        with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
+        with open(os.path.join(self._frame_dir(step),
+                               "manifest.json")) as f:
             return Manifest.from_json(f.read())
 
     def _chain_closure(self, steps: list[int]) -> set[int]:
-        """`steps` plus every base step their delta chains depend on."""
+        """`steps` plus every base step their delta chains depend on.
+        A committed re-base cuts the walk — its step reads back as a
+        full frame, so the old anchor drops out of the closure (and
+        becomes GC-able) exactly when the new base's COMMITTED lands."""
         need = set(steps)
         stack = list(steps)
         while stack:
@@ -191,33 +297,48 @@ class FileCheckpointer:
              extra: dict | None = None):
         """Checkpoint `state` at `step`.
 
-        Sync: materialize on the caller thread and write (blocking).
-        Async: on-device snapshot + async D2H now, serialization and IO
-        on the writer thread; up to one snapshot queues behind the one
-        draining (double buffering), further saves block on the oldest.
+        Sync: digest (on device, where there is one) and write on the
+        caller thread (blocking). Async: on-device snapshot now, with
+        the full D2H drain kicked only when the chain planner says the
+        full bytes will be needed; serialization and IO run on the
+        writer thread. Up to one snapshot queues behind the one draining
+        (double buffering); further saves block on the oldest.
         """
         self._raise_pending_error()
-        if not async_:
-            self.wait()
-            flat = flatten_state(state)      # blocking device_get
+        if self.fmt == "npz":
+            # legacy comparison path: host materialize + sha256
+            self._drain_writes()
+            flat = flatten_state(state)
             self._write(step, flat, None, extra)
             return
-        while len(self._pending) >= 2:       # double-buffer bound
-            self._pending.popleft().result()
-            self._raise_pending_error()
+        if async_:
+            while len(self._pending) >= 2:   # double-buffer bound
+                self._pending.popleft().result()
+                self._raise_pending_error()
+        else:
+            # drain queued writes only — an in-flight background re-base
+            # must never stall the save path
+            self._drain_writes()
         dev_flat = flatten_leaves(state)
-        snap = {k: _snapshot_device(v) for k, v in dev_flat.items()}
+        # kick the full drain only when the planner is certain this save
+        # is a base (or the gather path is off) — a delta save will move
+        # just its gathered dirty tiles
+        kick = not self._gather_on or self._chain.predict_full(step)
+        if async_:
+            snap = {k: _snapshot_device(v, kick=kick)
+                    for k, v in dev_flat.items()}
+        else:
+            snap = dev_flat   # sync blocks: no donation hazard, no copy
         dev_sums = dev_tiles = None
-        if self.fmt == "bin" and jax.default_backend() != "cpu":
-            # digest on device from the snapshot copies — the word-sum
+        if self._device_digests_on:
+            # digest on device from the snapshot — the word-sum
             # reductions are *enqueued* here (they ride the same stream
-            # as the D2H drain) but never awaited on this thread; the
-            # writer int()s the 8B/leaf results later. (On the CPU
-            # backend a jnp reduction is just a slower numpy, so there
-            # the parallel shard writers digest instead.) With deltas on,
+            # as any D2H drain) but never awaited on this thread; the
+            # writer int()s the 8B/leaf results later. With deltas on,
             # the *tiled* reduction is enqueued instead: its 12 B/tile
-            # output both localizes dirty tiles (the on-device diff) and
-            # folds into the scalar leaf digest, so one pass serves both.
+            # output localizes dirty tiles (driving both the delta plan
+            # and the device gather) and folds into the scalar leaf
+            # digest, so one pass serves both.
             if self._delta_on:
                 from repro.kernels.checksum.ops import tile_checksums_device
                 dev_tiles = {}
@@ -235,32 +356,126 @@ class FileCheckpointer:
                     k: (str(v.dtype), tuple(v.shape),
                         checksum_words_device(v))
                     for k, v in snap.items() if isinstance(v, jax.Array)}
-        fut = self._writer_pool().submit(
-            self._write_guarded, step, snap, dev_sums, dev_tiles, extra)
-        self._pending.append(fut)
+        if async_:
+            fut = self._writer_pool().submit(
+                self._write_guarded, step, snap, dev_sums, dev_tiles,
+                extra)
+            self._pending.append(fut)
+        else:
+            self._write_prepared(step, snap, dev_sums, dev_tiles, extra)
 
     def _write_guarded(self, step, snap, dev_sums, dev_tiles, extra):
         try:
-            flat = {k: np.asarray(v) for k, v in snap.items()}
-            digests = None
-            tiles = None
-            if dev_sums is not None:
-                digests = {}
-                for k, (dt, sh, s) in dev_sums.items():
-                    s0, s1 = (0, 0) if s is None else (int(s[0]), int(s[1]))
-                    digests[k] = digest_from_checksum(dt, sh, s0, s1)
-            if dev_tiles is not None:
-                from repro.kernels.checksum.ref import scalar_from_tiles
-                digests, tiles = {}, {}
-                for k, (dt, sh, nb, t) in dev_tiles.items():
-                    rows = np.zeros((0, 3), np.uint32) if t is None \
-                        else np.asarray(t)
-                    tiles[k] = serde.LeafTiles(nb, dt, sh, rows)
-                    digests[k] = digest_from_checksum(
-                        dt, sh, *scalar_from_tiles(rows))
-            self._write(step, flat, digests, extra, tiles=tiles)
+            self._write_prepared(step, snap, dev_sums, dev_tiles, extra)
         except BaseException as e:   # surfaced on next wait()/save()
             self._error = e
+
+    def _drain(self, snap, counter: list) -> Dict[str, np.ndarray]:
+        """Materialize every snapshot leaf on the host (the full-drain
+        fallback), charging transferred device bytes to `counter[0]`."""
+        flat = {}
+        for k, v in snap.items():
+            a = np.asarray(v)
+            if isinstance(v, jax.Array):
+                counter[0] += a.nbytes
+            flat[k] = a
+        return flat
+
+    def _write_prepared(self, step, snap, dev_sums, dev_tiles, extra):
+        """Shared sync/async write body: fold device digests, decide
+        full-vs-delta, then either gather dirty tiles (transfer O(dirt))
+        or drain the full snapshot (base / degraded / CPU fallback)."""
+        d2h = [0]
+        if dev_tiles is not None:
+            from repro.kernels.checksum.ref import scalar_from_tiles
+            tiles: Dict[str, serde.LeafTiles] = {}
+            for k, (dt, sh, nb, t) in dev_tiles.items():
+                rows = np.zeros((0, 3), np.uint32) if t is None \
+                    else np.asarray(t)
+                tiles[k] = serde.LeafTiles(nb, dt, sh, rows)
+                d2h[0] += rows.nbytes            # 12 B/tile digest rows
+            for k, v in snap.items():            # host / exotic leaves
+                if k not in tiles:
+                    a = np.asarray(v)
+                    if isinstance(v, jax.Array):
+                        d2h[0] += a.nbytes
+                    tiles[k] = serde._leaf_tiles(a)
+            digests = {k: digest_from_checksum(
+                t.dtype, t.shape, *scalar_from_tiles(t.rows))
+                for k, t in tiles.items()}
+            kind, plan, tiles, base_step = self._chain.decide(
+                snap, step, tiles)
+            if kind == "delta" and self._gather_on:
+                gathered = self._gather(snap, plan, d2h)
+                meta = {k: _LeafMeta(t.shape, t.dtype)
+                        for k, t in tiles.items()}
+                self._write(step, meta, digests, extra, tiles=tiles,
+                            decision=(kind, plan, base_step),
+                            gathered=gathered, d2h_bytes=d2h[0])
+                return
+            flat = self._drain(snap, d2h)
+            self._write(step, flat, digests, extra, tiles=tiles,
+                        decision=(kind, plan, base_step),
+                        d2h_bytes=d2h[0])
+            return
+        flat = self._drain(snap, d2h)
+        digests = None
+        if dev_sums is not None:
+            digests = {}
+            for k, (dt, sh, s) in dev_sums.items():
+                s0, s1 = (0, 0) if s is None else (int(s[0]), int(s[1]))
+                digests[k] = digest_from_checksum(dt, sh, s0, s1)
+        self._write(step, flat, digests, extra, d2h_bytes=d2h[0])
+
+    def _gather(self, snap, plan: serde.DeltaPlan,
+                d2h: list) -> Dict[str, serde.GatherLeaf]:
+        """Device-side dirty-tile gather: one compact gather kernel per
+        range-dirty device leaf, D2H kicked for all of them before any
+        is awaited, then materialized into the gathered representation
+        the delta frame writers consume. Only gathered tiles (O(dirt))
+        and plan-full leaves ever cross; clean bytes stay on device."""
+        from repro.kernels.checksum.ref import TILE_BYTES
+        from repro.kernels.checksum.ops import gather_tiles_device
+        dev = {}
+        for k, rng in plan.entries.items():
+            v = snap[k]
+            if rng is None or not isinstance(v, jax.Array):
+                continue
+            try:
+                g = gather_tiles_device(v, serde.range_tiles(rng))
+            except TypeError:        # exotic itemsize: host slices below
+                continue
+            try:
+                g.copy_to_host_async()
+            except (AttributeError, RuntimeError):
+                pass
+            dev[k] = g
+        gathered: Dict[str, serde.GatherLeaf] = {}
+        for k, rng in plan.entries.items():
+            v = snap[k]
+            dt = str(getattr(v, "dtype", np.asarray(v).dtype))
+            sh = tuple(np.shape(v))
+            if rng is None:          # new/reshaped leaf: full bytes
+                a = np.asarray(v)
+                if isinstance(v, jax.Array):
+                    d2h[0] += a.nbytes
+                bv = serde._leaf_bytes(a)
+                gathered[k] = serde.GatherLeaf(
+                    dt, sh, True, [(0, int(bv.size), bv)])
+            elif k in dev:
+                hb = np.asarray(dev[k])   # (n_dirty, TILE_WORDS): O(dirt)
+                d2h[0] += hb.nbytes
+                bv = hb.reshape(-1).view(np.uint8)
+                runs, pos = [], 0
+                for o, n in rng:
+                    runs.append((o, n, bv[pos:pos + n]))
+                    pos += (-(-n // TILE_BYTES)) * TILE_BYTES
+                gathered[k] = serde.GatherLeaf(dt, sh, False, runs)
+            else:                    # host leaf: zero-copy slices
+                bv = serde._leaf_bytes(np.asarray(v))
+                gathered[k] = serde.GatherLeaf(
+                    dt, sh, False, [(o, n, bv[o:o + n]) for o, n in rng])
+        return gathered
 
     def _delta_decision(self, step: int, flat, tiles):
         """Returns (kind, plan, tiles, base_step) from the shared chain
@@ -275,13 +490,24 @@ class FileCheckpointer:
                     tiles[k] = serde._leaf_tiles(np.asarray(flat[k]))
         return self._chain.decide(flat, step, tiles)
 
-    def _write(self, step: int, flat: Dict[str, np.ndarray],
+    def _write(self, step: int, flat: Dict[str, Any],
                digests: Optional[Dict[str, str]], extra,
-               tiles: Optional[Dict[str, np.ndarray]] = None):
+               tiles: Optional[Dict[str, Any]] = None,
+               decision: Optional[tuple] = None,
+               gathered: Optional[Dict[str, serde.GatherLeaf]] = None,
+               d2h_bytes: Optional[int] = None):
+        """Commit one checkpoint. `flat` maps every leaf path to either
+        a host array or (gathered delta saves) a shape/dtype stand-in;
+        `decision` short-circuits the chain planner when the caller
+        already decided; `gathered` carries the dirty runs a delta's
+        shards are written from."""
         keys = sorted(flat)
         shard_of = {k: i % self.n_shards for i, k in enumerate(keys)}
-        kind, plan, tiles, base_step = self._delta_decision(step, flat,
-                                                            tiles)
+        if decision is None:
+            kind, plan, tiles, base_step = self._delta_decision(step, flat,
+                                                                tiles)
+        else:
+            kind, plan, base_step = decision
         if self._delta_on and digests is None:
             # one tiled pass already happened — fold it into the scalar
             # leaf digests instead of re-reading every byte
@@ -309,19 +535,28 @@ class FileCheckpointer:
                 pool = self._shard_pool()
 
                 def one_shard(i: int) -> Dict[str, str]:
-                    part = {k: flat[k] for k in keys if shard_of[k] == i}
+                    part_keys = [k for k in keys if shard_of[k] == i]
                     p = os.path.join(tmp, f"shard_{i:05d}.bin")
-                    if kind == "delta":
+                    if kind == "delta" and gathered is not None:
+                        nbytes[i] = serde.write_delta_file_gathered(
+                            p, {k: gathered[k] for k in part_keys
+                                if k in gathered},
+                            base_step=base_step)
+                    elif kind == "delta":
                         nbytes[i] = serde.write_delta_file(
-                            p, part, plan, base_step=base_step)
+                            p, {k: flat[k] for k in part_keys}, plan,
+                            base_step=base_step)
                     else:
-                        nbytes[i] = serde.write_file(p, part)
+                        nbytes[i] = serde.write_file(
+                            p, {k: flat[k] for k in part_keys})
                     # crash-injection point: this shard's bytes are down,
                     # the checkpoint is not yet COMMITTED
                     hooks.fire("ckpt.file.shard", step=step, shard=i)
                     pre = digests or {}
-                    return {k: pre.get(k) or leaf_digest(v)
-                            for k, v in part.items()}
+                    if gathered is not None:
+                        return {k: pre[k] for k in part_keys}
+                    return {k: pre.get(k) or leaf_digest(flat[k])
+                            for k in part_keys}
 
                 shard_digests: Dict[str, str] = {}
                 for d in pool.map(one_shard, range(self.n_shards)):
@@ -347,13 +582,117 @@ class FileCheckpointer:
                 self._live_tmps.discard(tmp_name)
         if self._delta_on:
             self._chain.commit(step, tiles, kind)
-        self.last_write = {"kind": kind, "bytes": sum(nbytes)}
+        self.last_write = {"kind": kind, "bytes": sum(nbytes),
+                           "d2h_bytes": d2h_bytes}
+        self._gc()
+        self._maybe_rebase(step, kind)
+
+    # ------------------------------------------------------------ rebase
+
+    def _chain_cost(self, step: int) -> tuple[int, int]:
+        """(links, delta_bytes) of the compose chain under `step`,
+        walked through manifests — a committed re-base reads back as a
+        full frame and zeroes the cost."""
+        links = nbytes = 0
+        man = self._manifest(step)
+        while man.kind == "delta" and man.base_step is not None:
+            links += 1
+            d = self._frame_dir(man.step)
+            for i in range(man.n_shards):
+                try:
+                    nbytes += os.path.getsize(
+                        os.path.join(d, f"shard_{i:05d}.bin"))
+                except OSError:
+                    pass
+            man = self._manifest(man.base_step)
+        return links, nbytes
+
+    def _maybe_rebase(self, step: int, kind: str):
+        if kind != "delta" or (self.rebase_after <= 0
+                               and self.rebase_max_bytes <= 0):
+            return
+        with self._lock:
+            if self._rebase_busy:
+                return          # one compaction in flight at a time
+        try:
+            links, nbytes = self._chain_cost(step)
+        except (OSError, ValueError):
+            return
+        if ((self.rebase_after > 0 and links >= self.rebase_after)
+                or (self.rebase_max_bytes > 0
+                    and nbytes >= self.rebase_max_bytes)):
+            with self._lock:
+                self._rebase_busy = True
+            self._rebase_pending.append(
+                self._rebase_pool_get().submit(self._rebase_guarded,
+                                               step))
+
+    def _rebase_guarded(self, step: int):
+        try:
+            self._rebase(step)
+            self.last_rebase = {"step": step, "ok": True}
+        except BaseException as e:
+            # re-base is an optimization: a failed/aborted attempt must
+            # never take the writer down — the old chain is still whole
+            self.last_rebase = {"step": step, "ok": False,
+                                "error": repr(e)}
+        finally:
+            with self._lock:
+                self._rebase_busy = False
+
+    def _rebase(self, step: int):
+        """Rewrite `step` (a delta-chain tip) as a self-contained full
+        frame in `step_<N>/rebase/`. Later deltas keep chaining to this
+        step by number; their compose walk now stops here. Crash-safe:
+        everything is staged in a tmp subdir and committed by a single
+        atomic rename *after* COMMITTED is inside — a kill at any point
+        leaves the old chain authoritative and bit-exactly loadable."""
+        hooks.fire("ckpt.file.rebase.begin", step=step)
+        d = self._step_dir(step)
+        if os.path.exists(os.path.join(d, "rebase", "COMMITTED")):
+            return                           # already compacted
+        man, state = self.load(step, verify=True)   # composed, verified
+        flat = flatten_state(state)
+        keys = sorted(flat)
+        shard_of = {k: i % self.n_shards for i, k in enumerate(keys)}
+        for name in os.listdir(d):           # crashed/aborted attempts
+            if name.startswith("rebase.tmp"):
+                shutil.rmtree(os.path.join(d, name), ignore_errors=True)
+        tmp = os.path.join(d, f"rebase.tmp_{os.getpid()}")
+        os.makedirs(tmp)
+        for i in range(self.n_shards):
+            part = {k: flat[k] for k in keys if shard_of[k] == i}
+            serde.write_file(os.path.join(tmp, f"shard_{i:05d}.bin"),
+                             part)
+        # digests carry over verbatim: the old manifest already
+        # describes exactly this composed state
+        new_man = Manifest.build(
+            step, flat, lambda k: shard_of[k], self.n_shards, man.extra,
+            digests={k: man.leaves[k]["digest"] for k in keys},
+            kind="full", base_step=None)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            f.write(new_man.to_json())
+        # crash-injection point: full frame staged, not yet committed —
+        # a kill here must leave the old chain authoritative and the
+        # stale tmp reapable by the next attempt
+        hooks.fire("ckpt.file.rebase.pre_commit", step=step)
+        with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+            f.write("ok")
+        os.rename(tmp, os.path.join(d, "rebase"))
+        # the old anchor may now age out of the keep window — reap it
         self._gc()
 
-    def wait(self):
-        """Drain the async writer queue; re-raise any background failure."""
+    def _drain_writes(self):
         while self._pending:
             self._pending.popleft().result()
+        self._raise_pending_error()
+
+    def wait(self):
+        """Drain the async writer queue and any in-flight background
+        re-base; re-raise any background write failure."""
+        self._drain_writes()
+        while self._rebase_pending:
+            self._rebase_pending.popleft().result()
         self._raise_pending_error()
 
     def close(self):
@@ -362,11 +701,12 @@ class FileCheckpointer:
         try:
             self.wait()
         finally:
-            for pool in (self._writer, self._pool):
+            for pool in (self._writer, self._pool, self._rebase_pool):
                 if pool is not None:
                     pool.shutdown(wait=True)
             self._writer = None
             self._pool = None
+            self._rebase_pool = None
 
     def __enter__(self):
         return self
@@ -399,7 +739,8 @@ class FileCheckpointer:
             chain.append(self._manifest(chain[-1].base_step))
         chain.reverse()                  # [base, ..., target]
         base = chain[0]
-        d = self._step_dir(base.step)
+        # a re-based step reads from its rebase/ subdir (full frame)
+        d = self._frame_dir(base.step)
         pool = self._shard_pool()
         flat: Dict[str, np.ndarray] = {}
         bad: list[str] = []

@@ -347,46 +347,95 @@ class ChainPlanner:
         self.prev: tuple | None = None        # (step, tiles)
         self.since_base = 0
 
+    def predict_full(self, step: int) -> bool:
+        """True when `decide(step)` cannot return "delta" regardless of
+        how dirty the snapshot turns out to be (cadence says base, no
+        parent, non-anchoring step). The async gather path uses this at
+        submit time: only when the full bytes will certainly be needed
+        does it kick the whole-state D2H drain early."""
+        prev = self.prev
+        return (self.base_every <= 1 or prev is None or prev[0] >= step
+                or self.since_base >= self.base_every - 1
+                or (self.contiguous and prev[0] != step - 1))
+
     def decide(self, flat: Dict[str, Any], step: int,
                new_tiles: Dict[str, tuple] | None = None):
         """-> (kind, plan-or-None, tiles, base_step-or-None)."""
         if new_tiles is None:
             new_tiles = tile_digests(flat)
-        prev = self.prev
-        if (self.base_every <= 1 or prev is None or prev[0] >= step
-                or self.since_base >= self.base_every - 1
-                or (self.contiguous and prev[0] != step - 1)):
+        if self.predict_full(step):
             return "full", None, new_tiles, None
-        plan = delta_plan(flat, prev[1], new_tiles)
+        plan = delta_plan(flat, self.prev[1], new_tiles)
         if not plan.feasible or plan.dirty_fraction > self.max_dirty:
             return "full", None, new_tiles, None
-        return "delta", plan, new_tiles, prev[0]
+        return "delta", plan, new_tiles, self.prev[0]
 
     def commit(self, step: int, tiles: Dict[str, tuple], kind: str):
         self.prev = (step, tiles)
         self.since_base = self.since_base + 1 if kind == "delta" else 0
 
 
-def _delta_layout(flat: Dict[str, Any], plan: DeltaPlan, base_step: int,
-                  extra: dict | None):
-    """(prefix, [(uint8_view, leaf_off, nbytes, frame_off)], frame_size)
-    for the subset of plan entries whose paths are in `flat`."""
-    views = {}
-    entries = []
+class GatherLeaf(NamedTuple):
+    """One leaf of a *gathered* delta: its identity plus the dirty byte
+    runs, each run carrying its own uint8 view of the bytes to emit.
+
+    This is the representation every delta frame is built from. The
+    views may point anywhere byte-identical to the leaf's dirty ranges:
+    slices of the full host array (`gather_host`, the CPU path), or
+    slices of a compact device-gathered tile buffer that is the *only*
+    bulk payload ever copied D2H (FileCheckpointer's gather path) — the
+    frame writer cannot tell the difference and the frame bytes are
+    identical either way (tested)."""
+    dtype: str
+    shape: tuple
+    full: bool
+    runs: list              # [(leaf_off, nbytes, uint8_view)]
+
+
+def range_tiles(ranges) -> np.ndarray:
+    """Ascending tile indices covered by a plan entry's byte ranges
+    (each range is a maximal run of dirty 4 KB tiles, possibly clipped
+    at the leaf's end) — the index the device gather kernel consumes."""
+    from repro.kernels.checksum.ref import TILE_BYTES
+    idx = []
+    for off, n in ranges:
+        t0 = off // TILE_BYTES
+        idx.extend(range(t0, t0 + (-(-(n) // TILE_BYTES))))
+    return np.asarray(idx, np.int32)
+
+
+def gather_host(flat: Dict[str, Any], plan: DeltaPlan
+                ) -> Dict[str, GatherLeaf]:
+    """Gathered representation of `plan` over host-resident leaves: the
+    run views are zero-copy slices of the arrays themselves. The worker's
+    buddy PUSH_CKPT frames and the CPU-backend file path both ride
+    this."""
+    out: Dict[str, GatherLeaf] = {}
     for k in flat:
         if k not in plan.entries:
             continue
-        v = _leaf_bytes(flat[k])
-        views[k] = v
+        v = flat[k]
+        bv = _leaf_bytes(v)
+        dt = str(getattr(v, "dtype", np.asarray(v).dtype))
         rng = plan.entries[k]
-        full = rng is None
-        entries.append({"path": k,
-                        "dtype": str(getattr(flat[k], "dtype",
-                                             np.asarray(flat[k]).dtype)),
-                        "shape": list(np.shape(flat[k])),
-                        "full": full,
-                        "ranges": [[0, int(v.size), 0]] if full
-                        else [[o, n, 0] for o, n in rng]})
+        if rng is None:
+            out[k] = GatherLeaf(dt, tuple(np.shape(v)), True,
+                                [(0, int(bv.size), bv)])
+        else:
+            out[k] = GatherLeaf(dt, tuple(np.shape(v)), False,
+                                [(o, n, bv[o:o + n]) for o, n in rng])
+    return out
+
+
+def _delta_layout_gathered(gathered: Dict[str, GatherLeaf],
+                           base_step: int, extra: dict | None):
+    """(prefix, [(uint8_view, frame_off)], frame_size) for a gathered
+    delta. Each placed view is exactly one run's bytes."""
+    entries = []
+    for k, g in gathered.items():
+        entries.append({"path": k, "dtype": g.dtype,
+                        "shape": list(g.shape), "full": g.full,
+                        "ranges": [[o, n, 0] for o, n, _ in g.runs]})
     while True:     # same offset/header fixpoint as _layout
         header = json.dumps({"version": VERSION, "kind": "delta",
                              "base": {"step": int(base_step)},
@@ -405,37 +454,55 @@ def _delta_layout(flat: Dict[str, Any], plan: DeltaPlan, base_step: int,
     data_start = _align(_FIXED.size + len(header))
     prefix = _FIXED.pack(DELTA_MAGIC, len(header), 0) + header
     prefix += b"\0" * (data_start - len(prefix))
-    placed = [(views[e["path"]], r[0], r[1], r[2])
-              for e in entries for r in e["ranges"]]
+    placed = [(run[2], r[2])
+              for e, (_, g) in zip(entries, gathered.items())
+              for run, r in zip(g.runs, e["ranges"])]
     return prefix, placed, off
+
+
+def to_delta_bytes_gathered(gathered: Dict[str, GatherLeaf], *,
+                            base_step: int,
+                            extra: dict | None = None) -> bytes:
+    prefix, placed, size = _delta_layout_gathered(gathered, base_step,
+                                                  extra)
+    buf = bytearray(size)
+    buf[:len(prefix)] = prefix
+    mv = memoryview(buf)
+    for view, frame_off in placed:
+        mv[frame_off:frame_off + view.size] = memoryview(view)
+    return bytes(buf)
+
+
+def write_delta_file_gathered(path: str, gathered: Dict[str, GatherLeaf],
+                              *, base_step: int,
+                              extra: dict | None = None) -> int:
+    prefix, placed, size = _delta_layout_gathered(gathered, base_step,
+                                                  extra)
+    with open(path, "wb") as f:
+        f.write(prefix)
+        pos = len(prefix)
+        for view, frame_off in placed:
+            if frame_off > pos:
+                f.write(b"\0" * (frame_off - pos))
+            f.write(memoryview(view))
+            pos = frame_off + view.size
+        if size > pos:
+            f.write(b"\0" * (size - pos))
+    return size
 
 
 def to_delta_bytes(flat: Dict[str, Any], plan: DeltaPlan, *,
                    base_step: int, extra: dict | None = None) -> bytes:
-    prefix, placed, size = _delta_layout(flat, plan, base_step, extra)
-    buf = bytearray(size)
-    buf[:len(prefix)] = prefix
-    mv = memoryview(buf)
-    for view, leaf_off, n, frame_off in placed:
-        mv[frame_off:frame_off + n] = memoryview(view[leaf_off:
-                                                      leaf_off + n])
-    return bytes(buf)
+    """Delta frame from full host leaves — gathers (zero-copy slices)
+    then serializes; kept as the convenience entry point."""
+    return to_delta_bytes_gathered(gather_host(flat, plan),
+                                   base_step=base_step, extra=extra)
 
 
 def write_delta_file(path: str, flat: Dict[str, Any], plan: DeltaPlan, *,
                      base_step: int, extra: dict | None = None) -> int:
-    prefix, placed, size = _delta_layout(flat, plan, base_step, extra)
-    with open(path, "wb") as f:
-        f.write(prefix)
-        pos = len(prefix)
-        for view, leaf_off, n, frame_off in placed:
-            if frame_off > pos:
-                f.write(b"\0" * (frame_off - pos))
-            f.write(memoryview(view[leaf_off:leaf_off + n]))
-            pos = frame_off + n
-        if size > pos:
-            f.write(b"\0" * (size - pos))
-    return size
+    return write_delta_file_gathered(path, gather_host(flat, plan),
+                                     base_step=base_step, extra=extra)
 
 
 def _parse_delta(buf) -> Tuple[dict, Any]:

@@ -89,6 +89,47 @@ def tile_checksum_kernel(words, *, interpret: bool = False):
     )(w2)
 
 
+def _gather_tiles_kernel(idx_ref, in_ref, out_ref):
+    """Grid step i copies the one (8, 128) tile block the scalar-
+    prefetched index map already DMA'd into VMEM — tile idx[i] of the
+    source stream lands at row i of the compact output."""
+    out_ref[...] = in_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_tiles_kernel(tiles, idx, *, interpret: bool = False):
+    """tiles: (nt*8, 128) uint32 word rows; idx: (k,) int32 ascending
+    tile indices → (k, TILE_WORDS) uint32 compact dirty-tile buffer.
+
+    The dirty-tile indices are scalar-prefetched so the input BlockSpec's
+    index map can read them: grid step i DMAs exactly the (8, 128) block
+    of tile idx[i] from HBM and streams it to output block i. Only the
+    gathered tiles ever move — the D2H copy that follows is O(dirt), not
+    O(state).
+    """
+    from .ref import TILE_WORDS
+    rows_per_tile = TILE_WORDS // _COLS              # 8
+    k = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((rows_per_tile, _COLS),
+                               lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((rows_per_tile, _COLS),
+                               lambda i, idx_ref: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _gather_tiles_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k * rows_per_tile, _COLS),
+                                       jnp.uint32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(idx, tiles)
+    return out.reshape(k, TILE_WORDS)
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def checksum_kernel(words, *, block_rows: int = 8, interpret: bool = False):
     """words: 1-D uint32 → (s0, s1) uint32 device scalars."""

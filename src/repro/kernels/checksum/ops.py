@@ -125,6 +125,39 @@ def tile_checksums_device(x, *, interpret: bool = False):
     return _tilesum_jnp(words)
 
 
+@jax.jit
+def _gather_jnp(tiles2d, idx):
+    return jnp.take(tiles2d, idx, axis=0)
+
+
+def _device_tiles2d(x) -> jax.Array:
+    """Device array → its (n_tiles, TILE_WORDS) uint32 tile matrix,
+    trailing partial tile zero-padded (same padding as the digest path,
+    so tile t here is byte-identical to digest row t's input)."""
+    words = _device_words(jnp.asarray(x))
+    nt = max(1, -(-words.size // TILE_WORDS))
+    return jnp.pad(words, (0, nt * TILE_WORDS - words.size)) \
+        .reshape(nt, TILE_WORDS)
+
+
+def gather_tiles_device(x, idx, *, interpret: bool = False) -> jax.Array:
+    """Gather the 4 KB tiles named by `idx` (host int array, ascending)
+    from a device array into one compact (len(idx), TILE_WORDS) uint32
+    *device* buffer — the delta checkpointer's dirty-tile gather. The
+    caller kicks copy_to_host_async on the result, so the D2H transfer
+    moves only the dirty tiles (plus 12 B/tile of digest rows), never
+    the full state. Parity with `gather_tiles_ref` is tested.
+    """
+    tiles2d = _device_tiles2d(x)
+    idx = jnp.asarray(np.asarray(idx, np.int32))
+    if interpret or (jax.default_backend() == "tpu"
+                     and tiles2d.size >= _PALLAS_MIN_WORDS):
+        from .kernel import gather_tiles_kernel
+        return gather_tiles_kernel(
+            tiles2d.reshape(-1, 128), idx, interpret=interpret)
+    return _gather_jnp(tiles2d, idx)
+
+
 def tile_checksums(arr) -> np.ndarray:
     """Type-dispatching per-tile digest entry point (host ndarray out):
     device arrays stay on device for the reduction, host arrays go through

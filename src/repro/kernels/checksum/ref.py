@@ -146,6 +146,21 @@ def tile_checksums_ref(arr: np.ndarray) -> np.ndarray:
     return out
 
 
+def gather_tiles_ref(arr: np.ndarray, idx) -> np.ndarray:
+    """Gather the 4 KB tiles named by `idx` (ascending tile indices) from
+    `arr`'s byte stream into one compact (len(idx), TILE_WORDS) uint32
+    buffer, trailing partial tile zero-padded — the numpy oracle for the
+    on-device dirty-tile gather (`ops.gather_tiles_device`)."""
+    b = byte_view(np.asarray(arr))
+    idx = np.asarray(idx, np.int64)
+    nt = n_tiles(b.size)
+    pad = nt * TILE_BYTES - b.size
+    if pad:
+        b = np.concatenate([b, np.zeros(pad, np.uint8)])
+    tiles = b.view(np.uint32).reshape(nt, TILE_WORDS)
+    return tiles[idx]
+
+
 def scalar_from_tiles(tiles: np.ndarray) -> tuple[int, int]:
     """Fold per-tile digests into the whole-stream (s0, s1) pair (the mix
     column is dirtiness-only and does not participate).

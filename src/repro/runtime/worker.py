@@ -601,8 +601,12 @@ class Worker:
         kind, plan, tiles, base = self._chain.decide(flat, step)
         self._chain.commit(step, tiles, kind)
         if kind == "delta":
-            return serde.to_delta_bytes(flat, plan, base_step=base,
-                                        extra={"step": step})
+            # gathered representation: the frame is assembled from
+            # zero-copy slices of the dirty ranges only — same bytes as
+            # the full-drain path, without re-touching clean pages
+            return serde.to_delta_bytes_gathered(
+                serde.gather_host(flat, plan), base_step=base,
+                extra={"step": step})
         return serde.to_bytes(flat, extra={"step": step})
 
     def _compose_state(self, frames: dict[int, bytes], step: int

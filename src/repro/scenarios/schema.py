@@ -53,6 +53,8 @@ POINTS = (
     "ckpt.file.shard",           # one shard's bytes written
     "ckpt.file.pre_commit",      # shards + manifest down, COMMITTED not
     "ckpt.file.compose",         # applying a delta frame during load
+    "ckpt.file.rebase.begin",    # background re-base starting its compose
+    "ckpt.file.rebase.pre_commit",  # re-based frame staged, not renamed
 )
 
 CASCADE_POINTS = tuple(p for p in POINTS if p.startswith("worker.recovery."))

@@ -53,6 +53,12 @@ class TrainConfig:
     ckpt_shards: int = 4
     # K>1: full file snapshot every K-th save, dirty-tile deltas between
     ckpt_delta_every: int = 0
+    # N>0: background re-base rewrites a delta chain as a fresh base once
+    # it reaches N links, bounding restore cost so delta_every can be
+    # raised aggressively
+    ckpt_rebase_after: int = 0
+    # device dirty-tile gather for delta saves: auto/on/off
+    ckpt_gather: str = "auto"
     async_file_ckpt: bool = False
     strategy: str = "reinit"
     # logical deployment (the paper's root/daemon/rank tree)
@@ -101,9 +107,10 @@ class Trainer:
             if self.strategy.key == "shrink" else None
         self.policy = CheckpointPolicy(every_steps=tc.ckpt_every,
                                        async_file=tc.async_file_ckpt)
-        self.file_ckpt = FileCheckpointer(tc.ckpt_dir,
-                                          n_shards=tc.ckpt_shards,
-                                          delta_every=tc.ckpt_delta_every)
+        self.file_ckpt = FileCheckpointer(
+            tc.ckpt_dir, n_shards=tc.ckpt_shards,
+            delta_every=tc.ckpt_delta_every, gather=tc.ckpt_gather,
+            rebase_after=tc.ckpt_rebase_after)
         # buddy memory checkpoint: (step, state_copy, buddy_copy)
         self.mem_ckpt: Optional[tuple[int, Any, Any]] = None
         # replica strategy: the victim's warm shadow — a device copy of

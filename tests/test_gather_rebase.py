@@ -1,0 +1,394 @@
+"""Device dirty-tile gather + background delta re-base.
+
+The load-bearing properties:
+
+  - the gather kernel (ref / jnp / Pallas-interpret) is an exact tile
+    permutation: gathered bytes are the dirty tiles, bit-for-bit;
+  - a delta frame built from gathered tiles is byte-identical to one
+    built from the full host state — readers cannot tell them apart;
+  - dirtiness detection is sound against uniform scalings: fp32 `x *= 2`
+    shifts every word of a tile by the same amount, which aliases to
+    zero in both linear sum columns (1024 * 2^23 ≡ 0 mod 2^32), so only
+    the nonlinear mix column flags the tile;
+  - a delta save with the gather on moves D2H bytes proportional to
+    dirt, not state size;
+  - a background re-base compacts a delta chain into a self-contained
+    base without changing a single restored bit, and a crash at ANY of
+    its hook points leaves the old chain authoritative and loadable.
+"""
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+import repro.checkpoint
+from repro.checkpoint import FileCheckpointer, serde
+from repro.kernels.checksum.ref import (TILE_BYTES, TILE_WORDS,
+                                        gather_tiles_ref,
+                                        tile_checksums_ref)
+from repro.scenarios import hooks
+
+SRC = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(repro.checkpoint.__file__))))
+
+
+def _rng_state(seed=0, leaves=3, tiles_per_leaf=8):
+    rng = np.random.default_rng(seed)
+    n = tiles_per_leaf * TILE_BYTES // 4
+    return {f"w{i}": jnp.asarray(
+        rng.standard_normal(n).astype(np.float32))
+        for i in range(leaves)}
+
+
+def _dirty(state, keys, frac=0.05, bump=1.0001):
+    out = dict(state)
+    for k in keys:
+        a = np.asarray(state[k]).copy()
+        w = max(1, int(a.size * frac))
+        a[:w] *= bump
+        out[k] = jnp.asarray(a)
+    return out
+
+
+# --------------------------------------------------------- gather kernel
+
+@pytest.mark.parametrize("dtype,n", [
+    (np.float32, 5 * TILE_WORDS + 7),      # partial trailing tile
+    (np.uint8, 3 * TILE_BYTES),            # exact tiles, sub-word dtype
+    (np.float16, 2 * TILE_WORDS),
+])
+def test_gather_tiles_parity(dtype, n):
+    from repro.kernels.checksum.kernel import gather_tiles_kernel
+    from repro.kernels.checksum.ops import (_device_tiles2d,
+                                            gather_tiles_device)
+    rng = np.random.default_rng(1)
+    a = (rng.standard_normal(n) * 10).astype(dtype)
+    nt = tile_checksums_ref(a).shape[0]
+    idx = np.asarray(sorted(rng.choice(nt, size=min(3, nt),
+                                       replace=False)), np.int32)
+    ref = gather_tiles_ref(a, idx)
+    dev = np.asarray(gather_tiles_device(jnp.asarray(a), idx))
+    assert np.array_equal(ref, dev)
+    tiles2d = _device_tiles2d(jnp.asarray(a)).reshape(-1, 128)
+    pallas = np.asarray(gather_tiles_kernel(tiles2d, jnp.asarray(idx),
+                                            interpret=True))
+    assert np.array_equal(ref, pallas)
+
+
+def test_gathered_frame_bit_identical_to_host_frame():
+    """A delta frame assembled from device-gathered tile buffers must be
+    byte-identical to one assembled from full host arrays — the reader
+    cannot tell which path produced it."""
+    prev = {k: np.asarray(v) for k, v in _rng_state(2).items()}
+    cur = {k: v.copy() for k, v in prev.items()}
+    cur["w0"][100:300] += 1.0                       # 1 dirty tile
+    cur["w1"][0:TILE_BYTES // 4 * 3] *= 2.0         # 3-tile run
+    plan = serde.delta_plan(cur, serde.tile_digests(prev))
+    host_frame = serde.to_delta_bytes(cur, plan, base_step=1)
+    # rebuild the same frame from gathered tile buffers (the device path)
+    gathered = {}
+    for k, rng_ in plan.entries.items():
+        v = cur[k]
+        if rng_ is None:
+            bv = v.reshape(-1).view(np.uint8)
+            gathered[k] = serde.GatherLeaf(str(v.dtype), v.shape, True,
+                                           [(0, bv.size, bv)])
+            continue
+        buf = gather_tiles_ref(v, serde.range_tiles(rng_))
+        bv = buf.reshape(-1).view(np.uint8)
+        runs, pos = [], 0
+        for o, n in rng_:
+            runs.append((o, n, bv[pos:pos + n]))
+            pos += (-(-n // TILE_BYTES)) * TILE_BYTES
+        gathered[k] = serde.GatherLeaf(str(v.dtype), v.shape, False, runs)
+    dev_frame = serde.to_delta_bytes_gathered(gathered, base_step=1)
+    assert host_frame == dev_frame
+
+
+# --------------------------------------- dirtiness vs uniform scalings
+
+def _scaling_aliases_linear_columns(tile: np.ndarray,
+                                    scaled: np.ndarray) -> bool:
+    """True when the scaling is invisible to both linear sum columns."""
+    ta, tb = tile_checksums_ref(tile), tile_checksums_ref(scaled)
+    return bool(np.all(ta[:, :2] == tb[:, :2]))
+
+
+def test_fp32_times_two_aliases_linear_sums_but_mix_catches_it():
+    # every word is a same-exponent float: *2 adds exactly 2^23 to each
+    # of the 1024 words of the tile, and 1024 * 2^23 = 2^33 ≡ 0 mod 2^32
+    # in s0; s1's weighted sum is 2^23 * 1024*1025/2 = 1025 * 2^32 ≡ 0.
+    # A linear-only digest would call this tile clean.
+    a = np.full(TILE_WORDS, 1.5, np.float32)
+    b = a * 2.0
+    assert _scaling_aliases_linear_columns(a, b)     # the trap is real
+    ta, tb = tile_checksums_ref(a), tile_checksums_ref(b)
+    assert np.any(ta[:, 2] != tb[:, 2])              # mix column differs
+    plan = serde.delta_plan({"x": b},
+                            serde.tile_digests({"x": a}))
+    assert plan.entries["x"] is not None             # flagged dirty
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2.0, 0.5, 4.0]),
+       st.integers(1, 4))
+def test_uniform_scaling_flags_dirty_tiles(seed, scale, tiles):
+    _check_uniform_scaling(seed, scale, tiles)
+
+
+@pytest.mark.parametrize("seed,scale,tiles",
+                         [(0, 2.0, 1), (1, 0.5, 2), (7, 4.0, 3)])
+def test_uniform_scaling_flags_dirty_tiles_seeded(seed, scale, tiles):
+    _check_uniform_scaling(seed, scale, tiles)
+
+
+def _check_uniform_scaling(seed, scale, tiles):
+    """Scaling any prefix of same-exponent fp32 tiles must mark exactly
+    the touched tiles dirty — and the composed delta restores bit-exact."""
+    rng = np.random.default_rng(seed)
+    n = 4 * TILE_WORDS
+    # same-exponent mantissas: the adversarial case for linear sums
+    a = (1.0 + rng.random(n, np.float32) * 0.5).astype(np.float32)
+    b = a.copy()
+    b[:tiles * TILE_WORDS] *= np.float32(scale)
+    prev_tiles = serde.tile_digests({"x": a})
+    plan = serde.delta_plan({"x": b}, prev_tiles)
+    assert plan.entries.get("x") is not None
+    covered = set(serde.range_tiles(plan.entries["x"]).tolist())
+    assert covered == set(range(tiles))              # exact localization
+    restored = dict(serde.apply_delta(
+        {"x": a.copy()},
+        np.frombuffer(serde.to_delta_bytes({"x": b}, plan, base_step=0),
+                      np.uint8), set())[2])
+    assert np.asarray(restored["x"]).tobytes() == b.tobytes()
+
+
+# ------------------------------------------------- FileCheckpointer paths
+
+def test_sync_save_uses_device_digests(monkeypatch, tmp_path):
+    """satellite: a sync save must ride the same on-device digest path
+    as async — if any leaf fell back to host hashing, this bombs."""
+    import repro.checkpoint.file_ckpt as fc
+
+    def bomb(_):
+        raise AssertionError("host leaf_digest called on device path")
+
+    monkeypatch.setattr(fc, "leaf_digest", bomb)
+    state = _rng_state(3)
+    ck = FileCheckpointer(str(tmp_path), delta_every=4, gather="on",
+                          n_shards=2)
+    ck.save(1, state, async_=False)
+    ck.save(2, _dirty(state, ["w0"]), async_=False)
+    assert ck.last_write["kind"] == "delta"
+    ck.close()
+    monkeypatch.undo()
+    ck2 = FileCheckpointer(str(tmp_path))
+    step, st_ = ck2.load_latest(verify=True)
+    assert step == 2
+    ck2.close()
+
+
+def test_npz_delta_every_forced_full(tmp_path):
+    """satellite: npz shards are always full archives — a delta_every
+    request must be coerced to full frames with no chain commits."""
+    state = {k: np.asarray(v) for k, v in _rng_state(4).items()}
+    ck = FileCheckpointer(str(tmp_path), fmt="npz", delta_every=8)
+    assert ck.delta_every == 0 and not ck._delta_on
+    for s in (1, 2, 3):
+        ck.save(s, state)
+        assert ck.last_write["kind"] == "full"
+        assert ck._manifest(s).kind == "full"
+    assert ck._chain.prev is None        # planner never engaged
+    step, st_ = ck.load_latest(verify=True)
+    assert step == 3
+    assert all(np.array_equal(np.asarray(st_[k]), state[k])
+               for k in state)
+    ck.close()
+
+
+def test_gather_e2e_bit_exact_and_d2h_proportional(tmp_path):
+    """End-to-end over mixed sync/async saves with the gather forced on:
+    every step restores bit-exactly, and a sparse-dirty delta save moves
+    D2H bytes <= 0.25x of a full-state drain (the acceptance bound)."""
+    ck = FileCheckpointer(str(tmp_path), keep=20, n_shards=2,
+                          delta_every=8, gather="on")
+    state = _rng_state(5, tiles_per_leaf=16)
+    hist = {}
+    for s in range(1, 7):
+        if s > 1:
+            state = _dirty(state, [f"w{s % 3}"], frac=0.05)
+        ck.save(s, state, async_=(s % 2 == 0))
+        hist[s] = {k: np.asarray(v).copy() for k, v in state.items()}
+    ck.wait()
+    full_d2h = sum(v.nbytes for v in state.values())
+    assert ck.last_write["kind"] == "delta"
+    assert ck.last_write["d2h_bytes"] <= 0.25 * full_d2h
+    for s in ck.steps():
+        _, st_ = ck.load(s, verify=True)
+        for k in hist[s]:
+            assert np.asarray(st_[k]).tobytes() == hist[s][k].tobytes(), \
+                (s, k)
+    ck.close()
+
+
+# ---------------------------------------------------------------- rebase
+
+def _chain_with_rebase(tmp_path, *, rebase_after, steps=6, keep=20):
+    ck = FileCheckpointer(str(tmp_path), keep=keep, n_shards=2,
+                          delta_every=32, gather="on",
+                          rebase_after=rebase_after)
+    state = _rng_state(6)
+    hist = {}
+    for s in range(1, steps + 1):
+        if s > 1:
+            state = _dirty(state, [f"w{s % 3}"])
+        ck.save(s, state)
+        hist[s] = {k: np.asarray(v).copy() for k, v in state.items()}
+    return ck, state, hist
+
+
+def test_rebase_compacts_chain_and_restores_bit_exact(tmp_path):
+    ck, state, hist = _chain_with_rebase(tmp_path, rebase_after=3)
+    ck.wait()
+    assert ck.last_rebase.get("ok"), ck.last_rebase
+    tip = ck.last_rebase["step"]
+    # the rebased step now reads back as a self-contained full frame
+    assert ck._manifest(tip).kind == "full"
+    assert os.path.exists(os.path.join(ck._step_dir(tip), "rebase",
+                                       "COMMITTED"))
+    links, _ = ck._chain_cost(ck.steps()[-1])
+    assert links < 3                     # chain cost reset at the tip
+    for s in ck.steps():                 # every step still bit-exact
+        _, st_ = ck.load(s, verify=True)
+        for k in hist[s]:
+            assert np.asarray(st_[k]).tobytes() == hist[s][k].tobytes()
+    ck.close()
+
+
+def test_rebase_releases_old_anchor_to_gc(tmp_path):
+    """Once the re-based frame commits, the old chain anchor is no
+    longer in any kept chain's closure — the normal GC reaps it."""
+    ck, state, hist = _chain_with_rebase(tmp_path, rebase_after=2,
+                                         steps=4, keep=3)
+    ck.wait()
+    assert ck.last_rebase.get("ok"), ck.last_rebase
+    for s in (5, 6, 7):                  # age the window past step 1
+        state = _dirty(state, ["w0"])
+        ck.save(s, state)
+        hist[s] = {k: np.asarray(v).copy() for k, v in state.items()}
+    ck.wait()
+    kept = ck.steps()
+    assert 1 not in kept                 # anchor reaped post-rebase
+    for s in kept[-3:]:
+        _, st_ = ck.load(s, verify=True)
+        for k in hist[s]:
+            assert np.asarray(st_[k]).tobytes() == hist[s][k].tobytes()
+    ck.close()
+
+
+@pytest.mark.parametrize("point", ["ckpt.file.rebase.begin",
+                                   "ckpt.file.rebase.pre_commit"])
+def test_rebase_crash_at_hook_leaves_chain_authoritative(tmp_path, point):
+    """An exception at either re-base hook soft-fails the compaction:
+    the old chain stays authoritative and bit-exact, and a retried
+    re-base (same step) cleans the stale staging dir and succeeds."""
+
+    def injector(p, **ctx):
+        if p == point:
+            raise RuntimeError(f"injected at {p}")
+
+    hooks.install(injector)
+    try:
+        ck, state, hist = _chain_with_rebase(tmp_path, rebase_after=3)
+        ck.wait()
+        assert ck.last_rebase.get("ok") is False
+        tip = ck.last_rebase["step"]
+        assert ck._manifest(tip).kind == "delta"     # nothing committed
+        for s in ck.steps():
+            _, st_ = ck.load(s, verify=True)
+            for k in hist[s]:
+                assert np.asarray(st_[k]).tobytes() \
+                    == hist[s][k].tobytes()
+    finally:
+        hooks.clear()
+    # retry the same step: stale rebase.tmp_* from the aborted attempt
+    # is swept and the compaction lands
+    ck._rebase(tip)
+    assert ck._manifest(tip).kind == "full"
+    assert not [n for n in os.listdir(ck._step_dir(tip))
+                if n.startswith("rebase.tmp")]
+    _, st_ = ck.load(tip, verify=True)
+    for k in hist[tip]:
+        assert np.asarray(st_[k]).tobytes() == hist[tip][k].tobytes()
+    ck.close()
+
+
+_CHILD = r"""
+import os, signal, sys
+import numpy as np
+import jax.numpy as jnp
+from repro.checkpoint import FileCheckpointer
+from repro.scenarios import hooks
+
+d, side = sys.argv[1], sys.argv[2]
+rng = np.random.default_rng(0)
+state = {f"w{i}": jnp.asarray(rng.standard_normal(8192).astype(np.float32))
+         for i in range(3)}
+ck = FileCheckpointer(d, keep=20, n_shards=2, delta_every=32,
+                      gather="on")
+hist = {}
+for s in range(1, 7):
+    if s > 1:
+        k = f"w{s % 3}"
+        a = np.asarray(state[k]).copy(); a[:100] *= 1.0001
+        state[k] = jnp.asarray(a)
+    ck.save(s, state)
+    hist[s] = {k: np.asarray(v) for k, v in state.items()}
+np.savez(side, **{f"{s}/{k}": v for s, fl in hist.items()
+                  for k, v in fl.items()})
+
+def die(p, **ctx):
+    if p == "ckpt.file.rebase.pre_commit":
+        os.kill(os.getpid(), signal.SIGKILL)
+
+hooks.install(die)
+ck._rebase(6)                 # staged frame fires the hook -> SIGKILL
+"""
+
+
+def test_rebase_sigkill_mid_stage_then_recover(tmp_path):
+    """SIGKILL the whole process while the re-based frame is staged but
+    not committed: a fresh process must see the old chain bit-exactly,
+    and its own re-base of the same directory must succeed."""
+    d = str(tmp_path / "ckpt")
+    side = str(tmp_path / "expected.npz")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (SRC, env.get("PYTHONPATH")) if p)
+    proc = subprocess.run([sys.executable, "-c", _CHILD, d, side],
+                          env=env, capture_output=True, timeout=300)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr.decode()
+    expected = dict(np.load(side).items())
+    ck = FileCheckpointer(d, keep=20, n_shards=2, delta_every=32,
+                          gather="on", rebase_after=3)
+    steps = ck.steps()
+    assert steps == list(range(1, 7))
+    for s in steps:
+        _, st_ = ck.load(s, verify=True)
+        for k in st_:
+            assert np.asarray(st_[k]).tobytes() \
+                == expected[f"{s}/{k}"].tobytes(), (s, k)
+    ck._rebase(steps[-1])                # survivor compacts the chain
+    assert ck._manifest(steps[-1]).kind == "full"
+    _, st_ = ck.load(steps[-1], verify=True)
+    for k in st_:
+        assert np.asarray(st_[k]).tobytes() \
+            == expected[f"{steps[-1]}/{k}"].tobytes()
+    ck.close()
