@@ -28,6 +28,7 @@ REGRESSION_TOLERANCE = 0.20
 def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
                      growback: dict | None = None,
                      failover: dict | None = None,
+                     serving: dict | None = None,
                      path: str = BENCH_JSON) -> bool:
     """Returns True only when the file was actually (re)written."""
     if not ckpt_io:
@@ -90,6 +91,32 @@ def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
             prior = json.load(f).get("failover")
         if prior:
             doc["failover"] = prior
+    if serving:
+        # fault-tolerant serving under live load: the client-visible
+        # recovery gap per strategy (counts are deterministic — any
+        # drift is a semantics change, not noise)
+        doc["serving"] = {
+            "n_slots": serving.get("n_slots"),
+            "tokens_total": serving.get("tokens_total"),
+            "s_per_token": serving.get("s_per_token"),
+            "reinit": {
+                "tokens_to_first_recovered_token":
+                    serving["reinit"]["tokens_to_first_recovered_token"],
+                "replayed_tokens": serving["reinit"]["replayed_tokens"],
+                "requests_dropped": serving["reinit"]["requests_dropped"]},
+            "replica": {
+                "tokens_to_first_recovered_token":
+                    serving["replica"]["tokens_to_first_recovered_token"],
+                "replayed_tokens": serving["replica"]["replayed_tokens"],
+                "requests_dropped":
+                    serving["replica"]["requests_dropped"]},
+            "ttfrt_speedup": serving.get("ttfrt_speedup"),
+        }
+    elif os.path.exists(path):
+        with open(path) as f:
+            prior = json.load(f).get("serving")
+        if prior:
+            doc["serving"] = prior
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -114,6 +141,9 @@ def check_regression(path: str = BENCH_JSON,
     gate_growback = bool(committed.get("growback", {}).get("e2e_s"))
     gate_failover = bool(committed.get("failover", {}).get("replica_e2e_s"))
     gate_rebase = bool(committed.get("rebase", {}).get("rebased_read_s"))
+    gate_serving = bool((committed.get("serving") or {})
+                        .get("reinit", {})
+                        .get("tokens_to_first_recovered_token"))
 
     def measure() -> dict:
         ckpt_io = checkpoint_bench.bench_file_io()
@@ -148,6 +178,23 @@ def check_regression(path: str = BENCH_JSON,
     fresh = {k: min((p[k] for p in passes if p[k] is not None),
                     default=None) for k in passes[0]}
     failures = 0
+    if gate_serving:
+        # serving gates on deterministic token COUNTS (seeded load,
+        # greedy decode) — one pass suffices, there is no timing noise
+        from benchmarks import serve_bench
+        sv = serve_bench.bench_serving(report=lambda *_: None)
+        for strat in ("reinit", "replica"):
+            now = sv[strat]["tokens_to_first_recovered_token"]
+            base = committed["serving"][strat][
+                "tokens_to_first_recovered_token"]
+            dropped = sv[strat]["requests_dropped"]
+            ok = (dropped == 0 and now is not None
+                  and now <= base * (1.0 + tolerance))
+            if not ok:
+                failures += 1
+            print(f"regress_serving_{strat}_ttfrt,{-1 if now is None else now},"
+                  f"base={base};dropped={dropped};"
+                  f"{'OK' if ok else 'REGRESSED'}")
     for (group, key), now in fresh.items():
         base = (committed.get(group) or {}).get(key)
         if base is None or now is None or base <= 0:
@@ -222,8 +269,25 @@ def main() -> None:
             failures += 1
             print("bench_failover_FAILED,0,error")
             traceback.print_exc()
+    # serving recovery: in-process (no real process tree), so it runs in
+    # --fast too; the nightly --large-state adds the wide-slot variant
+    serving = None
+    from benchmarks import serve_bench
     try:
-        if write_bench_json(ckpt_io, e2e, growback, failover):
+        serving = serve_bench.run(report=print)
+    except Exception:                     # noqa: BLE001
+        failures += 1
+        print("bench_serving_FAILED,0,error")
+        traceback.print_exc()
+    if large:
+        try:
+            serve_bench.run_wide(report=print)
+        except Exception:                 # noqa: BLE001
+            failures += 1
+            print("bench_serving_wide_FAILED,0,error")
+            traceback.print_exc()
+    try:
+        if write_bench_json(ckpt_io, e2e, growback, failover, serving):
             print(f"bench_json_written,0,{BENCH_JSON}")
         else:
             print("bench_json_skipped,0,checkpoint_bench_failed")

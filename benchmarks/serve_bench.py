@@ -1,0 +1,110 @@
+"""Fault-tolerant serving under live load: recovery cost per strategy.
+
+Drives a two-rank `ServeCluster` through the `serve-rank-loss` shape —
+a rank killed mid-decode under sustained open-loop load — once per
+recovery strategy, and measures what a *serving* system actually loses
+to a failure:
+
+  tokens-to-first-recovered-token   tokens the surviving ranks deliver
+                                    between the kill and the first new
+                                    token from a request the dead rank
+                                    owned (the client-visible gap);
+  replayed (suppressed) tokens      decode work recomputed but never
+                                    re-delivered — reinit's replay tax;
+  requests dropped                  must be 0 for both strategies;
+  wall seconds per delivered token  fault-free baseline throughput.
+
+The counts are deterministic (seeded load, greedy decode), which makes
+them ideal regression gates: any drift means the recovery semantics
+changed, not the machine got slower.
+"""
+from __future__ import annotations
+
+import time
+
+_SETUP = None
+
+
+def _setup():
+    global _SETUP
+    if _SETUP is None:
+        import jax
+        from repro.configs import get_config, reduced
+        from repro.models.model import Model
+        cfg = reduced(get_config("qwen2-7b"))
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _SETUP = (model, params)
+    return _SETUP
+
+
+def bench_serving(report=print, *, world: int = 2, n_slots: int = 4,
+                  max_len: int = 64, rounds: int = 8, per_round: int = 1,
+                  max_new: int = 5, seed: int = 7,
+                  fault_round: int = 4, label: str = "serve") -> dict:
+    from repro.serve import LoadGen, ServeCluster
+    model, params = _setup()
+
+    def load():
+        return LoadGen(world=world, rounds=rounds, per_round=per_round,
+                       max_new=max_new, seed=seed)
+
+    out: dict = {"n_slots": n_slots, "world": world}
+
+    # fault-free baseline: reference transcripts + steady-state rate
+    base = ServeCluster(model, params, world=world, n_slots=n_slots,
+                        max_len=max_len)
+    t0 = time.perf_counter()
+    m0 = base.run(load(), rounds=rounds)
+    base_s = time.perf_counter() - t0
+    ref = base.transcripts()
+    out["tokens_total"] = m0["tokens_delivered"]
+    out["s_per_token"] = base_s / max(1, m0["tokens_delivered"])
+    report(f"{label}_faultfree,{out['s_per_token'] * 1e6:.0f},"
+           f"tokens={out['tokens_total']}")
+
+    for strategy in ("reinit", "replica"):
+        c = ServeCluster(model, params, world=world, n_slots=n_slots,
+                         max_len=max_len, strategy=strategy)
+        t0 = time.perf_counter()
+        m = c.run(load(), rounds=rounds,
+                  fault={"round": fault_round, "rank": 1,
+                         "point": "serve.decode.step"})
+        wall = time.perf_counter() - t0
+        kill = m["kills"][0]
+        identical = c.transcripts() == ref
+        out[strategy] = {
+            "tokens_to_first_recovered_token":
+                kill["tokens_to_first_recovered_token"],
+            "rounds_down": kill["rounds_down"],
+            "replayed_tokens": kill.get("replayed_tokens", 0),
+            "requests_dropped": m["requests_dropped"],
+            "bit_identical": identical,
+            "wall_s": wall,
+        }
+        report(f"{label}_{strategy},{wall * 1e6:.0f},"
+               f"ttfrt={kill['tokens_to_first_recovered_token']};"
+               f"dropped={m['requests_dropped']};"
+               f"identical={identical}")
+
+    r, p = out["reinit"], out["replica"]
+    if p["tokens_to_first_recovered_token"]:
+        out["ttfrt_speedup"] = (r["tokens_to_first_recovered_token"]
+                                / p["tokens_to_first_recovered_token"])
+        report(f"{label}_ttfrt_speedup,0,x={out['ttfrt_speedup']:.2f}")
+    return out
+
+
+def run(report=print) -> dict:
+    return bench_serving(report)
+
+
+def run_wide(report=print) -> dict:
+    """Nightly high-slot-count variant: a wide slot pool under heavier
+    open-loop load (the serve-rank-loss-wide catalog cell's shape)."""
+    return bench_serving(report, n_slots=16, rounds=10, per_round=3,
+                         fault_round=5, label="serve_wide")
+
+
+if __name__ == "__main__":
+    run()

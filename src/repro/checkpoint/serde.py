@@ -505,6 +505,56 @@ def write_delta_file(path: str, flat: Dict[str, Any], plan: DeltaPlan, *,
                                      base_step=base_step, extra=extra)
 
 
+class FramePublisher:
+    """One-call publish side of a delta stream: decide base-vs-delta via
+    a ChainPlanner, gather only the dirty byte runs, encode the frame,
+    and advance the chain. The subscribe side is `composable_steps` +
+    `compose`, unchanged.
+
+    Shared by every in-memory delta producer — the runtime worker's
+    buddy pushes and the serve replicator's state stream — so the frame
+    format and cadence policy cannot drift between them. `last_kind`
+    reports what the most recent publish emitted ("full"/"delta"),
+    which is what O(dirt) tests and replication telemetry key on."""
+
+    def __init__(self, base_every: int, max_dirty: float = 0.5, *,
+                 contiguous: bool = False):
+        self.chain = ChainPlanner(base_every, max_dirty,
+                                  contiguous=contiguous)
+        self.last_kind: str | None = None
+
+    def publish(self, flat: Dict[str, Any], step: int,
+                extra: dict | None = None) -> bytes:
+        """Frame bytes for `flat` at `step` — a tile-range delta against
+        the previous frame when the chain allows it and the state is
+        sparse-dirty, a full frame otherwise. The chain is committed
+        before returning; in-memory pushes have no partial-write failure
+        mode (a crashed push loses the whole frame and the next decide
+        sees a non-anchoring parent, degrading to a full frame)."""
+        ex = dict(extra or {})
+        ex.setdefault("step", step)
+        kind, plan, tiles, base = self.chain.decide(flat, step)
+        if kind == "delta":
+            # gathered representation: the frame is assembled from
+            # zero-copy slices of the dirty ranges only — same bytes as
+            # the full-drain path, without re-touching clean pages
+            payload = to_delta_bytes_gathered(gather_host(flat, plan),
+                                              base_step=base, extra=ex)
+        else:
+            payload = to_bytes(flat, extra=ex)
+        self.chain.commit(step, tiles, kind)
+        self.last_kind = kind
+        return payload
+
+    def rebase(self):
+        """Restart the chain: the next publish emits a full frame. Call
+        when the consumer of the stream lost its history — e.g. the
+        buddy holding the held frames died and respawned empty — so a
+        delta against a frame nobody holds is never emitted."""
+        self.chain.prev = None
+        self.chain.since_base = 0
+
+
 def _parse_delta(buf) -> Tuple[dict, Any]:
     head = bytes(buf[:_FIXED.size])
     if len(head) < _FIXED.size:

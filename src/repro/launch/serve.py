@@ -44,10 +44,15 @@ def main(argv=None):
         if args.snapshot_every and steps % args.snapshot_every == 0:
             snap = eng.snapshot()
     dt = time.monotonic() - t0
+    # count what the engine actually produced, not the nominal request
+    # shape: max_len truncation can cut a generation short
+    generated = sum(len(r.out) - 1 for r in eng.completed)
     print(json.dumps({
         "arch": cfg.name, "requests": args.requests,
+        "completed": len(eng.completed),
         "engine_steps": steps, "wall_s": round(dt, 3),
-        "tokens_per_s": round(args.requests * args.max_new / dt, 1),
+        "tokens_generated": generated,
+        "tokens_per_s": round(generated / dt, 1),
         "snapshot_taken": snap is not None,
     }, indent=2))
     return 0

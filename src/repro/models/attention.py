@@ -240,7 +240,11 @@ def cross_decode_attention(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
 def decode_attention(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
                      cache_k: jnp.ndarray, cache_v: jnp.ndarray,
                      pos: jnp.ndarray, compute_dtype=jnp.bfloat16):
-    """One-token decode. x: (B,1,D); cache_*: (B,Smax,Hkv,hd); pos scalar.
+    """One-token decode. x: (B,1,D); cache_*: (B,Smax,Hkv,hd); pos is a
+    scalar (every row at the same position — the training/roofline decode
+    cells) or a (B,) vector of *per-row* positions (continuous-batching
+    serving: each slot carries its own clock, so ragged occupancy decodes
+    exactly like B independent single-sequence streams).
 
     Returns (out (B,1,D), new_cache_k, new_cache_v). GQA-grouped einsums —
     K/V heads are never replicated to H (a `repeat_kv` here would multiply
@@ -250,12 +254,20 @@ def decode_attention(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
     gathering the cache.
     """
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else jnp.full((B, 1), pos, jnp.int32)
     q, k, v = _project_qkv(p, x, cfg, positions, compute_dtype)
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
-                                           (0, pos, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
-                                           (0, pos, 0, 0))
+    if per_row:
+        # row i's K/V lands at its own position: one batched scatter
+        rows = jnp.arange(B)
+        cache_k = cache_k.at[rows, pos].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, pos].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
     Smax = cache_k.shape[1]
     H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     rep = H // Hkv
@@ -264,7 +276,10 @@ def decode_attention(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
     vf = cache_v.astype(compute_dtype)
     s = jnp.einsum("bgrd,bsgd->bgrs", qg, kf).astype(jnp.float32)
     s = s / jnp.sqrt(hd).astype(jnp.float32)
-    mask = (jnp.arange(Smax) <= pos)[None, None, None, :]
+    if per_row:
+        mask = (jnp.arange(Smax)[None, :] <= pos[:, None])[:, None, None, :]
+    else:
+        mask = (jnp.arange(Smax) <= pos)[None, None, None, :]
     s = jnp.where(mask, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bgrs,bsgd->bgrd", w.astype(compute_dtype), vf)

@@ -316,7 +316,9 @@ class Model:
     # -------------------------------------------------------- decode step
 
     def decode_step(self, params, token, state, pos):
-        """One-token decode. token: (B,1) int32; pos: scalar int32.
+        """One-token decode. token: (B,1) int32; pos: scalar int32, or a
+        (B,) int32 vector of per-row positions (the serving engine's
+        continuous batching — see models.attention.decode_attention).
 
         Returns (logits (B,1,V), new_state). The KV/SSM state threading is
         what the serve_step lowers for the decode_* roofline cells.

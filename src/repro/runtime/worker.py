@@ -202,8 +202,8 @@ class Worker:
             hot_steps=1)
         # buddy frame cadence shared with FileCheckpointer's policy;
         # contiguous: BuddyStore's retention walk assumes step-1 chains
-        self._chain = serde.ChainPlanner(self.PUSH_BASE_EVERY,
-                                         contiguous=True)
+        self._publisher = serde.FramePublisher(self.PUSH_BASE_EVERY,
+                                               contiguous=True)
         self.rank_table: dict[int, tuple[str, int]] = {}
         self.table_event = threading.Event()
         self.barrier_release: dict[tuple[int, int], float] = {}
@@ -597,17 +597,7 @@ class Worker:
         previous step's frame when the state is sparse-dirty (redistribu-
         tion then moves only dirty bytes), a full frame otherwise or on
         every PUSH_BASE_EVERY-th step (chain anchor)."""
-        flat = {"x": x}
-        kind, plan, tiles, base = self._chain.decide(flat, step)
-        self._chain.commit(step, tiles, kind)
-        if kind == "delta":
-            # gathered representation: the frame is assembled from
-            # zero-copy slices of the dirty ranges only — same bytes as
-            # the full-drain path, without re-touching clean pages
-            return serde.to_delta_bytes_gathered(
-                serde.gather_host(flat, plan), base_step=base,
-                extra={"step": step})
-        return serde.to_bytes(flat, extra={"step": step})
+        return self._publisher.publish({"x": x}, step)
 
     def _compose_state(self, frames: dict[int, bytes], step: int
                        ) -> tuple[int, np.ndarray]:

@@ -11,13 +11,13 @@ consumers that need them.
 """
 from . import hooks
 from .schema import (CASCADE_POINTS, Fault, HOWS, POINTS, Repair, Scenario,
-                     STRATEGY_KEYS, TARGETS, Topology, elastic_transitions,
-                     expected_resume_step, expected_resume_steps,
-                     normalize_strategy)
+                     SERVE_POINTS, STRATEGY_KEYS, ServeScenario, TARGETS,
+                     Topology, elastic_transitions, expected_resume_step,
+                     expected_resume_steps, normalize_strategy)
 
 __all__ = [
     "CASCADE_POINTS", "Fault", "HOWS", "POINTS", "Repair", "Scenario",
-    "STRATEGY_KEYS", "TARGETS", "Topology", "elastic_transitions",
-    "expected_resume_step", "expected_resume_steps", "normalize_strategy",
-    "hooks",
+    "SERVE_POINTS", "STRATEGY_KEYS", "ServeScenario", "TARGETS", "Topology",
+    "elastic_transitions", "expected_resume_step", "expected_resume_steps",
+    "normalize_strategy", "hooks",
 ]

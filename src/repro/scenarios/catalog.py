@@ -16,7 +16,7 @@ Tags:
 """
 from __future__ import annotations
 
-from .schema import Fault, Repair, Scenario, Topology
+from .schema import Fault, Repair, Scenario, ServeScenario, Topology
 
 T22 = Topology(nodes=2, ranks_per_node=2, spares=1)      # world 4
 T22S0 = Topology(nodes=2, ranks_per_node=2, spares=0)    # world 4, no pool
@@ -327,3 +327,61 @@ def fault_free(topology: Topology, steps: int = 6, dim: int = 64
                          f"{topology.ranks_per_node}",
                     faults=(), topology=topology, steps=steps, dim=dim,
                     strategies=("reinit",))
+
+
+# ------------------------------------------------------- serving catalog
+#
+# Serving cells kill a rank of a live ServeCluster (repro.serve.cluster)
+# under sustained open-loop load and assert the serving invariants: zero
+# requests dropped, zero duplicate/lost tokens, transcripts bit-identical
+# to the fault-free run. They live in their own catalog — the training
+# matrices in tests/test_scenarios.py parametrize over CATALOG and must
+# not pick these up.
+
+SERVE_CATALOG: tuple[ServeScenario, ...] = (
+    ServeScenario(
+        name="serve-rank-loss",
+        description="The serving baseline: SIGKILL-equivalent loss of a "
+                    "decoding rank mid-stream under open-loop load; the "
+                    "respawned rank composes its buddy's held delta "
+                    "frames, replays with emission suppressed, and every "
+                    "client transcript finishes bit-identical with zero "
+                    "re-delivered tokens.",
+        strategy="reinit", fault_point="serve.decode.step",
+        fault_round=4, fault_rank=1, tags=("fast",)),
+    ServeScenario(
+        name="serve-mid-prefill",
+        description="Kill between a prompt batch's prefill compute and "
+                    "its commit: the queued requests were never admitted, "
+                    "so the snapshot replays them from the queue — only "
+                    "computed work is lost, never a request.",
+        strategy="reinit", fault_point="serve.prefill.mid",
+        fault_round=4, fault_rank=1, tags=("fast",)),
+    ServeScenario(
+        name="serve-replica-promote",
+        description="Zero-rollback serving failover: the buddy applies "
+                    "every per-step frame into a warm standby snapshot; "
+                    "promotion restores it immediately with nothing to "
+                    "compose, so the first recovered token arrives a "
+                    "fraction of reinit's gap after the kill.",
+        strategy="replica", fault_point="serve.decode.step",
+        fault_round=4, fault_rank=1, tags=("fast",)),
+    ServeScenario(
+        name="serve-rank-loss-wide",
+        description="High-slot-count variant of serve-rank-loss: a wide "
+                    "slot pool under heavier load (nightly; the fast job "
+                    "runs the small cells).",
+        strategy="reinit", fault_point="serve.decode.step",
+        n_slots=16, rounds=10, per_round=3, fault_round=5, fault_rank=1,
+        tags=("nightly",)),
+)
+
+SERVE_BY_NAME = {s.name: s for s in SERVE_CATALOG}
+
+
+def get_serve_scenario(name: str) -> ServeScenario:
+    try:
+        return SERVE_BY_NAME[name]
+    except KeyError:
+        raise KeyError(f"unknown serve scenario {name!r}; "
+                       f"known: {sorted(SERVE_BY_NAME)}") from None

@@ -497,3 +497,88 @@ def expected_resume_step(scenario: Scenario) -> Optional[int]:
     """Back-compat single-fault view: the first primary fault's cut."""
     steps = expected_resume_steps(scenario)
     return steps[0] if steps else None
+
+
+# --------------------------------------------------------------- serving
+
+# Interruption points of the serving engine (serve.engine fires them each
+# step / admission). Deliberately a separate namespace from POINTS: the
+# training matrices parametrize over POINTS and a serve point can never
+# appear in a training Fault.
+SERVE_POINTS = (
+    "serve.decode.step",     # top of an engine step, before admission
+    "serve.prefill.mid",     # prompt prefill computed, not yet committed
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeScenario:
+    """One fault-injected *serving* experiment: a `ServeCluster` run
+    under open-loop load with a single rank kill.
+
+    The invariants are the serving analogue of `expect_bit_identical`:
+    zero requests dropped, zero duplicate or re-emitted tokens (the
+    TokenSink ledger raises on either), and — when
+    `expect_bit_identical` — every request's delivered transcript
+    bit-identical to the fault-free run of the same load. Kept jax-free
+    like `Scenario`; the executor lives in repro.serve.cluster."""
+    name: str
+    strategy: str = "reinit"            # "reinit" | "replica"
+    world: int = 2
+    n_slots: int = 4
+    max_len: int = 64
+    rounds: int = 8                     # open-loop arrival horizon
+    per_round: int = 1                  # arrivals per round (cluster-wide)
+    max_new_tokens: int = 5
+    seed: int = 0
+    publish_every: int = 2              # replica forces 1 at run time
+    respawn_delay: int = 2              # replica forces 0 at run time
+    fault_round: int = 4
+    fault_rank: int = 1
+    fault_point: str = "serve.decode.step"
+    expect_bit_identical: bool = True
+    tags: tuple[str, ...] = ()
+    description: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "tags", tuple(self.tags))
+        self.validate()
+
+    def validate(self):
+        if not self.name:
+            raise ValueError("serve scenario needs a name")
+        if self.strategy not in ("reinit", "replica"):
+            raise ValueError(f"serve strategy {self.strategy!r} not in "
+                             "('reinit', 'replica')")
+        if self.fault_point not in SERVE_POINTS:
+            raise ValueError(f"serve fault point {self.fault_point!r} "
+                             f"not in {SERVE_POINTS}")
+        if not (0 <= self.fault_rank < self.world):
+            raise ValueError(f"victim rank {self.fault_rank} outside "
+                             f"world {self.world}")
+        if not (0 <= self.fault_round < self.rounds):
+            raise ValueError(f"fault round {self.fault_round} outside "
+                             f"load horizon [0, {self.rounds})")
+        if self.world < 2:
+            raise ValueError("serving fault tolerance needs world >= 2 "
+                             "(the buddy holds the frames)")
+        if min(self.n_slots, self.max_len, self.rounds, self.per_round,
+               self.max_new_tokens, self.publish_every) < 1 \
+                or self.respawn_delay < 0:
+            raise ValueError(f"bad serve scenario sizes in {self.name}")
+
+    def fault(self) -> dict:
+        """The `fault=` argument `ServeCluster.run` takes."""
+        return {"round": self.fault_round, "rank": self.fault_rank,
+                "point": self.fault_point}
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["tags"] = list(self.tags)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ServeScenario":
+        d = dict(d)
+        d["tags"] = tuple(d.get("tags", ()))
+        return cls(**d)

@@ -1,1 +1,6 @@
 from .engine import ServeEngine, Request
+from .replicate import ServeReplicator
+from .cluster import LoadGen, RankKilled, ServeCluster, TokenSink
+
+__all__ = ["ServeEngine", "Request", "ServeReplicator", "LoadGen",
+           "RankKilled", "ServeCluster", "TokenSink"]

@@ -3,25 +3,54 @@
 A fixed pool of `n_slots` sequences shares one jitted decode step (the same
 function the decode_* dry-run cells lower). Requests occupy free slots,
 prefill writes their prompt KV/SSM state into the slot, and every engine
-step decodes one token for all active slots. Per-slot positions + attention
-masks make ragged occupancy correct; finished slots are recycled.
+step decodes one token for all active slots.
 
-Fault tolerance: the engine snapshots (params stay immutable) the decode
-state + slot table on demand — `snapshot()`/`restore()` give serving the
-same global-restart semantics the trainer has; recovery re-decodes nothing
-that already left the engine.
+Positions are *per slot*: the engine passes a `(n_slots,)` position vector
+into `decode_step`, so each slot writes its KV at its own clock and its
+causal mask is built from its own position — ragged occupancy (slots
+admitted at different times) decodes exactly like `n_slots` independent
+single-sequence streams. A slot's output therefore never depends on what
+the other slots are doing, which is also what makes recovery replay
+bit-identical regardless of how admission interleaves after a restore.
+
+Admission is batched: queued requests with equal prompt length are
+prefilled together, lane-padded to a *fixed* `prefill_batch` width so the
+compiled prefill shape (and with it every lane's bitwise result) does not
+depend on how many requests happened to be waiting. A small LRU keyed on
+the prompt reuses the prefill of repeated prompts.
+
+Emission: tokens leave the engine through the `sink` callback exactly
+once, tracked by a per-request `emitted` watermark. A restored engine
+whose watermark was advanced to the client's delivered count re-decodes
+the gap silently — no token that already left the system is ever
+re-delivered (ReStore's property, applied to decode).
+
+Fault tolerance: `snapshot()`/`restore()` capture and reinstate the full
+churning state — decode KV/SSM state, slot table, *and* the pending
+queue — without stalling the decode stream (device copies + async D2H).
+`serve.replicate.ServeReplicator` turns snapshots into BuddyStore delta
+frames so replication costs O(dirt), and `serve.cluster.ServeCluster`
+drives rank loss + recovery under load.
+
+With `mesh`/`rules` the decode state is sharded over the mesh using the
+layouts `sharding.rules` knows (batch over the data axis, heads/kv_seq
+over the model axis), params are placed by the same rules, and the decode
+step runs under a constraint scope so the model's internal annotations
+bind.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-import time
-from typing import Any, Optional
+from collections import OrderedDict
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
+from repro.scenarios import hooks
 
 
 @dataclasses.dataclass
@@ -31,66 +60,240 @@ class Request:
     max_new_tokens: int = 16
     out: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # emission watermark: #tokens of `out` already delivered to the sink.
+    # Recovery sets it to the client's delivered count so replayed tokens
+    # are re-decoded but never re-delivered.
+    emitted: int = 0
+
+    def to_dict(self) -> dict:
+        return {"rid": int(self.rid), "prompt": [int(t) for t in self.prompt],
+                "max_new_tokens": int(self.max_new_tokens),
+                "out": [int(t) for t in self.out],
+                "done": bool(self.done), "emitted": int(self.emitted)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Request":
+        return cls(rid=d["rid"], prompt=list(d["prompt"]),
+                   max_new_tokens=d["max_new_tokens"], out=list(d["out"]),
+                   done=d["done"], emitted=d["emitted"])
 
 
 class ServeEngine:
     def __init__(self, model: Model, params, *, n_slots: int = 4,
-                 max_len: int = 256, greedy: bool = True):
+                 max_len: int = 256, greedy: bool = True,
+                 prefill_batch: Optional[int] = None,
+                 prefill_cache: int = 0,
+                 mesh=None, rules=None,
+                 sink: Optional[Callable[[int, int, int], None]] = None,
+                 name: str = "serve0"):
         self.model = model
-        self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.greedy = greedy
-        self.state = model.init_decode_state(n_slots, max_len)
+        self.name = name
+        self.sink = sink
+        # fixed prefill lane count: groups are padded up to this width so
+        # the compiled shape never depends on queue occupancy
+        self.prefill_batch = min(n_slots, 4) if prefill_batch is None \
+            else max(1, min(prefill_batch, n_slots))
+        self.mesh, self.rules = mesh, rules
+        if mesh is not None:
+            if rules is None:
+                raise ValueError("mesh requires sharding rules")
+            from repro.sharding.partition import (constraint_scope,
+                                                  state_shardings,
+                                                  tree_shardings)
+            self._scope = lambda: constraint_scope(mesh, rules)
+            params = jax.device_put(params,
+                                    tree_shardings(mesh, params, rules))
+            self._state_shd = self._decode_state_shardings()
+        else:
+            self._scope = contextlib.nullcontext
+            self._state_shd = None
+        self.params = params
+        self.state = self._place(model.init_decode_state(n_slots, max_len))
         self.slots: list[Optional[Request]] = [None] * n_slots
         self.pos = np.zeros(n_slots, np.int32)       # next position per slot
         self.queue: list[Request] = []
-        self._decode = jax.jit(model.decode_step)
-        self._prefill_cache: dict[int, Any] = {}
+        self.completed: list[Request] = []
+        # the KV/SSM state is the dominant buffer: donate it so the
+        # per-slot scatter updates in place instead of doubling it
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+        self._prefill_fn = jax.jit(
+            lambda p, t: model.prefill(p, {"tokens": t},
+                                       max_len=self.max_len))
+        # repeated-prompt prefill reuse: prompt -> (first token, one-lane
+        # host state). A prompt is cached on its *second* miss, so
+        # one-shot prompts never pay the host copy.
+        self.prefill_cache_size = prefill_cache
+        self._prefill_cache: OrderedDict[tuple, tuple] = OrderedDict()
+        self._seen_prompts: set[tuple] = set()
+        self._tick = 0                     # engine steps taken (monotonic)
+
+    # ----------------------------------------------------------- sharding
+
+    def _decode_state_shardings(self):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.sharding.partition import _divisible
+        specs = self.model.decode_state_specs(self.rules)
+        abstract = self.model.init_decode_state(self.n_slots, self.max_len,
+                                                abstract=True)
+        fixed = jax.tree.map(
+            lambda s, leaf: _divisible(s, leaf.shape, self.mesh),
+            specs, abstract, is_leaf=lambda s: isinstance(s, P))
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), fixed,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    def _place(self, state):
+        if self._state_shd is None:
+            return state
+        return jax.device_put(state, self._state_shd)
 
     # -------------------------------------------------------------- admin
 
     def submit(self, req: Request):
+        if len(req.prompt) >= self.max_len - 1:
+            raise ValueError(f"prompt of {len(req.prompt)} tokens does not "
+                             f"fit max_len={self.max_len}")
         self.queue.append(req)
 
     def _free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
-    def _admit(self):
-        """Prefill queued requests into free slots (one-by-one prefill at
-        batch granularity keeps this engine simple; the batch path is the
-        decode loop, which dominates serving cost)."""
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            req = self.queue.pop(0)
-            self._prefill_into_slot(slot, req)
+    def _flush(self, req: Request):
+        """Deliver every not-yet-emitted token. A watermark ahead of
+        `out` (set by recovery) suppresses delivery until decode has
+        replayed past it."""
+        while req.emitted < len(req.out):
+            if self.sink is not None:
+                self.sink(req.rid, req.emitted, req.out[req.emitted])
+            req.emitted += 1
 
-    def _prefill_into_slot(self, slot: int, req: Request):
-        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        logits, st = self.model.prefill(self.params, {"tokens": toks},
-                                        max_len=self.max_len)
-        # splice the single-sequence state into the slot'th batch lane
-        def splice(dst, src):
-            # find the batch axis: prefill returns batch=1 states whose
-            # shapes match dst with B -> 1 at the same axis position
+    def _finish_if_done(self, slot: int, req: Request):
+        # the prefill-emitted token is the first *generated* token but
+        # does not count toward max_new_tokens: a request gets exactly
+        # max_new_tokens decode-step tokens on top of it
+        if len(req.out) - 1 >= req.max_new_tokens \
+                or self.pos[slot] >= self.max_len - 1:
+            req.done = True
+            self.completed.append(req)
+            self.slots[slot] = None
+
+    # ---------------------------------------------------------- admission
+
+    def _splice(self, slot_idx: list[int], lanes: list[int], src_state):
+        """Scatter lanes of a prefilled batch-`g` state into the given
+        slots' batch lanes. The batch axis is identified structurally:
+        the one axis where dst has n_slots, src has g, and every other
+        dim agrees."""
+        g = len(set(lanes)) and None     # noqa: F841  (doc: lanes index src)
+
+        def sp(dst, src):
+            src = jnp.asarray(src)
+            if dst.ndim != src.ndim:
+                raise ValueError(f"rank mismatch {dst.shape} vs {src.shape}")
             for ax in range(dst.ndim):
-                if dst.shape[ax] == self.n_slots and src.shape[ax] == 1:
-                    idx = [slice(None)] * dst.ndim
-                    idx[ax] = slice(slot, slot + 1)
-                    return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+                if dst.shape[ax] != self.n_slots:
+                    continue
+                if all(dst.shape[a] == src.shape[a]
+                       for a in range(dst.ndim) if a != ax):
+                    d = jnp.moveaxis(dst, ax, 0)
+                    s = jnp.moveaxis(src, ax, 0)[jnp.asarray(lanes)]
+                    d = d.at[jnp.asarray(slot_idx)].set(s.astype(dst.dtype))
+                    return jnp.moveaxis(d, 0, ax)
             raise ValueError(f"no batch axis: {dst.shape} vs {src.shape}")
 
-        self.state = jax.tree.map(splice, self.state, st)
-        nxt = int(jnp.argmax(logits[0, -1]))
-        req.out.append(nxt)
+        self.state = jax.tree.map(sp, self.state, src_state)
+
+    def _cache_get(self, key: tuple):
+        hit = self._prefill_cache.get(key)
+        if hit is not None:
+            self._prefill_cache.move_to_end(key)
+        return hit
+
+    def _cache_put(self, key: tuple, nxt: int, lane_state):
+        if self.prefill_cache_size <= 0 or key in self._prefill_cache:
+            return
+        if key not in self._seen_prompts:
+            self._seen_prompts.add(key)          # cache on second sighting
+            return
+        host = jax.tree.map(np.asarray, lane_state)
+        self._prefill_cache[key] = (nxt, host)
+        while len(self._prefill_cache) > self.prefill_cache_size:
+            self._prefill_cache.popitem(last=False)
+
+    def _lane_state(self, src_state, lane: int):
+        """One lane of a batch-G prefill state, lane axis kept (size 1)."""
+        def take(src):
+            src = jnp.asarray(src)
+            for ax in range(src.ndim):
+                if src.shape[ax] == self.prefill_batch:
+                    idx = [slice(None)] * src.ndim
+                    idx[ax] = slice(lane, lane + 1)
+                    return src[tuple(idx)]
+            raise ValueError(f"no lane axis in {src.shape}")
+        return jax.tree.map(take, src_state)
+
+    def _commit_admission(self, slot: int, req: Request, nxt: int):
+        req.out.append(int(nxt))
         self.slots[slot] = req
         self.pos[slot] = len(req.prompt)
+        self._finish_if_done(slot, req)
+        self._flush(req)
+
+    def _admit(self):
+        """Prefill queued requests into free slots, in strict FIFO order,
+        batching maximal same-prompt-length queue prefixes up to the
+        fixed `prefill_batch` width."""
+        free = self._free_slots()
+        while free and self.queue:
+            key = tuple(self.queue[0].prompt)
+            hit = self._cache_get(key) if self.prefill_cache_size else None
+            if hit is not None:
+                nxt, lane_state = hit
+                # interruption point: admission decided, nothing committed
+                hooks.fire("serve.prefill.mid", engine=self,
+                           rids=[self.queue[0].rid])
+                req = self.queue.pop(0)
+                slot = free.pop(0)
+                self._splice([slot], [0], lane_state)
+                self._commit_admission(slot, req, nxt)
+                continue
+            head_len = len(self.queue[0].prompt)
+            width = min(len(free), self.prefill_batch)
+            take = []
+            for r in self.queue:
+                if len(take) >= width or len(r.prompt) != head_len:
+                    break
+                take.append(r)
+            # lane-pad to the fixed width: dummy lanes replicate lane 0,
+            # and per-lane data independence keeps real lanes bit-exact
+            toks = np.tile(np.asarray(take[0].prompt, np.int32),
+                           (self.prefill_batch, 1))
+            for i, r in enumerate(take):
+                toks[i] = np.asarray(r.prompt, np.int32)
+            with self._scope():
+                logits, st = self._prefill_fn(self.params, jnp.asarray(toks))
+            nxts = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int64)
+            # interruption point: prefill computed, nothing committed —
+            # a kill here loses the compute but neither queue nor slots
+            hooks.fire("serve.prefill.mid", engine=self,
+                       rids=[r.rid for r in take])
+            slots = free[:len(take)]
+            free = free[len(take):]
+            self._splice(slots, list(range(len(take))), st)
+            for lane, (slot, req) in enumerate(zip(slots, take)):
+                self.queue.remove(req)
+                self._cache_put(tuple(req.prompt), int(nxts[lane]),
+                                self._lane_state(st, lane))
+                self._commit_admission(slot, req, int(nxts[lane]))
 
     # --------------------------------------------------------------- step
 
     def step(self) -> int:
         """One decode step for all active slots; returns #active."""
+        hooks.fire("serve.decode.step", engine=self, step=self._tick)
+        self._tick += 1
         self._admit()
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
@@ -99,41 +302,42 @@ class ServeEngine:
         cur = np.zeros((self.n_slots, 1), np.int32)
         for i in active:
             cur[i, 0] = self.slots[i].out[-1]
-        # single shared position: engine steps advance all slots together;
-        # slots admitted at different times are right-aligned by their own
-        # pos counter (kv cache positions are per-slot via the mask)
-        pos = int(max(self.pos[i] for i in active))
-        logits, self.state = self._decode(self.params,
-                                          jnp.asarray(cur), self.state,
-                                          jnp.int32(pos))
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        # per-slot positions: each slot writes its KV at its own clock
+        # and masks from its own position; inactive slots decode padding
+        # into lanes that the next admission's prefill fully overwrites
+        pos = jnp.asarray(self.pos)
+        with self._scope():
+            logits, self.state = self._decode(self.params,
+                                              jnp.asarray(cur), self.state,
+                                              pos)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int64)
         for i in active:
             req = self.slots[i]
             req.out.append(int(nxt[i]))
-            self.pos[i] = pos + 1
-            if len(req.out) >= req.max_new_tokens or \
-                    self.pos[i] >= self.max_len - 1:
-                req.done = True
-                self.slots[i] = None
+            self.pos[i] += 1
+            self._finish_if_done(i, req)
+            self._flush(req)
         return len(active)
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
-        done: list[Request] = []
-        seen: set[int] = set()
+        """Step until queue and slots are empty; returns every request
+        completed by this engine (including ones finished before the
+        call)."""
         for _ in range(max_steps):
             n = self.step()
             if n == 0 and not self.queue:
                 break
-        return done
+        return list(self.completed)
 
     # ---------------------------------------------------- fault tolerance
 
     def snapshot(self) -> dict:
-        """Capture the decode state without stalling the decode stream:
-        each leaf is copied on device (so the live buffers stay donatable)
-        and its D2H transfer is *started*, not awaited — the drain
-        overlaps subsequent engine steps, and materialization happens
-        only if/when the snapshot is actually restored."""
+        """Capture the churning state — decode KV/SSM, slot table, *and*
+        pending queue — without stalling the decode stream: each leaf is
+        copied on device (so the live buffers stay donatable) and its D2H
+        transfer is *started*, not awaited — the drain overlaps subsequent
+        engine steps, and materialization happens only if/when the
+        snapshot is restored or serialized."""
         def drain(a):
             try:
                 c = jnp.copy(a)
@@ -147,13 +351,24 @@ class ServeEngine:
         return {
             "state": jax.tree.map(drain, self.state),
             "pos": self.pos.copy(),
-            "slots": [(s.rid, list(s.prompt), s.max_new_tokens, list(s.out))
-                      if s else None for s in self.slots],
+            "slots": [s.to_dict() if s else None for s in self.slots],
+            "queue": [r.to_dict() for r in self.queue],
+            "tick": self._tick,
         }
 
     def restore(self, snap: dict):
-        self.state = jax.tree.map(jnp.asarray, snap["state"])
-        self.pos = snap["pos"].copy()
-        self.slots = [Request(rid=t[0], prompt=t[1], max_new_tokens=t[2],
-                              out=t[3]) if t else None
-                      for t in snap["slots"]]
+        """Reinstate a snapshot: decode state, per-slot positions, slot
+        table (with each request's done flag and emission watermark) and
+        the pending queue. The state is copied so restoring the same
+        snapshot twice survives the decode step's buffer donation."""
+        self.state = self._place(
+            jax.tree.map(lambda a: jnp.copy(jnp.asarray(a)), snap["state"]))
+        self.pos = np.asarray(snap["pos"], np.int32).copy()
+        self.slots = [Request.from_dict(d) if d else None
+                      for d in snap["slots"]]
+        self.queue = [Request.from_dict(d) for d in snap.get("queue", ())]
+        self._tick = int(snap.get("tick", self._tick))
+
+    def live_requests(self) -> list[Request]:
+        """Every request the engine still owns (slots + queue)."""
+        return [s for s in self.slots if s is not None] + list(self.queue)

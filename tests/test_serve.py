@@ -1,4 +1,16 @@
-"""Serving engine: slot batching, recycling, snapshot/restore."""
+"""Serving engine: slot batching, recycling, snapshot/restore.
+
+Semantics pinned here:
+  * a request gets exactly max_new_tokens decode-step tokens on top of
+    the one token its prefill emits (out has max_new+1 entries);
+  * ragged slot occupancy (per-slot positions) decodes bit-identically
+    to the same engine serving each request alone;
+  * snapshot/restore round-trips the whole churn — state, slot table
+    (done flags, emission watermarks) and the pending queue;
+  * the emission watermark delivers each token exactly once, and a
+    watermark ahead of `out` (recovery) suppresses re-delivery;
+  * repeated prompts reuse their prefill through the LRU.
+"""
 import jax
 import pytest
 
@@ -22,9 +34,12 @@ def test_batched_requests_complete(setup):
             for i in range(7)]
     for r in reqs:
         eng.submit(r)
-    eng.run_until_drained()
+    done = eng.run_until_drained()
     assert all(r.done for r in reqs)
-    assert all(len(r.out) == 5 for r in reqs)
+    # prefill emits one token, decode adds exactly max_new_tokens
+    assert all(len(r.out) == 6 for r in reqs)
+    # the drained list is the completed requests, not an empty husk
+    assert sorted(r.rid for r in done) == list(range(7))
 
 
 def test_slot_recycling_more_requests_than_slots(setup):
@@ -34,14 +49,61 @@ def test_slot_recycling_more_requests_than_slots(setup):
             for i in range(6)]
     for r in reqs:
         eng.submit(r)
-    eng.run_until_drained()
+    done = eng.run_until_drained()
     assert all(r.done for r in reqs)
+    assert len(done) == 6
+
+
+def test_ragged_occupancy_matches_solo_decode(setup):
+    """Slots admitted at staggered steps each produce exactly what the
+    same engine produces serving that request alone — the per-slot
+    position regression harness."""
+    model, params = setup
+    solo = {}
+    for rid in range(3):
+        eng = ServeEngine(model, params, n_slots=3, max_len=64)
+        eng.submit(Request(rid=rid, prompt=[10 + rid] * 4,
+                           max_new_tokens=6))
+        r, = eng.run_until_drained()
+        solo[rid] = r.out
+
+    eng = ServeEngine(model, params, n_slots=3, max_len=64,
+                      prefill_batch=1)
+    eng.submit(Request(rid=0, prompt=[10] * 4, max_new_tokens=6))
+    eng.step(); eng.step()
+    eng.submit(Request(rid=1, prompt=[11] * 4, max_new_tokens=6))
+    eng.step()
+    eng.submit(Request(rid=2, prompt=[12] * 4, max_new_tokens=6))
+    for r in eng.run_until_drained():
+        assert r.out == solo[r.rid], f"rid {r.rid} diverged under raggedness"
+
+
+def test_batched_prefill_matches_solo_admission(setup):
+    """Co-admitted same-length prompts (one prefill call, lane-padded to
+    the fixed width) decode identically to solo admission."""
+    model, params = setup
+    solo = {}
+    for rid in range(3):
+        eng = ServeEngine(model, params, n_slots=4, max_len=64,
+                          prefill_batch=1)
+        eng.submit(Request(rid=rid, prompt=[20 + rid] * 5,
+                           max_new_tokens=4))
+        r, = eng.run_until_drained()
+        solo[rid] = r.out
+
+    eng = ServeEngine(model, params, n_slots=4, max_len=64,
+                      prefill_batch=4)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=[20 + rid] * 5,
+                           max_new_tokens=4))
+    for r in eng.run_until_drained():
+        assert r.out == solo[r.rid]
 
 
 def test_snapshot_restore_resumes_identically(setup):
     model, params = setup
     eng = ServeEngine(model, params, n_slots=2, max_len=64)
-    r = Request(rid=0, prompt=list(range(8)), max_new_tokens=8)
+    r = Request(rid=0, prompt=list(range(1, 9)), max_new_tokens=8)
     eng.submit(r)
     eng.step(); eng.step()
     snap = eng.snapshot()
@@ -53,6 +115,114 @@ def test_snapshot_restore_resumes_identically(setup):
     eng2.step(); eng2.step()
     resumed = [s.out for s in eng2.slots if s][0]
     assert resumed == expected
+
+
+def test_snapshot_mutate_restore_bit_identity(setup):
+    """snapshot -> keep decoding -> restore must replay the exact same
+    tokens, with the pending queue and done flags intact."""
+    model, params = setup
+    eng = ServeEngine(model, params, n_slots=2, max_len=64)
+    for rid in range(5):
+        eng.submit(Request(rid=rid, prompt=[3, 4, 5], max_new_tokens=6))
+    eng.step(); eng.step(); eng.step()
+    snap = eng.snapshot()
+    queued_at_snap = [r.rid for r in eng.queue]
+    assert queued_at_snap, "test needs a non-empty pending queue"
+
+    expected = {r.rid: list(r.out) for r in eng.run_until_drained()}
+    assert len(expected) == 5
+
+    eng.restore(snap)
+    assert [r.rid for r in eng.queue] == queued_at_snap
+    eng.completed = []
+    replayed = {r.rid: list(r.out) for r in eng.run_until_drained()}
+    assert replayed == {k: expected[k] for k in replayed}
+    assert sorted(replayed) == list(range(5))
+    # a second restore from the same snapshot must survive the decode
+    # step's buffer donation (the snapshot owns its own copies)
+    eng.restore(snap)
+    eng.completed = []
+    again = {r.rid: list(r.out) for r in eng.run_until_drained()}
+    assert again == replayed
+
+
+def test_restore_roundtrips_done_flag(setup):
+    model, params = setup
+    eng = ServeEngine(model, params, n_slots=2, max_len=64)
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=1))
+    eng.run_until_drained()
+    snap = eng.snapshot()
+    assert snap["slots"] == [None, None]      # finished slots were freed
+    done_req = eng.completed[0]
+    assert done_req.done
+
+    r = Request.from_dict(done_req.to_dict())
+    assert r.done and r.out == done_req.out and r.emitted == done_req.emitted
+
+
+def test_emission_watermark_exactly_once(setup):
+    """Every token reaches the sink exactly once, in order; a watermark
+    ahead of `out` (what recovery sets) suppresses re-delivery of
+    replayed tokens."""
+    model, params = setup
+    got = []
+    eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                      sink=lambda rid, idx, tok: got.append((rid, idx, tok)))
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=[7, 8, 9], max_new_tokens=4))
+    done = eng.run_until_drained()
+    per: dict = {}
+    for rid, idx, tok in got:
+        assert idx == len(per.setdefault(rid, []))   # in order, no gap
+        per[rid].append(tok)
+    for r in done:
+        assert per[r.rid] == r.out             # every token exactly once
+
+    # replay with the watermark pre-advanced: decode happens, the sink
+    # stays silent until the watermark is passed
+    replay = []
+    eng2 = ServeEngine(model, params, n_slots=2, max_len=64,
+                       sink=lambda rid, idx, tok: replay.append((idx, tok)))
+    req = Request(rid=0, prompt=[7, 8, 9], max_new_tokens=4)
+    req.emitted = 3                            # client already holds 3
+    eng2.submit(req)
+    eng2.run_until_drained()
+    assert [i for i, _ in replay] == [3, 4]    # only the tail delivered
+    assert [t for _, t in replay] == per[0][3:]
+
+
+def test_prefill_cache_reuses_repeated_prompts(setup):
+    """The prefill LRU kicks in on a prompt's second repeat: the third
+    identical submission admits without a model prefill call, and its
+    output is unchanged."""
+    model, params = setup
+    eng = ServeEngine(model, params, n_slots=2, max_len=64,
+                      prefill_cache=4)
+    calls = []
+    real = eng._prefill_fn
+    eng._prefill_fn = lambda p, t: (calls.append(1), real(p, t))[1]
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=[9, 9, 9], max_new_tokens=3))
+        eng.run_until_drained()
+    outs = [r.out for r in eng.completed]
+    assert outs[0] == outs[1] == outs[2]
+    assert len(calls) == 2                    # third admission hit the LRU
+
+
+def test_max_len_truncates_generation(setup):
+    model, params = setup
+    eng = ServeEngine(model, params, n_slots=1, max_len=16)
+    eng.submit(Request(rid=0, prompt=[1] * 10, max_new_tokens=50))
+    r, = eng.run_until_drained()
+    assert r.done
+    assert len(r.out) == 16 - 10              # max_len - len(prompt)
+
+
+def test_submit_rejects_oversized_prompt(setup):
+    model, params = setup
+    eng = ServeEngine(model, params, n_slots=1, max_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=[1] * 15, max_new_tokens=1))
 
 
 def test_same_prompt_same_output_determinism(setup):
