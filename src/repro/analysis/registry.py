@@ -1,0 +1,110 @@
+"""Strategy-registry drift checker.
+
+`core.recovery.STRATEGIES` is the single source of truth for the five
+recovery strategies; every strategy-keyed surface — the scenario
+schema's vocabulary, the Table-2 checkpoint policy, the real-runtime
+engine's mode map, the root/train CLIs, the alias table — must derive
+from (or exactly cover) it. PR 6 guarded this with a test; promoting it
+into reprolint means drift fails the `static-analysis` CI job in
+seconds, and the test becomes a thin wrapper over `check()`.
+
+Unlike the AST checkers this one imports the (jax-free) live modules:
+the derived surfaces are computed values, and comparing the computed
+values is the whole point. Findings anchor to the surface's assignment
+line found in the source tree when available.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.source import SourceTree
+
+CHECKER = "registry"
+
+_SURFACES = {
+    "STRATEGY_KEYS": "repro/scenarios/schema.py",
+    "TABLE2": "repro/checkpoint/policy.py",
+    "MODES": "repro/runtime/root.py",
+    "REAL_MODES": "repro/scenarios/engine.py",
+    "STRATEGIES": "repro/core/recovery.py",
+    "STRATEGY_ALIASES": "repro/core/recovery.py",
+}
+
+
+def _anchor(tree: SourceTree, surface: str) -> tuple:
+    rel = _SURFACES.get(surface, "repro/core/recovery.py")
+    mod = tree.get(rel)
+    if mod is not None:
+        for node in mod.tree.body:
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == surface
+                    for t in node.targets):
+                return rel, node.lineno
+        return rel, 1
+    return rel, 1
+
+
+def check(tree: SourceTree) -> List:
+    from repro.analysis import Finding
+    findings: List[Finding] = []
+
+    def drift(surface: str, message: str):
+        rel, line = _anchor(tree, surface)
+        findings.append(Finding(CHECKER, rel, line, "strategy-drift",
+                                surface, message))
+
+    try:
+        from repro.checkpoint.policy import TABLE2
+        from repro.core.recovery import (STRATEGIES, STRATEGY_ALIASES,
+                                         get_strategy)
+        from repro.launch.train import STRATEGIES as launch_strategies
+        from repro.runtime.root import MODES
+        from repro.scenarios import engine, schema
+    except Exception as e:        # pragma: no cover - import breakage
+        findings.append(Finding(CHECKER, "repro/core/recovery.py", 1,
+                                "import-error", "registry",
+                                f"could not import strategy surfaces: "
+                                f"{e!r}"))
+        return findings
+
+    keys = set(STRATEGIES)
+    if set(schema.STRATEGY_KEYS) != keys:
+        drift("STRATEGY_KEYS",
+              f"schema.STRATEGY_KEYS {sorted(schema.STRATEGY_KEYS)} != "
+              f"registry keys {sorted(keys)}")
+    want_t2 = {(f, s) for f in ("process", "node") for s in keys}
+    if set(TABLE2) != want_t2:
+        drift("TABLE2",
+              f"checkpoint.policy.TABLE2 cells do not cover "
+              f"(process|node) x registry keys: missing "
+              f"{sorted(want_t2 - set(TABLE2))}, extra "
+              f"{sorted(set(TABLE2) - want_t2)}")
+    if set(MODES) != keys - {"ulfm"}:
+        drift("MODES",
+              f"root MODES {sorted(MODES)} != registry keys minus the "
+              f"sim-only ulfm {sorted(keys - {'ulfm'})}")
+    if set(engine.REAL_MODES) != set(MODES):
+        drift("REAL_MODES",
+              f"engine.REAL_MODES {sorted(engine.REAL_MODES)} != root "
+              f"MODES {sorted(MODES)}")
+    if set(launch_strategies) != keys:
+        drift("STRATEGIES",
+              f"launch.train strategy choices "
+              f"{sorted(launch_strategies)} != registry keys "
+              f"{sorted(keys)}")
+    bad_aliases = set(STRATEGY_ALIASES.values()) - keys
+    if bad_aliases:
+        drift("STRATEGY_ALIASES",
+              f"aliases resolve outside the registry: "
+              f"{sorted(bad_aliases)}")
+    for k in sorted(keys):
+        try:
+            ok = get_strategy(k).key == k
+        except Exception:
+            ok = False
+        if not ok:
+            drift("STRATEGIES",
+                  f"get_strategy({k!r}) does not round-trip to its "
+                  f"registry key")
+    return findings

@@ -162,9 +162,9 @@ class FileCheckpointer:
         self._rebase_pool: Optional[ThreadPoolExecutor] = None
         self._pending: deque[Future] = deque()
         self._rebase_pending: deque[Future] = deque()
-        self._rebase_busy = False
+        self._rebase_busy = False           # guarded-by: _lock
         self._error: Optional[BaseException] = None
-        self._live_tmps: set[str] = set()
+        self._live_tmps: set[str] = set()   # guarded-by: _lock
         self._lock = threading.Lock()
         os.makedirs(directory, exist_ok=True)
 

@@ -127,22 +127,23 @@ class BuddyStore:
         self.spill_dir = spill_dir
         self.hot_steps = retain + 1 if hot_steps is None else max(1,
                                                                   hot_steps)
-        self.spilled_bytes = 0          # bytes the tier itself wrote
+        self.spilled_bytes = 0      # guarded-by: _lock (bytes spilled)
         self._lock = threading.Lock()
-        self.local: Dict[int, Any] = {}      # step -> bytes | _Spilled
-        self._local_disk: Dict[int, str] = {}   # step -> durable path
-        self.held: Dict[int, Dict[int, Any]] = {}  # origin -> step -> ...
+        self.local: Dict[int, Any] = {}       # guarded-by: _lock
+        self._local_disk: Dict[int, str] = {}   # guarded-by: _lock
+        self.held: Dict[int, Dict[int, Any]] = {}   # guarded-by: _lock
         # ring membership: None = the dense 0..world-1 ring; a shrinking
         # recovery re-forms it over the (possibly non-contiguous)
         # surviving rank ids
-        self._members: Optional[list] = None
+        self._members: Optional[list] = None    # guarded-by: _lock
 
     @property
     def buddy(self) -> int:
-        if self._members is None:
-            return (self.rank + 1) % self.world
-        i = self._members.index(self.rank)
-        return self._members[(i + 1) % len(self._members)]
+        with self._lock:
+            if self._members is None:
+                return (self.rank + 1) % self.world
+            i = self._members.index(self.rank)
+            return self._members[(i + 1) % len(self._members)]
 
     def reform_ring(self, members) -> None:
         """Re-form the buddy ring over `members` (sorted surviving rank
@@ -167,7 +168,7 @@ class BuddyStore:
         return os.path.join(self.spill_dir, f"{tag}.s{step}.bin")
 
     def _prune(self, d: Dict[int, Any], latest: int, tag: str,
-               disk_refs: Dict[int, str] | None = None) -> list:
+               disk_refs: Dict[int, str] | None = None) -> list:  # holds-lock: _lock
         """Window policy for one {step: payload} map (caller holds the
         lock). Keeps [latest - retain, latest]; when the window floor is
         a delta frame its chain is walked down to the full-frame anchor
@@ -253,14 +254,14 @@ class BuddyStore:
         layer already wrote (e.g. the rank's file checkpoint) — the
         spill tier then references it instead of writing a duplicate."""
         with self._lock:
-            self.local[step] = payload
+            d = self.local
+            d[step] = payload
             if on_disk is not None:
                 self._local_disk[step] = on_disk
-            work = self._prune(self.local, step, "local",
-                               self._local_disk)
-            for s in [s for s in self._local_disk if s not in self.local]:
+            work = self._prune(d, step, "local", self._local_disk)
+            for s in [s for s in self._local_disk if s not in d]:
                 del self._local_disk[s]
-        self._spill(self.local, work)
+        self._spill(d, work)
         if self.push_remote is not None:
             self.push_remote(self.buddy, step, payload)
 

@@ -36,9 +36,11 @@ class Daemon:
     def __init__(self, args):
         self.node = args.node
         self.args = args
-        self.workers: dict[int, subprocess.Popen] = {}
-        self.worker_socks: dict[int, object] = {}
-        self.last_table: dict | None = None   # newest RANK_TABLE seen
+        self.workers: dict[int, subprocess.Popen] = {}       # guarded-by: lock
+        self.worker_socks: dict[int, object] = {}            # guarded-by: lock
+        self.last_table: dict | None = None   # guarded-by: lock
+        # guards the three shared maps above: mutated by per-connection
+        # threads and the spawn fan-out, read by the run loop
         self.lock = threading.Lock()
         # serializes writes to worker sockets: the run loop broadcasts
         # while per-connection threads replay the cached table — two
@@ -355,11 +357,11 @@ class Daemon:
                 # re-expanded world and mesh epoch
                 mine = [r for d, r in msg["respawns"] if d == self.node]
                 with self.lock:
-                    survivors = [r for r in self.workers if r not in mine
-                                 and self.workers[r].poll() is None]
-                for r in survivors:
+                    pids = [p.pid for r, p in self.workers.items()
+                            if r not in mine and p.poll() is None]
+                for pid in pids:
                     try:
-                        os.kill(self.workers[r].pid, signal.SIGUSR1)
+                        os.kill(pid, signal.SIGUSR1)
                     except ProcessLookupError:
                         pass
                 for r in mine:
@@ -375,11 +377,11 @@ class Daemon:
                 # live child to roll back, then relay the shrunk world so
                 # their control loops pick up the new membership/epoch
                 with self.lock:
-                    live = [r for r in self.workers
-                            if self.workers[r].poll() is None]
-                for r in live:
+                    pids = [p.pid for p in self.workers.values()
+                            if p.poll() is None]
+                for pid in pids:
                     try:
-                        os.kill(self.workers[r].pid, signal.SIGUSR1)
+                        os.kill(pid, signal.SIGUSR1)
                     except ProcessLookupError:
                         pass
                 self._broadcast_workers(msg)

@@ -149,7 +149,10 @@ class Root:
         # registration carries the standby's listener port, which daemons
         # get on their spawn command line so they can re-home on HNP loss
         self.standby_proc: subprocess.Popen | None = None
-        self.standby_sock = None
+        # the replication channel is installed by the accept thread
+        # (STANDBY_REGISTER) while the serve loop reads it per event
+        self._standby_lock = threading.Lock()
+        self.standby_sock = None        # guarded-by: _standby_lock
         self._standby_port = 0
         self._standby_ready = threading.Event()
         self._standby_active = False
@@ -186,7 +189,8 @@ class Root:
                     # as the replication stream, never queue it as a
                     # cluster event
                     self._standby_port = msg["port"]
-                    self.standby_sock = conn
+                    with self._standby_lock:
+                        self.standby_sock = conn
                     self._standby_ready.set()
                     continue
                 if msg["type"] == "REGISTER_DAEMON":
@@ -321,10 +325,12 @@ class Root:
         Called once per processed event — the stream is tiny (rank/daemon
         tables + report), and a takeover needs nothing newer than the
         last completed event."""
-        if self.standby_sock is None:
+        with self._standby_lock:
+            standby = self.standby_sock
+        if standby is None:
             return
         try:
-            send_msg(self.standby_sock, {
+            send_msg(standby, {
                 "type": "SYNC", "epoch": self.epoch,
                 "world": sorted(self.world_ranks),
                 "table": {str(k): list(v) for k, v in
@@ -342,7 +348,8 @@ class Root:
                 "done": sorted(self.done),
                 "report": self.report})
         except OSError:
-            self.standby_sock = None      # standby died: run uncovered
+            with self._standby_lock:      # standby died: run uncovered
+                self.standby_sock = None
 
     # ----------------------------------------------------------- barrier
 
@@ -499,7 +506,7 @@ class Root:
                 continue
             arrived = set(self.barrier.get(key, {}))
             missing = self.world_ranks - arrived - self.done
-            for rank in missing - self._stall_killed:
+            for rank in sorted(missing - self._stall_killed):
                 self._order_kill(rank, "watchdog")
 
     def _handle_suspect(self, msg):
@@ -1159,9 +1166,11 @@ class Root:
             with open(tmp, "w") as f:
                 json.dump(self.report, f, indent=2)
             os.replace(tmp, self.args.report)
-        if self.standby_sock is not None:
+        with self._standby_lock:
+            standby = self.standby_sock
+        if standby is not None:
             try:
-                send_msg(self.standby_sock, {"type": "SHUTDOWN_STANDBY"})
+                send_msg(standby, {"type": "SHUTDOWN_STANDBY"})
             except OSError:
                 pass
         if self.standby_proc is not None:

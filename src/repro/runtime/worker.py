@@ -101,10 +101,11 @@ class WorkerInjector:
             # it (the fail-stop node then fences itself), and a hang
             # mutes the whole node — daemon and children — while every
             # channel stays open (only daemon-ring observation sees it)
-            msg = {"channel_break": "BREAK_CHANNEL",
-                   "hang": "HANG_NODE"}.get(f.how, "KILL_NODE")
+            msg = {"channel_break": {"type": "BREAK_CHANNEL"},
+                   "hang": {"type": "HANG_NODE"}}.get(
+                       f.how, {"type": "KILL_NODE"})
             try:
-                w._send_daemon({"type": msg})
+                w._send_daemon(msg)
             except OSError:
                 pass
             time.sleep(10)
@@ -150,8 +151,8 @@ class Worker:
         # Released pins (world fully re-expanded) are reaped once they
         # age past the retention window — never before the post-grow
         # restore that reads them.
-        self._pinned: set[int] = set()
-        self._released_pins: set[int] = set()
+        self._pinned: set[int] = set()           # guarded-by: barrier_cv
+        self._released_pins: set[int] = set()    # guarded-by: barrier_cv
         self.steps = args.steps
         self.dim = args.dim
         self.ckpt_dir = args.ckpt_dir
@@ -173,7 +174,7 @@ class Worker:
         self.is_shadow = getattr(args, "shadow", False)
         self.shadow_table: dict[int, tuple[str, int]] = {}
         self._shadow_addr_seen: Optional[tuple] = None
-        self._pending_sync: Optional[dict] = None
+        self._pending_sync: Optional[dict] = None   # guarded-by: barrier_cv
         self._promote_ev = threading.Event()
         self._promote_resume = 0
         self._promoted = False
@@ -206,7 +207,7 @@ class Worker:
                                                contiguous=True)
         self.rank_table: dict[int, tuple[str, int]] = {}
         self.table_event = threading.Event()
-        self.barrier_release: dict[tuple[int, int], float] = {}
+        self.barrier_release: dict[tuple[int, int], float] = {}  # guarded-by: barrier_cv
         self.barrier_cv = threading.Condition()
 
         # peer listener (buddy checkpoint fabric)
@@ -618,16 +619,23 @@ class Worker:
         os.replace(tmp, self._file_path(step))
         # retention: drop the aged-out step — unless it is a pinned grow
         # anchor (the consistent cut a shrunk world must keep durable so
-        # a grow-back can resume from it)
+        # a grow-back can resume from it). Pin state is shared with the
+        # control thread's GROW arm, so read and reap it under the cv;
+        # the unlinks happen outside (no IO under the lock).
         old_step = step - 3
         old = self._file_path(old_step)
-        if old_step not in self._pinned and os.path.exists(old):
+        with self.barrier_cv:
+            unpin = old_step not in self._pinned
+            # reap released anchors once they age out of the window
+            # (they were consumed by the grow's restore; leaving them
+            # would grow the dir and every later recovery's restore
+            # scan unboundedly)
+            reap = [p for p in sorted(self._released_pins)
+                    if p <= step - 3]
+            self._released_pins.difference_update(reap)
+        if unpin and os.path.exists(old):
             os.unlink(old)
-        # reap released anchors once they age out of the window (they
-        # were consumed by the grow's restore; leaving them would grow
-        # the dir and every later recovery's restore scan unboundedly)
-        for s in [p for p in self._released_pins if p <= step - 3]:
-            self._released_pins.discard(s)
+        for s in reap:
             stale = self._file_path(s)
             if os.path.exists(stale):
                 os.unlink(stale)
@@ -637,13 +645,15 @@ class Worker:
         the grow-back anchor: re-write it as a self-contained full frame
         (a delta frame's chain parents would age out of retention) and
         exempt it from the retention unlink until a GROW releases it."""
-        if step in self._pinned:
-            return
+        with self.barrier_cv:
+            if step in self._pinned:
+                return
         tmp = self._file_path(step) + ".tmp"
         with open(tmp, "wb") as f:
             f.write(serde.to_bytes({"x": x}, extra={"step": step}))
         os.replace(tmp, self._file_path(step))
-        self._pinned.add(step)
+        with self.barrier_cv:
+            self._pinned.add(step)
 
     def _file_map(self) -> dict[int, bytes]:
         out = {}

@@ -411,11 +411,11 @@ def elastic_transitions(scenario: Scenario) -> list:
                     target = min((len(rs), d)
                                  for d, rs in ranks_on.items())[1]
                     ranks_on[target] |= lost
-                    for r in lost:
+                    for r in sorted(lost):
                         hosts[r] = target
                     out.append(("respawn", obj, cut))
                 else:
-                    for r in lost:
+                    for r in sorted(lost):
                         del hosts[r]
                     drop_groups.append((dead, sorted(lost), cut))
                     out.append(("shrink", obj, cut))

@@ -1,0 +1,21 @@
+# reprolint fixture: wall-clock, unseeded RNG, and set iteration in a
+# replay path
+import random
+import time
+
+
+class Root:
+    def __init__(self, world):
+        self.world_ranks = set(range(world))
+
+    def stamp(self):
+        return time.time()                     # wall-clock
+
+    def pick(self):
+        return random.random()                 # process-global RNG
+
+    def release_order(self):
+        return [r for r in self.world_ranks]   # set iteration
+
+    def release_order_ok(self):
+        return sorted(self.world_ranks)

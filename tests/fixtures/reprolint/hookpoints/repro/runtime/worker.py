@@ -1,0 +1,13 @@
+# reprolint fixture: one typo'd fire point, one kwarg-drift pair
+from repro.scenarios import hooks
+
+
+def loop(step):
+    hooks.fire("step", step=step)
+    hooks.fire("worker.ckpt.midwrite", step=step)      # typo'd point
+    hooks.fire("worker.ckpt.mid_write", step=step)
+    hooks.fire("serve.decode.step", step=step)
+
+
+def other(step):
+    hooks.fire("worker.ckpt.mid_write")                # kwarg drift

@@ -1,0 +1,11 @@
+# reprolint fixture: a catalog cell targeting a point with no fire site
+from repro.scenarios.schema import Fault, Scenario, ServeScenario
+
+CATALOG = (
+    Scenario(name="ok-cell", faults=(Fault("rank", 1, 3),)),
+    Scenario(name="never-fires",
+             faults=(Fault("rank", 1, 3, point="ckpt.file.shard"),)),
+)
+SERVE_CATALOG = (
+    ServeScenario(name="serve-ok", fault_point="serve.decode.step"),
+)

@@ -1,0 +1,7 @@
+# reprolint fixture: hook-point registry with a point nothing fires
+POINTS = (
+    "step",
+    "worker.ckpt.mid_write",
+    "never.fired.point",
+)
+SERVE_POINTS = ("serve.decode.step",)

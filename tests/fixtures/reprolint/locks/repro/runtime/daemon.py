@@ -1,0 +1,18 @@
+# reprolint fixture: one guarded field touched outside its lock
+import threading
+
+
+class Daemon:
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.workers = {}            # guarded-by: lock
+
+    def spawn(self, rank, proc):
+        with self.lock:
+            self.workers[rank] = proc
+
+    def reap(self):
+        return list(self.workers)    # unguarded: the seeded violation
+
+    def _prune(self):                # holds-lock: lock
+        self.workers.clear()

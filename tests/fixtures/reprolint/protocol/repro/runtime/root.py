@@ -1,0 +1,8 @@
+# reprolint fixture: handles the healthy tag plus one nobody sends
+def dispatch(msg):
+    t = msg["type"]
+    if t == "BARRIER":
+        return "arrive"
+    if t in ("NEVER_SENT", "BARRIER"):
+        return "dead arm"
+    return None

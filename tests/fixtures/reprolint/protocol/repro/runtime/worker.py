@@ -1,0 +1,7 @@
+# reprolint fixture: sends one healthy tag, one orphan nobody handles
+from .transport import send_msg
+
+
+def run(sock, step):
+    send_msg(sock, {"type": "BARRIER", "step": step})
+    send_msg(sock, {"type": "ORPHAN_TAG", "step": step})

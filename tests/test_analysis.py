@@ -1,0 +1,195 @@
+"""reprolint: each checker catches its seeded fixture violation at the
+exact file:line, the live tree is clean under --strict, and the
+baseline machinery accepts/greys findings correctly."""
+import json
+import os
+import shutil
+
+import pytest
+
+import repro.analysis as analysis
+from repro.analysis import (Finding, determinism, hook_points, locks,
+                            protocol, registry)
+from repro.analysis.__main__ import find_repo_root, main
+from repro.analysis.source import SourceTree
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures",
+                        "reprolint")
+
+
+def fixture_tree(name):
+    return SourceTree(os.path.join(FIXTURES, name))
+
+
+def by_code(findings, code):
+    return [f for f in findings if f.code == code]
+
+
+# ------------------------------------------------------------- hook-point
+
+def test_hookpoint_fixture_findings():
+    fs = hook_points.check(fixture_tree("hookpoints"))
+    typo = by_code(fs, "unknown-point")
+    assert [(f.path, f.line, f.subject) for f in typo] == [
+        ("repro/runtime/worker.py", 7, "worker.ckpt.midwrite")]
+    drift = by_code(fs, "kwarg-drift")
+    assert [(f.path, f.line, f.subject) for f in drift] == [
+        ("repro/runtime/worker.py", 13, "worker.ckpt.mid_write")]
+    dead = by_code(fs, "dead-point")
+    assert [(f.path, f.line, f.subject) for f in dead] == [
+        ("repro/scenarios/schema.py", 5, "never.fired.point")]
+    unfired = by_code(fs, "unfired-point")
+    assert [(f.path, f.line, f.subject) for f in unfired] == [
+        ("repro/scenarios/catalog.py", 7, "ckpt.file.shard")]
+    assert len(fs) == 4
+
+
+def test_hookpoint_live_tree_clean():
+    """Every fire() site is registered, every registered point fires,
+    and every catalog cell's fault point has a live fire site — the
+    satellite audit of SCENARIO/SERVE_CATALOG is this assertion."""
+    assert hook_points.check(analysis.live_source_tree()) == []
+
+
+# --------------------------------------------------------------- protocol
+
+def test_protocol_fixture_findings():
+    fs = protocol.check(fixture_tree("protocol"))
+    orphan = by_code(fs, "orphan-tag")
+    assert [(f.path, f.line, f.subject) for f in orphan] == [
+        ("repro/runtime/worker.py", 7, "ORPHAN_TAG")]
+    dead = by_code(fs, "dead-handler")
+    assert [(f.path, f.line, f.subject) for f in dead] == [
+        ("repro/runtime/root.py", 6, "NEVER_SENT")]
+    assert len(fs) == 2
+
+
+def test_protocol_live_tree_only_reply_tags():
+    """The only undispatched tags in the live tree are the inline
+    request/response replies the baseline documents."""
+    fs = protocol.check(analysis.live_source_tree())
+    assert sorted(f.subject for f in fs) == ["ACK", "CKPT", "HB_ACK"]
+    assert all(f.code == "orphan-tag" for f in fs)
+
+
+# ------------------------------------------------------------------ locks
+
+def test_locks_fixture_findings():
+    fs = locks.check(fixture_tree("locks"))
+    assert [(f.path, f.line, f.subject, f.code) for f in fs] == [
+        ("repro/runtime/daemon.py", 15, "workers", "unguarded-access")]
+
+
+def test_locks_live_tree_clean():
+    assert locks.check(analysis.live_source_tree()) == []
+
+
+# ------------------------------------------------------------ determinism
+
+def test_determinism_fixture_findings():
+    fs = determinism.check(fixture_tree("determinism"))
+    got = {(f.path, f.line, f.code) for f in fs}
+    assert got == {
+        ("repro/runtime/root.py", 12, "wall-clock"),
+        ("repro/runtime/root.py", 15, "unseeded-random"),
+        ("repro/runtime/root.py", 18, "set-iteration"),
+    }
+
+
+def test_determinism_live_tree_clean():
+    assert determinism.check(analysis.live_source_tree()) == []
+
+
+# --------------------------------------------------------------- registry
+
+def test_registry_live_tree_clean():
+    assert registry.check(analysis.live_source_tree()) == []
+
+
+def test_registry_checker_catches_drift(monkeypatch):
+    from repro.scenarios import engine
+    monkeypatch.setattr(engine, "REAL_MODES",
+                        {k: v for k, v in engine.REAL_MODES.items()
+                         if k != "replica"})
+    fs = registry.check(analysis.live_source_tree())
+    assert any(f.subject == "REAL_MODES" and f.code == "strategy-drift"
+               and f.path == "repro/scenarios/engine.py" and f.line > 1
+               for f in fs)
+
+
+# ------------------------------------------------- baseline + CLI + keys
+
+def test_finding_key_is_line_independent():
+    a = Finding("protocol", "repro/runtime/worker.py", 10,
+                "orphan-tag", "ACK", "msg")
+    b = Finding("protocol", "repro/runtime/worker.py", 99,
+                "orphan-tag", "ACK", "other msg")
+    assert a.key == b.key
+
+
+def test_baseline_roundtrip_and_split(tmp_path):
+    fs = protocol.check(fixture_tree("protocol"))
+    path = str(tmp_path / "baseline.json")
+    analysis.save_baseline(path, fs, {fs[0].key: "accepted for test"})
+    baseline = analysis.load_baseline(path)
+    assert set(baseline) == {f.key for f in fs}
+    new, accepted, stale = analysis.split_by_baseline(fs, baseline)
+    assert new == [] and len(accepted) == len(fs) and stale == []
+    # a finding outside the baseline is "new"; a vanished one is stale
+    extra = Finding("protocol", "x.py", 1, "orphan-tag", "ZZZ", "m")
+    new, _, _ = analysis.split_by_baseline(fs + [extra], baseline)
+    assert new == [extra]
+    _, _, stale = analysis.split_by_baseline([], baseline)
+    assert stale == sorted(baseline)
+
+
+def test_cli_strict_fails_on_fixture_tree(tmp_path):
+    root = tmp_path / "repo"
+    shutil.copytree(os.path.join(FIXTURES, "protocol"),
+                    str(root / "src"))
+    rc = main(["--root", str(root), "--checker", "protocol",
+               "--strict"])
+    assert rc == 1
+    # baselining the two findings makes strict pass
+    fs = protocol.check(SourceTree(str(root / "src")))
+    analysis.save_baseline(str(root / "reprolint-baseline.json"), fs)
+    rc = main(["--root", str(root), "--checker", "protocol",
+               "--strict"])
+    assert rc == 0
+
+
+def test_cli_write_baseline_keeps_reasons(tmp_path):
+    root = tmp_path / "repo"
+    shutil.copytree(os.path.join(FIXTURES, "protocol"),
+                    str(root / "src"))
+    fs = protocol.check(SourceTree(str(root / "src")))
+    bpath = str(root / "reprolint-baseline.json")
+    analysis.save_baseline(bpath, fs[:1], {fs[0].key: "kept reason"})
+    rc = main(["--root", str(root), "--checker", "protocol",
+               "--write-baseline"])
+    assert rc == 0
+    with open(bpath) as f:
+        entries = {e["key"]: e["reason"]
+                   for e in json.load(f)["entries"]}
+    assert entries[fs[0].key] == "kept reason"
+    assert set(entries) == {f.key for f in fs}
+
+
+def test_parse_error_surfaces_as_finding(tmp_path):
+    src = tmp_path / "src" / "repro"
+    src.mkdir(parents=True)
+    (src / "broken.py").write_text("def oops(:\n")
+    fs = analysis.run(SourceTree(str(tmp_path / "src")),
+                      checkers=["protocol"])
+    assert [f.checker for f in fs] == ["parse"]
+    assert fs[0].code == "syntax-error"
+
+
+# -------------------------------------------------------------- self-run
+
+def test_live_tree_clean_under_strict():
+    """The tier-1 gate: the committed tree with the committed baseline
+    passes `python -m repro.analysis --strict` — every checker, zero
+    new findings."""
+    root = find_repo_root()
+    assert main(["--root", root, "--strict"]) == 0
