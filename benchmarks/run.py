@@ -29,6 +29,7 @@ def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
                      growback: dict | None = None,
                      failover: dict | None = None,
                      serving: dict | None = None,
+                     rehost: dict | None = None,
                      path: str = BENCH_JSON) -> bool:
     """Returns True only when the file was actually (re)written."""
     if not ckpt_io:
@@ -117,6 +118,20 @@ def write_bench_json(ckpt_io: dict | None, e2e: dict | None,
             prior = json.load(f).get("serving")
         if prior:
             doc["serving"] = prior
+    if rehost:
+        # gray-failure mitigation on the live runtime: sustained
+        # slowdown -> straggler drain -> repaired node grows back
+        doc["rehost"] = {"detect_s": rehost.get("detect_s"),
+                         "shrink_s": rehost.get("shrink_s"),
+                         "grow_s": rehost.get("grow_s"),
+                         "e2e_s": rehost.get("e2e_s"),
+                         "break_even_factor":
+                             rehost.get("break_even_factor")}
+    elif os.path.exists(path):
+        with open(path) as f:
+            prior = json.load(f).get("rehost")
+        if prior:
+            doc["rehost"] = prior
     with open(path, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
@@ -139,6 +154,7 @@ def check_regression(path: str = BENCH_JSON,
     # the growback/failover rows only gate when the committed baseline
     # has them (each real-process pass is ~15 s — skip otherwise)
     gate_growback = bool(committed.get("growback", {}).get("e2e_s"))
+    gate_rehost = bool(committed.get("rehost", {}).get("e2e_s"))
     gate_failover = bool(committed.get("failover", {}).get("replica_e2e_s"))
     gate_rebase = bool(committed.get("rebase", {}).get("rebased_read_s"))
     gate_serving = bool((committed.get("serving") or {})
@@ -165,6 +181,9 @@ def check_regression(path: str = BENCH_JSON,
         if gate_growback:
             gb = runtime_bench.bench_growback(report=lambda *_: None)
             out[("growback", "e2e_s")] = gb.get("growback_e2e_s")
+        if gate_rehost:
+            rh = runtime_bench.bench_rehost(report=lambda *_: None)
+            out[("rehost", "e2e_s")] = rh.get("e2e_s")
         if gate_failover:
             fo = runtime_bench.bench_failover(report=lambda *_: None,
                                               sizes=((2, 2),))
@@ -254,7 +273,7 @@ def main() -> None:
         failures += 1
         print("fig6/fig7_recovery_FAILED,0,error")
         traceback.print_exc()
-    growback = failover = None
+    growback = failover = rehost = None
     if not fast:
         from benchmarks import runtime_bench
         try:
@@ -262,6 +281,12 @@ def main() -> None:
         except Exception:                 # noqa: BLE001
             failures += 1
             print("bench_growback_FAILED,0,error")
+            traceback.print_exc()
+        try:
+            rehost = runtime_bench.bench_rehost(report=print)
+        except Exception:                 # noqa: BLE001
+            failures += 1
+            print("bench_rehost_FAILED,0,error")
             traceback.print_exc()
         try:
             failover = runtime_bench.bench_failover(report=print)
@@ -287,7 +312,8 @@ def main() -> None:
             print("bench_serving_wide_FAILED,0,error")
             traceback.print_exc()
     try:
-        if write_bench_json(ckpt_io, e2e, growback, failover, serving):
+        if write_bench_json(ckpt_io, e2e, growback, failover, serving,
+                            rehost):
             print(f"bench_json_written,0,{BENCH_JSON}")
         else:
             print("bench_json_skipped,0,checkpoint_bench_failed")

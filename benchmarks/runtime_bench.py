@@ -136,6 +136,49 @@ def bench_growback(report=print) -> dict:
     return out
 
 
+def bench_rehost(report=print) -> dict:
+    """Gray-failure mitigation end-to-end on the live process tree: the
+    `slow-node-drain-growback` cell measured from the sustained slowdown
+    to the repaired node's grow-back consensus. Reports the straggler
+    detection latency (first withheld barrier -> drain order), the
+    shrink and grow recovery times, the whole-lifecycle wall clock, and
+    the cost model's tolerate-vs-rehost verdict for the same shape —
+    time-to-rehost is the price the oracle weighs against the per-step
+    throughput lost to tolerating. The e2e number lands in
+    BENCH_checkpoint.json behind the --check-regression gate."""
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    from repro.scenarios.catalog import get_scenario
+    from repro.scenarios.engine import run_real
+    from repro.sim import APPS, rehost_break_even
+
+    sc = get_scenario("slow-node-drain-growback")
+    with tempfile.TemporaryDirectory() as tmp:
+        res = run_real(sc, "shrink", tmp, timeout=180)
+    events = res.detail["events"]
+    drain_ev = next(ev for ev in events
+                    if ev.get("detected_by") == "straggler")
+    grow_ev = next(ev for ev in events if ev.get("grow"))
+    detect_s = drain_ev.get("detect_latency_s", 0.0)
+    shrink_s = drain_ev.get("mpi_recovery_s", 0.0)
+    grow_s = grow_ev.get("mpi_recovery_s", 0.0)
+    e2e = detect_s + shrink_s \
+        + grow_ev.get("join_release_s", grow_s)
+    oracle = rehost_break_even(APPS["comd"], 64, slow_factor=6.0,
+                               repair_after=4)
+    out = {"detect_s": detect_s, "shrink_s": shrink_s, "grow_s": grow_s,
+           "e2e_s": e2e, "world_restored": grow_ev.get("world_after"),
+           "break_even_factor": oracle["break_even_factor"]}
+    report(f"rehost_detect,{detect_s * 1e6:.0f},latency_s={detect_s:.3f}")
+    report(f"rehost_shrink,{shrink_s * 1e6:.0f},recovery_s={shrink_s:.3f}")
+    report(f"rehost_grow,{grow_s * 1e6:.0f},recovery_s={grow_s:.3f}")
+    report(f"rehost_e2e,{e2e * 1e6:.0f},"
+           f"world_restored={out['world_restored']}")
+    report(f"rehost_break_even_factor,0,"
+           f"x={oracle['break_even_factor']:.3f}")
+    return out
+
+
 def bench_failover(report=print, *, sizes=((2, 2), (2, 4))) -> dict:
     """Zero-rollback replica failover vs Reinit++ global restart, on the
     live process tree, at growing rank counts. The same fenced rank kill

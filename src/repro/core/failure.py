@@ -165,9 +165,16 @@ class ScenarioInjector:
         grow that re-admits it, where the next check fires it)."""
         if not self.enabled:
             return None
+        # method-level import: schema -> core.recovery -> core/__init__
+        # -> failure would cycle at module import time
+        from repro.scenarios.schema import GRAY_HOWS
         for i, f in enumerate(self.scenario.faults):
             if i in self._fired or f.point != point \
                     or f.target == "root":
+                continue
+            if f.how in GRAY_HOWS:
+                # gray faults degrade, they never kill: the trainer/sim
+                # apply them through the straggler path, not as events
                 continue
             if f.step is not None and step is not None and f.step != step:
                 continue

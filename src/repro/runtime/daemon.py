@@ -408,6 +408,11 @@ class Daemon:
                         os.kill(p.pid, signal.SIGKILL)
                     except ProcessLookupError:
                         pass
+            elif t == "KILL_NODE":
+                # root-ordered node drain (gray-failure mitigation): a
+                # persistently degraded node is taken down whole — the
+                # channel EOF then drives the normal node-failure path
+                self._die_hard()
             elif t == "DAEMON_TABLE":
                 # ring membership for the daemon-level heartbeat; not
                 # relayed to workers (node-level concern only)

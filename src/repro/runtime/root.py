@@ -60,7 +60,8 @@ from repro.core.events import FailureEvent, FailureType
 from repro.core.protocol import ClusterView, root_handle_failure, \
     root_handle_failure_promote
 from repro.core.recovery import STRATEGIES
-from repro.scenarios.schema import ROOT_INJECTED_EXIT, Scenario
+from repro.scenarios.schema import GRAY_DRAIN_PERSIST, GRAY_HOWS, \
+    ROOT_INJECTED_EXIT, Scenario, gray_delay_s
 
 from .transport import connect, listener, recv_msg, send_msg
 
@@ -158,12 +159,25 @@ class Root:
         self._standby_active = False
         # root-target scenario faults: {step: fault_index}
         self._root_faults: dict[int, int] = {}
+        # gray-failure mitigation, armed by the scenario's mitigate knob:
+        # a per-rank tracker over barrier lateness (arrival minus the
+        # step's first arrival). A rank on a GRAY_DRAIN_PERSIST flag
+        # streak is drained at the next completed barrier — see
+        # _maybe_drain_stragglers. min_flag_s at half the smallest
+        # injected delay keeps scheduler jitter below the trigger.
+        self._straggler = None
         if getattr(args, "scenario", ""):
             sc = Scenario.load(args.scenario)
             self._root_faults = {f.step: i for i, f in sc.root_faults()}
             for r in sc.repairs:
                 node = self._initial_parent[r.rank]
                 self._repairs.setdefault(r.step, []).append(node)
+            gray = [f for f in sc.faults if f.how in GRAY_HOWS]
+            if sc.mitigate and gray:
+                from repro.train.straggler import StragglerTracker
+                self._straggler = StragglerTracker(
+                    window=32, threshold_mads=4.0, min_samples=2,
+                    min_flag_s=0.5 * min(gray_delay_s(f) for f in gray))
         threading.Thread(target=self._accept_loop, daemon=True).start()
 
     # ------------------------------------------------------------ fabric
@@ -358,15 +372,26 @@ class Root:
         if msg["epoch"] != self.epoch:
             return                          # stale pre-recovery arrival
         d = self.barrier.setdefault(key, {})
-        self._barrier_seen.setdefault(key, time.monotonic())
+        t_first = self._barrier_seen.setdefault(key, time.monotonic())
+        if self._straggler is not None and msg["rank"] not in d:
+            # per-rank lateness relative to the step's first arrival:
+            # the signal a slow or lossy rank cannot hide — it does all
+            # the work, just late, and every other rank is already here
+            self._straggler.observe(key[1], time.monotonic() - t_first,
+                                    rank=msg["rank"])
         d[msg["rank"]] = msg["value"]
         if len(d) == len(self.world_ranks):
-            # a completed barrier is a checkpoint boundary. A due node
-            # repair restarts the repaired node's daemon here and HOLDS
-            # this release until its REJOIN is admitted: the world is
-            # paused at the boundary, so the grow (or spare grant) lands
-            # deterministically between steps, never racing the run to
-            # completion
+            # a completed barrier is a checkpoint boundary: every rank
+            # has committed this step's checkpoint, which makes it the
+            # one safe place to drain a persistent straggler — the
+            # consistent cut is exactly this step
+            if self._maybe_drain_stragglers(key):
+                return
+            # A due node repair restarts the repaired node's daemon here
+            # and HOLDS this release until its REJOIN is admitted: the
+            # world is paused at the boundary, so the grow (or spare
+            # grant) lands deterministically between steps, never racing
+            # the run to completion
             if self._check_repairs(key[1]):
                 self._held_release = (key, d)
                 del self.barrier[key]
@@ -447,6 +472,62 @@ class Root:
                     ev["resume_step"] = resume
                     ev["join_release_s"] = \
                         time.monotonic() - ev["t_recover_start"]
+
+    def _maybe_drain_stragglers(self, key) -> bool:
+        """Gray-failure mitigation: called with a COMPLETED barrier,
+        before its release. A rank on a GRAY_DRAIN_PERSIST consecutive
+        flag streak is persistently degraded — withhold the release and
+        order it killed (its whole node, when the flagged set covers the
+        node's live ranks). Every rank committed step `key[1]`'s
+        checkpoint before arriving, so the ensuing SIGCHLD/EOF-driven
+        shrink resumes from exactly this boundary; the drained rank's
+        eventual grow-back incarnation spawns healthy (--restarted
+        drops the gray plan) and is re-admitted on merit. Returns True
+        when a drain was ordered (the caller then skips the release)."""
+        if (self._straggler is None or self.recovering
+                or self.shutting_down):
+            return False
+        flagged = self._straggler.stragglers(
+            persist=GRAY_DRAIN_PERSIST) & self.world_ranks
+        if not flagged:
+            return False
+        now = time.monotonic()
+        t0 = self._barrier_seen.get(key)
+        lat = None if t0 is None else now - t0
+        # node drain when a whole node's live ranks are on a streak —
+        # the degradation is the node's, not any one process's
+        for node in sorted(self.view.children):
+            live = set(self.view.children[node]) & self.world_ranks
+            if not live or not live <= flagged:
+                continue
+            sock = self.daemon_socks.get(node)
+            if sock is None:
+                continue
+            try:
+                send_msg(sock, {"type": "KILL_NODE"})
+            except OSError:
+                continue
+            self._detect_mark_node = ("straggler", lat, node)
+            del self.barrier[key]
+            self._barrier_seen.pop(key, None)
+            return True
+        rank = min(flagged)
+        try:
+            daemon = self.view.parent(rank)
+        except KeyError:
+            return False
+        sock = self.daemon_socks.get(daemon)
+        if sock is None:
+            return False
+        try:
+            send_msg(sock, {"type": "KILL_RANK", "rank": rank})
+        except OSError:
+            return False
+        self._stall_killed.add(rank)
+        self._detect_mark = ("straggler", lat, rank)
+        del self.barrier[key]
+        self._barrier_seen.pop(key, None)
+        return True
 
     # ------------------------------------------------- injection/watchdog
 
@@ -728,6 +809,10 @@ class Root:
         self.joins.clear()
         self._held_release = None
         self._join_open = True     # every recovery re-runs the consensus
+        if self._straggler is not None:
+            # streaks describe pre-recovery incarnations; the drained
+            # rank's healthy replacement starts with a clean slate
+            self._straggler.reset_streaks()
 
     def _recover_reinit(self, ev, failure: FailureEvent):
         t0 = time.monotonic()

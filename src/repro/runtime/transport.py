@@ -8,21 +8,54 @@ and sendall() works straight from a memoryview of the source buffer.
 Receivers find the payload under msg["_payload"].
 
 The base64 helpers are kept for small blobs embedded in control fields.
+
+Lossy-link injection (`install_lossy`): the `lossy` gray-failure
+mechanism degrades this layer in-process — every send_msg pays a fixed
+delay, and a seeded fraction pays it twice (a modeled drop+retransmit;
+the message itself is never lost, so the protocol stays exact while the
+*timing* degrades). Seeded `random.Random` keeps runs reproducible.
 """
 from __future__ import annotations
 
 import base64
 import json
+import random
 import socket
 import struct
+import time
 from typing import Any, Optional
 
 _HDR = struct.Struct("!II")
 MAX_MSG = 512 * 1024 * 1024
 
+# process-global lossy-link model, armed by install_lossy() in a worker
+# whose scenario carries an active how="lossy" fault.
+# [rng, delay, drop, sock-or-None]
+_LOSSY: Optional[list] = None
+
+
+def install_lossy(seed: int, delay_s: float, drop_frac: float = 0.2,
+                  sock: Optional[socket.socket] = None):
+    """Degrade subsequent send_msg calls in this process: +delay_s, and
+    a seeded drop_frac of sends pay it doubled (drop + retransmit).
+    With `sock` given only that channel degrades (one bad link, e.g.
+    the victim's uplink to its daemon) — other fabrics stay healthy so
+    the lateness is attributable to the victim alone."""
+    global _LOSSY
+    _LOSSY = [random.Random(seed), delay_s, drop_frac, sock]
+
+
+def clear_lossy():
+    global _LOSSY
+    _LOSSY = None
+
 
 def send_msg(sock: socket.socket, msg: dict,
              payload: bytes | bytearray | memoryview | None = None):
+    if _LOSSY is not None:
+        rng, delay_s, drop_frac, only = _LOSSY
+        if only is None or sock is only:
+            time.sleep(delay_s * (2.0 if rng.random() < drop_frac else 1.0))
     data = json.dumps(msg, separators=(",", ":")).encode()
     plen = 0 if payload is None else len(payload)
     sock.sendall(_HDR.pack(len(data), plen) + data)

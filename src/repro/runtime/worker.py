@@ -38,9 +38,9 @@ from repro.core.reinit import ROLLBACK, RollbackSignal, install_sigreinit, \
 from repro.checkpoint import serde
 from repro.checkpoint.memory_ckpt import BuddyStore
 from repro.scenarios import hooks
-from repro.scenarios.schema import Fault, Scenario
+from repro.scenarios.schema import Fault, Scenario, gray_delay_s
 
-from .transport import connect, listener, recv_msg, send_msg
+from .transport import connect, install_lossy, listener, recv_msg, send_msg
 
 
 class WorkerInjector:
@@ -181,6 +181,15 @@ class Worker:
         self._shadow_plan = (
             Scenario.load(args.scenario).shadow_faults(self.rank)
             if (args.scenario and self.is_shadow) else [])
+
+        # gray-failure plan: this rank's slow/lossy degradations. Only
+        # the original incarnation degrades — a drained-and-respawned
+        # rank (--restarted) comes back healthy, which is what lets the
+        # mitigation path actually cure a persistent straggler.
+        self._gray_plan = (
+            Scenario.load(args.scenario).gray_faults_for_rank(self.rank)
+            if (args.scenario and not args.restarted) else [])
+        self._lossy_armed = False
 
         # retention window spills to local disk past the hot step — the
         # paper's memory/file dichotomy as an LRU tier, exercised by the
@@ -711,6 +720,26 @@ class Worker:
             self._pin_anchor(resume, x)
         return self._loop(start, x)
 
+    def _gray_degrade(self, step: int):
+        """Apply this rank's active gray faults for the step. `slow`
+        sleeps the deceleration delay before compute — the rank still
+        does all the work, just late, so state stays bit-identical.
+        `lossy` arms the seeded transport degradation once, at the
+        fault's onset step, scoped to the daemon uplink (one bad link):
+        every control-plane send then pays a delay, a seeded fraction
+        doubled. Both surface at the root as barrier lateness
+        attributable to exactly this rank."""
+        for idx, f in self._gray_plan:
+            if step < f.step:
+                continue
+            if f.how == "slow":
+                time.sleep(gray_delay_s(f))
+            elif f.how == "lossy" and not self._lossy_armed:
+                install_lossy(seed=1000 + 64 * idx + self.rank,
+                              delay_s=gray_delay_s(f),
+                              sock=self.daemon_sock)
+                self._lossy_armed = True
+
     def _loop(self, start: int, x: np.ndarray) -> None:
         """The BSP step loop proper. Reached via `body` (normal join /
         rollback path) or directly by a promoted shadow, which skips the
@@ -728,6 +757,7 @@ class Worker:
             # step — so the post-recovery consistent cut is always
             # exactly `step`, independent of scheduling around SIGKILL.
             hooks.fire("step", step=step)
+            self._gray_degrade(step)
             # BSP compute + collective
             x = w @ x + 1e-3
             total = self._allreduce(step, float(x.sum()))

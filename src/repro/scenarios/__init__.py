@@ -10,14 +10,17 @@ docs/scenarios.md for the schema and catalog.
 consumers that need them.
 """
 from . import hooks
-from .schema import (CASCADE_POINTS, Fault, HOWS, POINTS, Repair, Scenario,
+from .schema import (CASCADE_POINTS, Fault, GRAY_DRAIN_PERSIST, GRAY_HOWS,
+                     GRAY_STEP_S, HOWS, POINTS, Repair, Scenario,
                      SERVE_POINTS, STRATEGY_KEYS, ServeScenario, TARGETS,
                      Topology, elastic_transitions, expected_resume_step,
-                     expected_resume_steps, normalize_strategy)
+                     expected_resume_steps, gray_delay_s, gray_drain_cut,
+                     normalize_strategy)
 
 __all__ = [
-    "CASCADE_POINTS", "Fault", "HOWS", "POINTS", "Repair", "Scenario",
+    "CASCADE_POINTS", "Fault", "GRAY_DRAIN_PERSIST", "GRAY_HOWS",
+    "GRAY_STEP_S", "HOWS", "POINTS", "Repair", "Scenario",
     "SERVE_POINTS", "STRATEGY_KEYS", "ServeScenario", "TARGETS", "Topology",
     "elastic_transitions", "expected_resume_step", "expected_resume_steps",
-    "normalize_strategy", "hooks",
+    "gray_delay_s", "gray_drain_cut", "normalize_strategy", "hooks",
 ]

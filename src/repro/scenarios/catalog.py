@@ -283,6 +283,95 @@ CATALOG: tuple[Scenario, ...] = (
         topology=T32,
         faults=(Fault("rank", 1, 2), Fault("rank", 4, 4)),
         strategies=("replica", "reinit"), tags=("slow3",)),
+    # --------------------------------------- gray (degraded) failures
+    Scenario(
+        name="slow-rank-tolerate",
+        description="Gray baseline: rank 1 decelerates x6 from step 3 "
+                    "(injected per-step delay) but nothing dies. With "
+                    "mitigate=False the policy is to tolerate: no "
+                    "recovery fires, the whole BSP job just runs at the "
+                    "straggler's pace and finishes bit-identical to "
+                    "fault-free.",
+        topology=T22,
+        faults=(Fault("rank", 1, 3, how="slow", factor=6.0),),
+        strategies=("reinit", "shrink", "cr", "ulfm"),
+        tags=("fast", "gray")),
+    Scenario(
+        name="slow-rank-drain",
+        description="Mitigated straggler: the root's per-rank lateness "
+                    "tracker flags rank 1's sustained x6 slowdown and "
+                    "drains it once the lateness persists — an ordinary "
+                    "process-level shrink at the withheld barrier's cut "
+                    "(pool empty), survivors re-balance and resume "
+                    "bit-identically from the drain cut.",
+        topology=T22S0, steps=7,
+        faults=(Fault("rank", 1, 3, how="slow", factor=6.0),),
+        mitigate=True, strategies=("shrink",),
+        expect_bit_identical=False,      # a shrunk world sums fewer ranks
+        tags=("fast", "gray")),
+    Scenario(
+        name="slow-node-drain-growback",
+        description="Sick-host lifecycle: every rank on node1 runs x6 "
+                    "slow from step 3 (degradation is per-host); the "
+                    "root drains the whole node through SHRINK, and the "
+                    "repaired (healthy again) node REJOINs at step 6 — "
+                    "the grow-back re-admits it and the re-expanded run "
+                    "finishes bit-identical to fault-free.",
+        topology=T22S0, steps=8,
+        faults=(Fault("node", 2, 3, how="slow", factor=6.0),),
+        repairs=(Repair(2, 6),),
+        mitigate=True, strategies=("shrink",),
+        tags=("fast", "gray")),
+    Scenario(
+        name="lossy-rank-tolerate",
+        description="Degraded link, tolerated: rank 1's control-channel "
+                    "sends pay a seeded delay/retransmit tax from step 3 "
+                    "(the transport layer's lossy injection). Barriers "
+                    "arrive late but complete; no recovery fires and the "
+                    "run finishes bit-identical.",
+        topology=T22,
+        faults=(Fault("rank", 1, 3, how="lossy", factor=6.0),),
+        strategies=("reinit", "shrink", "cr", "ulfm"),
+        tags=("fast", "gray")),
+    Scenario(
+        name="lossy-rank-drain",
+        description="Degraded link, drained: the same lossy injection "
+                    "with mitigation on — transport lateness is "
+                    "indistinguishable from compute lateness at the "
+                    "barrier, so the same tracker flags it and the same "
+                    "shrink path drains the rank at the withheld cut.",
+        topology=T22S0, steps=7,
+        faults=(Fault("rank", 1, 3, how="lossy", factor=6.0),),
+        mitigate=True, strategies=("shrink",),
+        expect_bit_identical=False,      # a shrunk world sums fewer ranks
+        tags=("fast", "gray")),
+    # ------------------------------------------------- flapping nodes
+    Scenario(
+        name="flap-node-twice",
+        description="A flapping node: node1 dies at step 2, its repair "
+                    "rejoins (GROW) at step 4, the same node dies AGAIN "
+                    "at step 5 and rejoins at step 7 — two full "
+                    "shrink->grow round-trips in one run, each landing "
+                    "on its own pinned cut, finishing bit-identical "
+                    "with the full world.",
+        topology=T22S0, steps=9,
+        faults=(Fault("node", 2, 2), Fault("node", 2, 5)),
+        repairs=(Repair(2, 4), Repair(2, 7)),
+        strategies=("shrink",), tags=("fast", "flap")),
+    Scenario(
+        name="flap-refail-in-rejoin",
+        description="Fail during the open rejoin consensus: node1 dies "
+                    "and is dropped; its repair rejoins, and one of the "
+                    "re-admitted ranks dies again right after pulling "
+                    "its frames — while the grow's JOIN window is still "
+                    "open. The root must merge the death into the "
+                    "in-flight grow recovery (respawn within the same "
+                    "consensus), never deadlock the held barrier.",
+        topology=T22S0, steps=7,
+        faults=(Fault("node", 2, 2),
+                Fault("rank", 3, None, point="worker.recovery.pulled")),
+        repairs=(Repair(2, 4),),
+        strategies=("shrink",), tags=("fast", "flap")),
     # -------------------------------------------------------- root loss
     Scenario(
         name="root-restart",

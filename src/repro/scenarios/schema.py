@@ -35,7 +35,40 @@ from typing import Optional
 # shadow process dies, the rank silently loses its zero-rollback cover,
 # and the next failure of that rank falls back to global-restart.
 TARGETS = ("rank", "node", "root", "shadow")
-HOWS = ("sigkill", "channel_break", "hang")
+# "slow" and "lossy" are the *gray* failure mechanisms: the victim keeps
+# running (nothing dies, nothing signals) but degrades — a slow rank's
+# compute stretches by Fault.factor, a lossy rank's control-channel
+# sends pay seeded delay/retransmit. Detection is statistical (per-rank
+# barrier-arrival lateness through StragglerTracker), and the response
+# is a *policy*: Scenario.mitigate=False tolerates the degradation to
+# the end of the run; mitigate=True drains the victim through the
+# ordinary loss path (SHRINK when the pool is empty, grow-back on
+# repair) once the lateness persists GRAY_DRAIN_PERSIST barriers.
+HOWS = ("sigkill", "channel_break", "hang", "slow", "lossy")
+GRAY_HOWS = ("slow", "lossy")
+
+#: nominal healthy per-step quantum the gray degradation scales against:
+#: a factor-k victim is delayed (k-1) * GRAY_STEP_S per step — large
+#: against scheduling noise (~ms), small against the run (~s).
+GRAY_STEP_S = 0.1
+#: consecutive late barriers before a mitigating root drains the victim
+#: (one flagged barrier is noise; two in a row is a trend)
+GRAY_DRAIN_PERSIST = 2
+
+
+def gray_delay_s(f: "Fault") -> float:
+    """Injected per-step delay of a factor-k gray fault."""
+    return (f.factor - 1.0) * GRAY_STEP_S
+
+
+def gray_drain_cut(f: "Fault") -> int:
+    """The consistent cut a mitigating drain resumes from. Lateness is
+    first observable at barrier f.step (the first degraded iteration),
+    the drain fires once it persists, i.e. at the completion of barrier
+    f.step + GRAY_DRAIN_PERSIST - 1 — whose release the root withholds,
+    making that barrier's step the deterministic consensus cut (every
+    rank arrived, so every rank committed that step's checkpoint)."""
+    return f.step + GRAY_DRAIN_PERSIST - 1
 
 # Named interruption points. "step" is the only fenced point (the victim
 # declares intent and dies only once every survivor has committed the
@@ -109,12 +142,20 @@ class Fault:
     ignored. `step` is the trigger iteration for point="step", the *save*
     step for the worker.ckpt.* points, and None (wildcard) for the
     recovery points, which fire at most once during the recovery that
-    follows the previous fault."""
+    follows the previous fault.
+
+    `factor` is only meaningful for the gray hows (`slow`, `lossy`): the
+    degradation multiple (x-k deceleration / per-send delay scale); the
+    victim's per-step penalty is (factor - 1) * GRAY_STEP_S. Gray faults
+    are active from iteration `step` for the rest of the incarnation —
+    a drained-and-respawned victim comes back healthy (degradation
+    models a sick host, and a re-host moves off it)."""
     target: str = "rank"
     rank: int = 0
     step: Optional[int] = None
     point: str = "step"
     how: str = "sigkill"
+    factor: float = 0.0
 
     def validate(self, topo: Topology, position: int):
         if self.target not in TARGETS:
@@ -123,6 +164,23 @@ class Fault:
             raise ValueError(f"fault how {self.how!r} not in {HOWS}")
         if self.point not in POINTS:
             raise ValueError(f"fault point {self.point!r} not in {POINTS}")
+        if self.how in GRAY_HOWS:
+            if self.target not in ("rank", "node"):
+                raise ValueError(f"{self.how} faults degrade a rank/node "
+                                 "(nothing else runs the BSP loop)")
+            if self.point != "step":
+                raise ValueError(f"{self.how} faults use point='step' "
+                                 "(degradation starts at an iteration, "
+                                 "not inside a checkpoint phase)")
+            if not self.factor > 1.0:
+                raise ValueError(f"{self.how} faults need factor > 1.0 "
+                                 "(the degradation multiple)")
+            if self.step is None or self.step < 2:
+                raise ValueError(f"{self.how} faults need step >= 2: the "
+                                 "lateness detector needs at least two "
+                                 "healthy barriers as its baseline")
+        elif self.factor != 0.0:
+            raise ValueError(f"factor only applies to {GRAY_HOWS} faults")
         if self.target == "root":
             if self.how != "sigkill" or self.point != "step":
                 raise ValueError("root faults support only sigkill @step")
@@ -185,6 +243,14 @@ class Scenario:
     min_data_parallel: int = 1
     strategies: tuple[str, ...] = ("reinit", "cr", "ulfm")
     expect_bit_identical: bool = True   # recovered == fault-free state
+    # gray-failure policy knob (threaded root -> trainer -> sim): False
+    # tolerates a degraded member to the end of the run (no recovery, no
+    # oracle entry — the run must still finish bit-identical); True
+    # drains a persistently-late victim through the ordinary loss path
+    # (SHRINK when the pool is empty; a Repair grows it back) with the
+    # drain's consistent cut in the oracle. Only meaningful with gray
+    # faults, and only the elastic strategy can execute a drain.
+    mitigate: bool = False
     stall_timeout_s: float = 0.0        # >0 arms the root stall watchdog
     # >0 arms the neighbour-heartbeat ring on the real runtime: each rank
     # observes its ring successor every period and reports SUSPECT to the
@@ -244,15 +310,48 @@ class Scenario:
                 and "replica" not in self.strategies:
             raise ValueError("shadow faults only exist under the replica "
                              "strategy (no other strategy runs shadows)")
+        gray = [f for f in self.faults if f.how in GRAY_HOWS]
+        if self.mitigate:
+            if not gray:
+                raise ValueError("mitigate=True without a gray fault: "
+                                 "there is nothing to drain")
+            if set(self.strategies) != {"shrink"}:
+                raise ValueError("mitigate=True needs strategies="
+                                 "('shrink',): only the elastic strategy "
+                                 "can drain and re-host a live member")
+            for f in gray:
+                if gray_drain_cut(f) >= self.steps - 1:
+                    raise ValueError(
+                        f"gray fault at step {f.step}: the drain cut "
+                        f"{gray_drain_cut(f)} leaves no post-drain step "
+                        f"in a {self.steps}-step run")
 
     # --------------------------------------------------------- queries
 
     def faults_for_rank(self, rank: int) -> list[tuple[int, Fault]]:
         """(index, fault) pairs whose injection is driven by `rank` —
         rank faults on the rank itself, node faults by the victim rank
-        on that node (the paper has the victim signal its daemon)."""
+        on that node (the paper has the victim signal its daemon). Gray
+        faults are excluded: they are degradations, not kills, and are
+        applied via `gray_faults_for_rank` instead."""
         return [(i, f) for i, f in enumerate(self.faults)
-                if f.target in ("rank", "node") and f.rank == rank]
+                if f.target in ("rank", "node") and f.rank == rank
+                and f.how not in GRAY_HOWS]
+
+    def gray_faults_for_rank(self, rank: int) -> list[tuple[int, Fault]]:
+        """(index, fault) pairs degrading `rank`: rank-target gray faults
+        on the rank itself, node-target gray faults on every rank the
+        victim's node hosts (a sick host slows all its children)."""
+        rpn = self.topology.ranks_per_node
+        out = []
+        for i, f in enumerate(self.faults):
+            if f.how not in GRAY_HOWS:
+                continue
+            if f.target == "rank" and f.rank == rank:
+                out.append((i, f))
+            elif f.target == "node" and f.rank // rpn == rank // rpn:
+                out.append((i, f))
+        return out
 
     def root_faults(self) -> list[tuple[int, Fault]]:
         return [(i, f) for i, f in enumerate(self.faults)
@@ -282,6 +381,7 @@ class Scenario:
             "min_data_parallel": self.min_data_parallel,
             "strategies": list(self.strategies),
             "expect_bit_identical": self.expect_bit_identical,
+            "mitigate": self.mitigate,
             "stall_timeout_s": self.stall_timeout_s,
             "heartbeat_period_s": self.heartbeat_period_s,
             "heartbeat_timeout_s": self.heartbeat_timeout_s,
@@ -301,6 +401,7 @@ class Scenario:
             min_data_parallel=d.get("min_data_parallel", 1),
             strategies=tuple(d.get("strategies", ("reinit", "cr", "ulfm"))),
             expect_bit_identical=d.get("expect_bit_identical", True),
+            mitigate=d.get("mitigate", False),
             stall_timeout_s=d.get("stall_timeout_s", 0.0),
             heartbeat_period_s=d.get("heartbeat_period_s", 0.0),
             heartbeat_timeout_s=d.get("heartbeat_timeout_s", 0.0),
@@ -377,17 +478,24 @@ def elastic_transitions(scenario: Scenario) -> list:
     def world_size():
         return sum(len(rs) for rs in ranks_on.values())
 
+    # a mitigated gray fault becomes an ordinary loss at its drain (the
+    # root kills the victim once lateness persists), so its timeline
+    # position and cut are the drain's, not the onset step; an
+    # unmitigated one never enters the membership timeline at all
     timeline = sorted(
-        [((f.step if f.step is not None else -1), 0, i, "fault", f)
+        [((gray_drain_cut(f) if f.how in GRAY_HOWS
+           else f.step if f.step is not None else -1), 0, i, "fault", f)
          for i, f in enumerate(scenario.faults)
-         if f.point not in CASCADE_POINTS and f.target != "shadow"]
+         if f.point not in CASCADE_POINTS and f.target != "shadow"
+         and (f.how not in GRAY_HOWS or scenario.mitigate)]
         + [(r.step, 1, i, "repair", r)
            for i, r in enumerate(scenario.repairs)],
         key=lambda e: e[:3])
     out = []
     for _, _, _, what, obj in timeline:
         if what == "fault":
-            cut = _fault_resume(obj)
+            cut = gray_drain_cut(obj) if obj.how in GRAY_HOWS \
+                else _fault_resume(obj)
             if obj.target == "root":
                 # external job restart redeploys the full topology (the
                 # executors rebuild view + machine): membership resets
@@ -479,7 +587,15 @@ def expected_resume_steps(scenario: Scenario,
     cut of the shrink it reverses (the rejoining ranks' newest durable
     checkpoint — which the survivors kept pinned as the grow anchor).
     Non-elastic strategies ignore repairs, so their oracle is unchanged.
+
+    Gray faults (`slow`/`lossy`) add an entry only when the scenario
+    mitigates under the elastic strategy: the drain is an ordinary loss
+    at `gray_drain_cut` (the barrier whose release the root withheld).
+    Tolerated gray faults trigger no recovery at all — their oracle is
+    empty and the executors must report zero consensus entries.
     """
+    include_gray = scenario.mitigate and (
+        strategy is None or normalize_strategy(strategy) == "shrink")
     if strategy is not None and normalize_strategy(strategy) == "shrink" \
             and scenario.repairs:
         return [cut for kind, _, cut in elastic_transitions(scenario)
@@ -489,8 +605,10 @@ def expected_resume_steps(scenario: Scenario,
     # value the fence oracle already yields — so the default table below
     # is shared by every strategy (a replica fallback on a ckpt-phase
     # fault degrades to Reinit++, whose cut it also shares).
-    return [_fault_resume(f) for f in scenario.faults
-            if f.point not in CASCADE_POINTS and f.target != "shadow"]
+    return [(gray_drain_cut(f) if f.how in GRAY_HOWS else _fault_resume(f))
+            for f in scenario.faults
+            if f.point not in CASCADE_POINTS and f.target != "shadow"
+            and (f.how not in GRAY_HOWS or include_gray)]
 
 
 def expected_resume_step(scenario: Scenario) -> Optional[int]:

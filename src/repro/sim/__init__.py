@@ -1,4 +1,5 @@
 from .costs import ClusterCosts, AppProfile, APPS
 from .cluster import (simulate_run, SimResult, recovery_time, recovery_e2e,
-                      replica_break_even, simulate_scenario,
+                      rehost_break_even, replica_break_even,
+                      simulate_scenario,
                       ScenarioSimResult)

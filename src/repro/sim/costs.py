@@ -147,6 +147,15 @@ class ClusterCosts:
             + self.standby_sync_s \
             + self.tree_barrier_s(n_ranks, ranks_per_node)
 
+    def degraded_step_s(self, step_time_s: float,
+                        slow_factor: float) -> float:
+        """Whole-job step time with one gray (degraded) member: the BSP
+        barrier couples the world to its slowest rank, so a single node
+        running at 1/slow_factor throughput slows *every* step to the
+        victim's pace. This is what makes tolerating a gray failure a
+        per-step tax on the whole job rather than a local problem."""
+        return step_time_s * max(slow_factor, 1.0)
+
     def ulfm_recovery_collectives_s(self, n_ranks: int) -> float:
         per_round = self.ulfm_round_alpha_s * math.log2(max(n_ranks, 2)) \
             + self.ulfm_round_beta_s * n_ranks

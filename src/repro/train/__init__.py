@@ -1,4 +1,35 @@
-from .optimizer import AdamWConfig, adamw_init, adamw_update, lr_at
-from .data import TokenPipeline
-from .trainer import Trainer, TrainConfig
-from .straggler import StragglerTracker
+"""Training driver package.
+
+Lazy exports (PEP 562): `trainer`/`data`/`optimizer` pull jax at import
+time, but light consumers — the process runtime's root imports only the
+stdlib-only `straggler` module for gray-failure detection — must not pay
+that. Submodules load on first attribute access; `from repro.train
+import Trainer` and `from repro.train.straggler import ...` both keep
+working, the latter without touching jax at all.
+"""
+import importlib
+
+_EXPORTS = {
+    "AdamWConfig": ".optimizer",
+    "adamw_init": ".optimizer",
+    "adamw_update": ".optimizer",
+    "lr_at": ".optimizer",
+    "TokenPipeline": ".data",
+    "Trainer": ".trainer",
+    "TrainConfig": ".trainer",
+    "StragglerTracker": ".straggler",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(target, __name__), name)
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -37,6 +37,8 @@ from repro.core import (ClusterView, ElasticManager, FailureEvent,
                         apply_recovery, get_strategy, reinit_main,
                         root_handle_failure)
 from repro.models.model import Model
+from repro.scenarios.schema import GRAY_DRAIN_PERSIST, GRAY_HOWS, \
+    gray_delay_s
 from repro.sharding.partition import constraint_scope, state_shardings
 from repro.sharding.rules import ShardingRules, PRESETS
 
@@ -68,6 +70,10 @@ class TrainConfig:
     # elastic world floor, in whole node groups: shrinking recovery
     # refuses to contract below min_data_parallel * ranks_per_node ranks
     min_data_parallel: int = 1
+    # gray-failure policy: off tolerates a degraded rank (the run slows,
+    # nothing else changes); on drains a persistent straggler through
+    # the shrink path and re-admits it at the repair's grow-back
+    mitigate: bool = False
     seed: int = 0
     log_every: int = 0
 
@@ -122,6 +128,22 @@ class Trainer:
         self.logs: list[StepLog] = []
         self.reports: list[RecoveryReport] = []
         self.straggler = StragglerTracker()
+        # gray-failure plan from the injector's scenario (if any): the
+        # (index, fault) pairs whose victims get synthesized per-rank
+        # delays, and the set already cured by a drain. A gray plan
+        # re-tunes the tracker: few samples suffice, and the absolute
+        # floor at half the smallest injected delay keeps jitter out.
+        self._gray: list = []
+        self._gray_mitigated: set[int] = set()
+        sc = getattr(injector, "scenario", None)
+        if sc is not None:
+            self._gray = [(i, f) for i, f in enumerate(sc.faults)
+                          if f.how in GRAY_HOWS]
+        if self._gray:
+            self.straggler = StragglerTracker(
+                window=32, threshold_mads=4.0, min_samples=2,
+                min_flag_s=0.5 * min(gray_delay_s(f)
+                                     for _, f in self._gray))
         self._build_step()
 
     # ----------------------------------------------------------- stepping
@@ -386,6 +408,63 @@ class Trainer:
         self._fire_cascades()
         return rep
 
+    def _observe_gray(self, step: int, dt: float):
+        """Per-rank gray-failure observation for the in-process driver.
+        The SPMD emulation has one wall clock, so what the tracker sees
+        is barrier LATENESS relative to the fastest member — healthy
+        ranks observe 0.0, victims observe the injected deceleration
+        delay. That is the same signal the real root reads off arrival
+        spread, with the same tracker and thresholds, and it is immune
+        to globally slow steps (the restore + recompile after a
+        recovery inflates dt for everyone equally, which must never
+        read as a straggler). With mitigate=on (and the
+        elastic strategy, the only one that can re-host), a rank on a
+        GRAY_DRAIN_PERSIST streak is drained: returns the FailureEvent
+        that re-hosts it through the ordinary shrink path, and marks
+        the fault cured — the drained rank's next incarnation (the
+        grow-back) is healthy. Tolerate mode only records the flags."""
+        if not self._gray:
+            return None
+        live = set(self.view.ranks())
+        rpn = self.tc.ranks_per_node
+        delays: dict[int, float] = {}
+        for i, f in self._gray:
+            # `step` is the post-increment count; the fault starts
+            # degrading the iteration whose top is f.step
+            if i in self._gray_mitigated or step <= f.step:
+                continue
+            if f.target == "node":
+                node = f.rank // rpn
+                victims = range(node * rpn, (node + 1) * rpn)
+            else:
+                victims = (f.rank,)
+            for r in victims:
+                delays[r] = delays.get(r, 0.0) + gray_delay_s(f)
+        for r in sorted(live):
+            self.straggler.observe(step, delays.get(r, 0.0), rank=r)
+        if not (self.tc.mitigate and self.elastic is not None):
+            return None
+        flagged = self.straggler.stragglers(GRAY_DRAIN_PERSIST) & live
+        if not flagged:
+            return None
+        self.straggler.reset_streaks()
+        for i, f in self._gray:
+            if i in self._gray_mitigated:
+                continue
+            if f.target == "node":
+                node = f.rank // rpn
+                group = set(range(node * rpn, (node + 1) * rpn)) & live
+                if group and group <= flagged:
+                    self._gray_mitigated.add(i)
+                    return FailureEvent(kind=FailureType.NODE,
+                                        node=f"node{node}", rank=f.rank,
+                                        at_step=step)
+            elif f.rank in flagged:
+                self._gray_mitigated.add(i)
+                return FailureEvent(kind=FailureType.PROCESS,
+                                    rank=f.rank, at_step=step)
+        return None
+
     def _handle_repair(self, repair) -> Optional[RecoveryReport]:
         """Grow-back in the in-process SPMD driver: a repaired node
         rejoins at a checkpoint boundary. The admission policy (the
@@ -463,6 +542,13 @@ class Trainer:
             dt = time.monotonic() - t0
             step = int(self.state["step"])
             self.straggler.observe(step, dt)
+            drain = self._observe_gray(step, dt)
+            if drain is not None:
+                # drain BEFORE this step's checkpoint commits: the last
+                # durable cut is the completed boundary — the same place
+                # the real root withholds the barrier release
+                self._handle_failure(drain)
+                raise RollbackSignal(self.view.epoch)
             if self.strategy.replicates:
                 # replication stream: mirror every step's state to the
                 # rank's off-node shadow (Table 2 replica rows) — this,
@@ -487,4 +573,5 @@ class Trainer:
             "losses": [l.loss for l in self.logs],
             "reports": self.reports,
             "stragglers": self.straggler.flagged,
+            "stragglers_by_rank": dict(self.straggler.flagged_by_rank),
         }

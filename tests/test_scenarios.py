@@ -22,6 +22,7 @@ topology wherever the strategy guarantees it, and the observed rollback
 consensus is checked against the schema's declarative consistent-cut
 oracle (expected_resume_step).
 """
+import dataclasses
 import os
 import signal
 import subprocess
@@ -32,11 +33,12 @@ import pytest
 
 from repro.core.events import FailureType
 from repro.core.failure import FaultInjector, ScenarioInjector
-from repro.scenarios import (Fault, Scenario, Topology,
+from repro.scenarios import (Fault, GRAY_HOWS, Scenario, Topology,
                              expected_resume_step, expected_resume_steps,
                              hooks)
 from repro.scenarios import engine
-from repro.scenarios.catalog import BY_NAME, CATALOG, T22, T32, fault_free
+from repro.scenarios.catalog import (BY_NAME, CATALOG, T22, T22S0, T32,
+                                     fault_free)
 from repro.sim.cluster import simulate_scenario
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -64,6 +66,25 @@ def test_schema_roundtrip_all_catalog():
          stall_timeout_s=5.0),
     dict(faults=(Fault("node", 1, 3,                     # ckpt fault on node
                        point="worker.ckpt.mid_write"),)),
+    dict(faults=(Fault("rank", 1, 3, factor=2.0),)),     # factor on fail-stop
+    dict(faults=(Fault("rank", 1, 3, how="slow"),)),     # gray needs factor>1
+    dict(faults=(Fault("rank", 1, 3, how="slow",         # factor not a
+                       factor=1.0),)),                   # degradation
+    dict(faults=(Fault("rank", 1, 1, how="slow",         # no healthy baseline
+                       factor=6.0),)),
+    dict(faults=(Fault("root", step=3, how="slow",       # root runs no BSP
+                       factor=6.0),)),
+    dict(faults=(Fault("rank", 1, 3, how="lossy",        # gray is @step only
+                       factor=6.0,
+                       point="worker.ckpt.mid_write"),)),
+    dict(faults=(Fault("rank", 1, 3),),                  # mitigate w/o gray
+         mitigate=True, strategies=("shrink",)),
+    dict(faults=(Fault("rank", 1, 3, how="slow",         # mitigate needs
+                       factor=6.0),),                    # the elastic mode
+         mitigate=True, strategies=("reinit",)),
+    dict(faults=(Fault("rank", 1, 4, how="slow",         # drain cut leaves
+                       factor=6.0),),                    # no post-drain step
+         mitigate=True, strategies=("shrink",)),
 ])
 def test_schema_rejects(bad):
     with pytest.raises(ValueError):
@@ -133,7 +154,7 @@ def test_catalog_breadth():
     hows = {f.how for s in CATALOG for f in s.faults}
     points = {f.point for s in CATALOG for f in s.faults}
     assert targets == {"rank", "node", "root", "shadow"}
-    assert hows == {"sigkill", "channel_break", "hang"}
+    assert hows == {"sigkill", "channel_break", "hang", "slow", "lossy"}
     assert {"step", "worker.ckpt.mid_write", "worker.ckpt.pre_push",
             "worker.recovery.pulled", "worker.recovery.enter",
             "worker.recovery.compose"} <= points
@@ -172,6 +193,25 @@ def test_catalog_breadth():
                for s in replica)
     assert any(s.is_cascading for s in replica)
     assert any(any(f.target == "root" for f in s.faults) for s in replica)
+    # gray-failure coverage: both degradation mechanisms, each with a
+    # tolerate (mitigate=off) and a drain (mitigate=on) cell, a
+    # node-level drain that grows back, and flapping-node cells — one
+    # with a re-fail inside the open rejoin-consensus window
+    gray = [s for s in CATALOG
+            if any(f.how in GRAY_HOWS for f in s.faults)]
+    assert {f.how for s in gray for f in s.faults} == set(GRAY_HOWS)
+    for how in GRAY_HOWS:
+        assert any(not s.mitigate for s in gray
+                   if any(f.how == how for f in s.faults))
+        assert any(s.mitigate for s in gray
+                   if any(f.how == how for f in s.faults))
+    assert any(s.mitigate and s.repairs
+               and any(f.target == "node" for f in s.faults) for s in gray)
+    flap = [s for s in CATALOG if "flap" in s.tags]
+    assert any(len(s.faults) == len(s.repairs) == 2 for s in flap)
+    assert any(s.is_cascading and any(
+        f.point == "worker.recovery.pulled" for f in s.faults)
+        for s in flap)
     # every scenario is executable on the real runtime or sim-only by
     # explicit choice (ulfm) — none is silently dead
     for s in CATALOG:
@@ -245,6 +285,11 @@ def test_sim_matrix(name, strategy):
     assert sorted(r["cascade"] for r in fault_rows) == \
         sorted(f.point.startswith("worker.recovery.") for f in sc.faults)
     for r in rows:
+        if r.get("tolerated"):
+            # tolerated gray fault: nothing detects, nothing recovers —
+            # the whole cost is the degraded throughput to the end
+            assert r["mpi_recovery_s"] == 0 and r["degraded_s"] > 0
+            continue
         assert r["detect_s"] > 0 and r["mpi_recovery_s"] > 0
 
 
@@ -409,6 +454,88 @@ def test_sim_heartbeat_ring_beats_watchdog_on_hangs():
     assert ring.rows[0]["detect_s"] < watchdog.rows[0]["detect_s"]
 
 
+# ------------------------------------------------ gray failures, policy
+
+GRAY_CELLS = [s.name for s in CATALOG
+              if any(f.how in GRAY_HOWS for f in s.faults)]
+
+
+def _policy_variants(sc):
+    """Both policy arms of one gray catalog cell, as (tolerate, drain).
+    The cell carries one arm; the other is derived by flipping
+    `mitigate` — same fault, same oracle (`expected_resume_steps`)."""
+    if sc.mitigate:
+        off = dataclasses.replace(
+            sc, name=sc.name + "-off", mitigate=False, repairs=(),
+            expect_bit_identical=True)
+        return off, sc
+    on = dataclasses.replace(
+        sc, name=sc.name + "-on", mitigate=True, topology=T22S0,
+        steps=max(sc.steps, 7), strategies=("shrink",),
+        expect_bit_identical=False)
+    return sc, on
+
+
+@pytest.mark.parametrize("name", GRAY_CELLS)
+def test_sim_gray_policy_matrix(name):
+    """Every gray cell through BOTH policies on the sim substrate,
+    against the shared oracle: mitigation off tolerates (no recovery
+    row, no consensus entry, the whole cost is degraded throughput);
+    mitigation on drains through an ordinary shrink at the withheld
+    barrier's cut."""
+    off, on = _policy_variants(BY_NAME[name])
+    for strategy in off.strategies:
+        out = engine.run_sim(off, strategy)
+        assert out.expected_resume == [] and out.resume_steps == []
+        tol = [r for r in out.detail["rows"] if r.get("gray")]
+        assert tol and all(r["tolerated"] for r in tol)
+        assert not any(r["shrink"] or r.get("grow") for r in tol)
+    out = engine.run_sim(on, "shrink")
+    exp = expected_resume_steps(on, "shrink")
+    assert exp and out.resume_steps == exp
+    drained = [r for r in out.detail["rows"] if r.get("gray")]
+    assert drained
+    for r in drained:
+        assert r["shrink"] and not r["tolerated"]
+        assert r["detect_s"] > 0 and r["mpi_recovery_s"] > 0
+    # the policies' cost structure: draining pays only the detection
+    # window at degraded pace, tolerating pays it to the end of the run
+    tol = [r for r in engine.run_sim(off, "shrink").detail["rows"]
+           if r.get("gray")]
+    assert all(d["degraded_s"] < t["degraded_s"]
+               for d, t in zip(drained, tol))
+
+
+def test_sim_rehost_break_even_oracle():
+    """The tolerate-vs-rehost oracle: BSP couples the job to its slowest
+    member, so tolerating taxes every remaining step — re-hosting wins
+    for severe degradation, loses for mild degradation or runs that are
+    nearly over, and the break-even factor moves accordingly."""
+    from repro.sim import APPS, ClusterCosts, rehost_break_even
+    costs = ClusterCosts()
+    assert costs.degraded_step_s(1.0, 6.0) == 6.0
+    assert costs.degraded_step_s(1.0, 0.5) == 1.0   # never below healthy
+    app = APPS["comd"]
+    severe = rehost_break_even(app, 64, slow_factor=6.0, fail_step=5)
+    assert severe["rehost_wins"]
+    assert severe["rehost_extra_s"] < severe["tolerate_extra_s"]
+    mild = rehost_break_even(app, 64, slow_factor=1.01, fail_step=5)
+    assert not mild["rehost_wins"]
+    # the crossover itself: fixed drain costs don't depend on the factor
+    assert mild["break_even_factor"] == severe["break_even_factor"] > 1.0
+    assert mild["break_even_factor"] > 1.01
+    assert severe["break_even_factor"] < 6.0
+    # failing near the end leaves little slowdown to win back
+    late = rehost_break_even(app, 64, slow_factor=6.0,
+                             fail_step=app.n_steps - 4)
+    assert late["break_even_factor"] > severe["break_even_factor"]
+    # a repairable host adds grow-back costs but caps the shrunk tax
+    rep = rehost_break_even(app, 64, slow_factor=6.0, fail_step=5,
+                            repair_after=4)
+    assert rep["rehost_wins"]
+    assert rep["break_even_factor"] > severe["break_even_factor"]
+
+
 # ------------------------------------------------------ crash atomicity
 
 _CRASH_SCRIPT = textwrap.dedent("""
@@ -526,7 +653,14 @@ def ff_cache():
 
 
 def _assert_outcome(sc, out, ff):
-    assert out.n_recoveries >= 1, f"{sc.name}: no recovery happened"
+    tolerated = not sc.mitigate and \
+        all(f.how in GRAY_HOWS for f in sc.faults)
+    if tolerated:
+        # tolerate policy: the degradation must NOT trigger recovery
+        assert out.n_recoveries == 0, \
+            f"{sc.name}: tolerated gray fault triggered a recovery"
+    else:
+        assert out.n_recoveries >= 1, f"{sc.name}: no recovery happened"
     assert out.resume_consistent, \
         f"{sc.name}: resume {out.resume_steps} != {out.expected_resume}"
     if sc.expect_bit_identical:
@@ -728,6 +862,102 @@ def test_real_replica_root_loss_standby_takeover(tmp_path,
     assert out.detail["relaunches"] == 0
     assert len(out.checksums) == sc.topology.world
     assert out.resume_consistent
+    assert out.checksums == ff
+
+
+@pytest.mark.scenario_fast
+@pytest.mark.parametrize("name", GRAY_CELLS)
+def test_real_gray_policy_flip(name, tmp_path, tmp_path_factory,
+                               ff_cache):
+    """The OTHER policy arm of each gray catalog cell on the live
+    process tree (the catalog's own arm runs in the fast matrix below):
+    a tolerate arm must finish with ZERO recoveries bit-identical to
+    fault-free; a drain arm must be flagged by the root's straggler
+    tracker and resume from the drain cut the oracle names."""
+    base = BY_NAME[name]
+    off, on = _policy_variants(base)
+    flipped = off if base.mitigate else on
+    out = engine.run_real(flipped, "shrink", str(tmp_path), timeout=240)
+    if flipped is off:
+        assert out.n_recoveries == 0 and out.resume_steps == []
+        ff = _ff_checksums(ff_cache, tmp_path_factory, flipped)
+        assert out.checksums == ff
+    else:
+        exp = expected_resume_steps(flipped, "shrink")
+        assert exp and out.resume_steps == exp
+        ev = out.detail["events"][0]
+        assert ev["detected_by"] == "straggler"
+        assert ev.get("detect_latency_s", 0) > 0
+        assert ev.get("shrink") and ev.get("dropped")
+    assert out.resume_consistent
+
+
+@pytest.mark.scenario_fast
+def test_real_slow_node_drain_grows_back(tmp_path, tmp_path_factory,
+                                         ff_cache):
+    """The sick-host lifecycle in mechanism detail on the live tree:
+    every rank on the degraded node turns persistently late, the
+    straggler tracker attributes the lateness to exactly that node's
+    ranks, the drain is an ordinary node shrink at the withheld cut,
+    and the repaired node's rejoin re-expands the world — finishing
+    bit-identical to fault-free."""
+    sc = BY_NAME["slow-node-drain-growback"]
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc)
+    out = engine.run_real(sc, "shrink", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    assert [bool(ev.get("shrink")) for ev in events] == [True, False]
+    assert [bool(ev.get("grow")) for ev in events] == [False, True]
+    drained, grown = events
+    assert drained["kind"] == "node"
+    assert drained["detected_by"] == "straggler"
+    assert sorted(drained["dropped"]) == [2, 3]    # the sick node only
+    assert grown["added"] == [2, 3]
+    assert grown["world_after"] == 4
+    assert out.resume_steps == [4, 4]
+    assert out.resume_consistent
+    assert out.checksums == ff                     # full world, bit-equal
+
+
+@pytest.mark.scenario_fast
+def test_real_flap_node_twice(tmp_path, tmp_path_factory, ff_cache):
+    """A flapping node on the live tree: two full shrink -> grow-back
+    round-trips in one run, each landing on its own pinned cut, the
+    world restored to full size, bit-identical finish."""
+    sc = BY_NAME["flap-node-twice"]
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc)
+    out = engine.run_real(sc, "shrink", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    assert [bool(ev.get("shrink")) for ev in events] == \
+        [True, False, True, False]
+    assert [bool(ev.get("grow")) for ev in events] == \
+        [False, True, False, True]
+    assert events[-1]["world_after"] == 4
+    assert out.resume_steps == [2, 2, 5, 5]
+    assert out.resume_consistent
+    assert out.checksums == ff
+
+
+@pytest.mark.scenario_fast
+def test_real_flap_refail_in_rejoin_regression(tmp_path, tmp_path_factory,
+                                               ff_cache):
+    """Dedicated regression for the rejoin-consensus window: node1 dies
+    and is dropped; its repair rejoins, and a re-admitted rank dies
+    again right after pulling its frames — while the grow's JOIN window
+    is still open. The death must merge into the in-flight grow
+    recovery (a respawn within the SAME consensus — no third entry),
+    the held barrier must release, and the full world finishes
+    bit-identical to fault-free."""
+    sc = BY_NAME["flap-refail-in-rejoin"]
+    ff = _ff_checksums(ff_cache, tmp_path_factory, sc)
+    out = engine.run_real(sc, "shrink", str(tmp_path), timeout=240)
+    events = out.detail["events"]
+    shrinks = [ev for ev in events if ev.get("shrink")]
+    grows = [ev for ev in events if ev.get("grow")]
+    assert len(shrinks) == 1 and len(grows) == 1
+    assert grows[0]["world_after"] == 4
+    assert out.resume_steps == [2, 2]              # no third consensus
+    assert out.resume_consistent
+    assert len(out.checksums) == 4
     assert out.checksums == ff
 
 

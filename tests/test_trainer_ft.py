@@ -359,3 +359,65 @@ def test_straggler_tracker_flags_outlier():
     assert t.flagged and t.flagged[0][0] == 10
     # a small wobble is not flagged
     assert not t.observe(11, 0.12)
+
+
+def _gray_scenario(mitigate, faults, steps=STEPS):
+    from repro.scenarios import Scenario, Topology
+    return Scenario(
+        name="trainer-gray", steps=steps,
+        topology=Topology(nodes=2, ranks_per_node=4, spares=0),
+        faults=faults, mitigate=mitigate,
+        strategies=("shrink",), expect_bit_identical=not mitigate)
+
+
+def test_gray_tolerate_matches_fault_free(tmp_path, reference):
+    """mitigate=off: a x6 slow rank degrades throughput but nothing
+    dies — zero recovery reports, per-rank attribution blames only the
+    victim, and the run finishes bit-identical to fault-free."""
+    from repro.core import ScenarioInjector
+    from repro.scenarios import Fault
+    ref_digest, _ = reference
+    inj = ScenarioInjector(_gray_scenario(
+        False, (Fault("rank", 1, 4, how="slow", factor=6.0),)))
+    model = Model(CFG)
+    data = TokenPipeline(CFG.vocab_size, 4, 32, seed=7)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=STEPS)
+    tc = TrainConfig(total_steps=STEPS, ckpt_dir=str(tmp_path),
+                     strategy="shrink", n_nodes=2, ranks_per_node=4,
+                     spare_nodes=0)
+    tr = Trainer(model, data, opt, tc, injector=inj)
+    res = tr.run()
+    assert res["final_step"] == STEPS
+    assert res["reports"] == []
+    assert set(res["stragglers_by_rank"]) == {1}
+    assert tr.n_ranks == 8
+    assert tree_digest(jax.device_get(tr.state["params"])) == ref_digest
+
+
+def test_gray_drain_rehosts_bit_identically(tmp_path, reference):
+    """mitigate=on: the tracker's per-rank streak flags the sustained
+    slowdown, the drain path contracts the world through an ordinary
+    shrink at the drain cut (before the degraded step's checkpoint
+    commits), and the shrunk run still lands on the bit-identical final
+    state (global batch unchanged)."""
+    from repro.core import ScenarioInjector
+    from repro.scenarios import Fault
+    from repro.scenarios.schema import gray_drain_cut
+    ref_digest, _ = reference
+    f = Fault("rank", 1, 4, how="slow", factor=6.0)
+    inj = ScenarioInjector(_gray_scenario(True, (f,)))
+    model = Model(CFG)
+    data = TokenPipeline(CFG.vocab_size, 4, 32, seed=7)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=STEPS)
+    tc = TrainConfig(total_steps=STEPS, ckpt_dir=str(tmp_path),
+                     strategy="shrink", n_nodes=2, ranks_per_node=4,
+                     spare_nodes=0, mitigate=True)
+    tr = Trainer(model, data, opt, tc, injector=inj)
+    res = tr.run()
+    assert res["final_step"] == STEPS
+    rep = res["reports"][0]
+    assert rep.rollback_step == gray_drain_cut(f)
+    assert rep.world_after == 7 and tr.n_ranks == 7
+    assert tr.elastic.dropped == [1]
+    assert set(res["stragglers_by_rank"]) == {1}
+    assert tree_digest(jax.device_get(tr.state["params"])) == ref_digest
